@@ -1,0 +1,98 @@
+"""Emit EXPERIMENTS.md markdown tables from dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.emit_tables artifacts/dryrun_final \
+      [artifacts/dryrun_optall]
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load(art_dir):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def fmt(v):
+    return f"{v:.2e}"
+
+
+def roofline_table(rows, mesh="single"):
+    print(f"\n| arch | shape | status | bottleneck | C (s) | M (s) | X (s) "
+          f"| MFU % | useful | temp GiB/chip |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for d in rows:
+        if d["mesh"] != mesh:
+            continue
+        if d["status"] == "SKIP":
+            print(f"| {d['arch']} | {d['shape']} | SKIP | — | | | | | | |")
+            continue
+        if d["status"] != "OK":
+            print(f"| {d['arch']} | {d['shape']} | FAIL | | | | | | | |")
+            continue
+        r = d["roofline"]
+        temp = d["memory"].get("temp_size_in_bytes", 0) / 2 ** 30
+        print(f"| {d['arch']} | {d['shape']} | OK | {r['bottleneck']} "
+              f"| {fmt(r['compute_s'])} | {fmt(r['memory_s'])} "
+              f"| {fmt(r['collective_s'])} "
+              f"| {100 * r['roofline_fraction_mfu']:.1f} "
+              f"| {r['useful_flops_ratio']:.2f} | {temp:.1f} |")
+
+
+def multi_pod_table(rows):
+    print("\n| arch | shape | multi-pod compile | X multi (s) | "
+          "X single (s) |")
+    print("|---|---|---|---|---|")
+    single = {(d["arch"], d["shape"]): d for d in rows
+              if d["mesh"] == "single"}
+    for d in rows:
+        if d["mesh"] != "multi":
+            continue
+        key = (d["arch"], d["shape"])
+        if d["status"] == "SKIP":
+            print(f"| {d['arch']} | {d['shape']} | SKIP | | |")
+            continue
+        s = single.get(key)
+        xs = fmt(s["roofline"]["collective_s"]) if s and s["status"] == "OK" \
+            else "—"
+        print(f"| {d['arch']} | {d['shape']} | {d['status']} "
+              f"| {fmt(d['roofline']['collective_s'])} | {xs} |")
+
+
+def opt_table(base_rows, opt_rows):
+    base = {(d["arch"], d["shape"]): d for d in base_rows
+            if d["mesh"] == "single" and d["status"] == "OK"}
+    print("\n| arch | shape | variant | C (s) | M (s) | X (s) | MFU % "
+          "| vs baseline MFU % |")
+    print("|---|---|---|---|---|---|---|---|")
+    for d in opt_rows:
+        if d["status"] != "OK":
+            print(f"| {d['arch']} | {d['shape']} | {d.get('variant','opt')} "
+                  f"| FAIL: {d.get('error','')[:40]} | | | | |")
+            continue
+        r = d["roofline"]
+        b = base.get((d["arch"], d["shape"]))
+        bm = (f"{100 * b['roofline']['roofline_fraction_mfu']:.1f}"
+              if b else "—")
+        print(f"| {d['arch']} | {d['shape']} | {d.get('variant','opt')} "
+              f"| {fmt(r['compute_s'])} | {fmt(r['memory_s'])} "
+              f"| {fmt(r['collective_s'])} "
+              f"| {100 * r['roofline_fraction_mfu']:.1f} | {bm} |")
+
+
+if __name__ == "__main__":
+    base_dir = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun_final"
+    rows = load(base_dir)
+    print("## Baseline roofline — single pod (256 chips)")
+    roofline_table(rows, "single")
+    print("\n## Multi-pod pass (512 chips)")
+    multi_pod_table(rows)
+    if len(sys.argv) > 2:
+        print("\n## Optimized variants")
+        opt_table(rows, load(sys.argv[2]))

@@ -1,0 +1,63 @@
+"""Benchmark entry point: one section per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # fig5 + table4 (+ roofline if artifacts exist)
+  PYTHONPATH=src python -m benchmarks.run --section fig5
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def roofline_section(art_dir: str = "artifacts/dryrun_final"):
+    if not glob.glob(os.path.join(art_dir, "*.json")):
+        art_dir = "artifacts/dryrun"
+    files = sorted(glob.glob(os.path.join(art_dir, "*.json")))
+    if not files:
+        print(f"\n== Roofline: no dry-run artifacts in {art_dir} "
+              f"(run python -m repro.launch.dryrun --all) ==")
+        return []
+    print("\n== Roofline (from multi-pod dry-run artifacts; "
+          "TPU v5e terms) ==")
+    print(f"{'arch':22s} {'shape':12s} {'mesh':6s} {'status':6s} "
+          f"{'bottleneck':11s} {'C(s)':>9s} {'M(s)':>9s} {'X(s)':>9s} "
+          f"{'MFU%':>6s} {'useful':>7s}")
+    rows = []
+    for f in files:
+        d = json.load(open(f))
+        rows.append(d)
+        if d["status"] != "OK":
+            print(f"{d['arch']:22s} {d['shape']:12s} {d['mesh']:6s} "
+                  f"{d['status']:6s} {d.get('reason', d.get('error', ''))[:48]}")
+            continue
+        r = d["roofline"]
+        print(f"{d['arch']:22s} {d['shape']:12s} {d['mesh']:6s} "
+              f"{'OK':6s} {r['bottleneck']:11s} "
+              f"{r['compute_s']:9.2e} {r['memory_s']:9.2e} "
+              f"{r['collective_s']:9.2e} "
+              f"{100 * r['roofline_fraction_mfu']:6.1f} "
+              f"{r['useful_flops_ratio']:7.2f}")
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all",
+                    choices=["all", "fig5", "table4", "roofline"])
+    args = ap.parse_args()
+
+    if args.section in ("all", "fig5"):
+        from benchmarks.fig5_microbench import main as fig5
+        fig5()
+    if args.section in ("all", "table4"):
+        from benchmarks.table4_overhead import main as table4
+        table4()
+    if args.section in ("all", "roofline"):
+        roofline_section()
+
+
+if __name__ == "__main__":
+    main()

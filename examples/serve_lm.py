@@ -1,0 +1,49 @@
+"""Serving example: batched generation with the slot engine.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.lm import Model
+from repro.serve.engine import Request, ServeEngine
+
+CFG = ModelConfig(name="demo-serve", family="dense", n_layers=4,
+                  d_model=256, n_heads=4, n_kv_heads=2, d_ff=512,
+                  vocab=4096, max_seq=128)
+
+model = Model(CFG, compute_dtype=jnp.float32)
+params = model.init(jax.random.PRNGKey(0))
+engine = ServeEngine(model, params, max_seq=128, batch_slots=4,
+                     temperature=0.8, seed=3)
+
+# --- batch generate (equal-length prompts) ---------------------------------
+prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, CFG.vocab)
+t0 = time.perf_counter()
+out = engine.generate(prompts, n_tokens=24)
+dt = time.perf_counter() - t0
+print(f"batch generate: {out.shape} tokens in {dt:.2f}s "
+      f"({out.size / dt:.0f} tok/s)")
+print("sample:", np.asarray(out[0][:12]))
+
+# --- continuous-batching-lite: mixed lengths, more requests than slots -----
+rng = np.random.default_rng(7)
+reqs = [Request(uid=i, prompt=rng.integers(0, CFG.vocab,
+                                           rng.integers(4, 24)).tolist(),
+                max_new_tokens=int(rng.integers(4, 16)))
+        for i in range(9)]
+t0 = time.perf_counter()
+results = engine.serve(reqs)
+dt = time.perf_counter() - t0
+n_tok = sum(len(v) for v in results.values())
+print(f"\nslot scheduler: {len(reqs)} requests over 4 slots, "
+      f"{n_tok} tokens in {dt:.1f}s")
+for uid in sorted(results):
+    print(f"  req {uid}: {len(results[uid])} tokens")
+assert set(results) == {r.uid for r in reqs}
+print("all requests served.")

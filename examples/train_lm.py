@@ -1,0 +1,80 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Exercises the full stack on CPU — synthetic pipeline, scanned/remat model,
+vocab-chunked loss, AdamW, checkpointing with restart, straggler watchdog:
+
+  PYTHONPATH=src python examples/train_lm.py [--steps 200]
+"""
+
+import argparse
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import DataConfig, SyntheticPipeline
+from repro.models.config import ModelConfig
+from repro.models.lm import Model
+from repro.optim.optimizer import AdamWConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+parser = argparse.ArgumentParser()
+parser.add_argument("--steps", type=int, default=200)
+parser.add_argument("--batch", type=int, default=8)
+parser.add_argument("--seq", type=int, default=256)
+parser.add_argument("--ckpt", default=None)
+args = parser.parse_args()
+if args.ckpt is None:  # unique per run so concurrent demos don't collide
+    args.ckpt = f"/tmp/repro_train_lm_ckpt_{os.getpid()}"
+
+# ~100M params: 12L x 768d GQA transformer (a qwen2-family shape)
+CFG = ModelConfig(
+    name="demo-100m", family="dense", n_layers=12, d_model=768,
+    n_heads=12, n_kv_heads=4, d_ff=2048, vocab=32000, qkv_bias=True,
+    max_seq=args.seq)
+
+model = Model(CFG, compute_dtype=jnp.float32)
+n_params = sum(
+    x.size for x in jax.tree.leaves(jax.eval_shape(model.init,
+                                                   jax.random.PRNGKey(0))))
+print(f"model: {CFG.name}, {n_params / 1e6:.1f}M params")
+
+data = SyntheticPipeline(DataConfig(vocab=CFG.vocab, seq_len=args.seq,
+                                    global_batch=args.batch, seed=17))
+opt = AdamWConfig(lr=6e-4, warmup_steps=20, total_steps=args.steps)
+
+shutil.rmtree(args.ckpt, ignore_errors=True)
+ckpt_every = min(50, max(args.steps // 2, 1))
+trainer = Trainer(model, data, opt, TrainerConfig(
+    total_steps=args.steps, checkpoint_every=ckpt_every,
+    checkpoint_dir=args.ckpt, vocab_chunks=4))
+
+
+def log(step, m):
+    if step % 20 == 0 or step == args.steps - 1:
+        print(f"step {step:4d}  loss {m['loss']:.4f}  lr {m['lr']:.2e}  "
+              f"gnorm {m['grad_norm']:.2f}  {m['step_time_s'] * 1e3:.0f} ms",
+              flush=True)
+
+
+state, history = trainer.run(jax.random.PRNGKey(0), on_metrics=log)
+losses = [m["loss"] for _, m in history]
+print(f"\nloss: {losses[0]:.4f} -> {losses[-1]:.4f} "
+      f"(improved {losses[0] - losses[-1]:.4f})")
+if args.steps >= 150:  # CPU smoke runs see too few tokens for a 32k vocab
+    assert losses[-1] < losses[0], "training must reduce loss"
+
+# --- restart drill: resume from the last committed checkpoint --------------
+print("\n-- simulated preemption: restarting from checkpoint --")
+trainer2 = Trainer(model, data, opt, TrainerConfig(
+    total_steps=min(args.steps + 20, args.steps * 2),
+    checkpoint_every=ckpt_every, checkpoint_dir=args.ckpt, vocab_chunks=4))
+state2, hist2 = trainer2.run(jax.random.PRNGKey(0), on_metrics=log)
+if hist2:
+    print(f"resumed at step {hist2[0][0]} (from committed checkpoint), "
+          f"final loss {hist2[-1][1]['loss']:.4f}")
+else:
+    print("checkpoint already at/after target step — nothing to do "
+          "(exact-resume contract held)")
+shutil.rmtree(args.ckpt, ignore_errors=True)

@@ -1,0 +1,5 @@
+"""Assigned-architecture configs (exact, from public literature) + registry."""
+
+from repro.configs.registry import ARCHS, get_config, list_archs, reduced_config
+
+__all__ = ["ARCHS", "get_config", "list_archs", "reduced_config"]

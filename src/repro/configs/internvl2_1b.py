@@ -1,0 +1,17 @@
+"""InternVL2-1B [arXiv:2404.16821] — InternLM2 LM backbone; InternViT
+frontend is a STUB (input_specs provides 256 precomputed patch embeddings)."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    d_ff=4864,
+    vocab=151655,
+    frontend="vision",
+    n_frontend_tokens=256,
+)

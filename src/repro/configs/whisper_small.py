@@ -1,0 +1,19 @@
+"""Whisper-small [arXiv:2212.04356] — enc-dec; conv frontend is a STUB
+(input_specs provides precomputed frame embeddings, 1500 frames = 30 s)."""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-small",
+    family="encdec",
+    n_layers=12,            # decoder depth
+    n_encoder_layers=12,
+    d_model=768,
+    n_heads=12,
+    n_kv_heads=12,
+    d_ff=3072,
+    vocab=51865,
+    frontend="audio",
+    n_frontend_tokens=1500,
+    act="gelu",
+)

@@ -1,0 +1,114 @@
+"""Distributed cooperative groups: warp merging at cluster scale.
+
+The paper's ``vx_tile`` merges/splits warps so synchronization happens at a
+user-chosen granularity.  At the cluster tier the same idea maps onto mesh
+*sub-axis* collectives: ``axis_index_groups`` is the Table-II group mask of a
+device axis.  ``MeshTileGroup(axis, size)`` partitions the devices along one
+mesh axis into groups of ``size`` and provides group-scoped psum/pmax/
+ppermute plus the cooperative-group accessors (thread_rank == device rank in
+group, meta_group_rank == group id).
+
+Used by the trainer for hierarchical gradient reduction (reduce-scatter
+inside a pod "group", cross-pod all-reduce on shards, all-gather back), which
+is the distributed translation of merge-sync-split.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def axis_groups(axis_size: int, group_size: int) -> List[List[int]]:
+    """Table-II group mask, expressed as XLA axis_index_groups."""
+    if axis_size % group_size != 0:
+        raise ValueError(f"group_size {group_size} !| axis_size {axis_size}")
+    return [
+        list(range(s, s + group_size)) for s in range(0, axis_size, group_size)
+    ]
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshTileGroup:
+    """A tiled partition of one mesh axis (use inside shard_map/pmap)."""
+
+    axis_name: str
+    axis_size: int
+    size: int  # devices per group
+
+    def __post_init__(self):
+        if self.axis_size % self.size != 0:
+            raise ValueError("group size must divide axis size")
+
+    @property
+    def groups(self) -> List[List[int]]:
+        return axis_groups(self.axis_size, self.size)
+
+    @property
+    def num_groups(self) -> int:
+        return self.axis_size // self.size
+
+    # -- cooperative-group accessors (Table III rules, device tier) --------
+    def thread_rank(self):
+        return lax.axis_index(self.axis_name) % self.size
+
+    def meta_group_rank(self):
+        return lax.axis_index(self.axis_name) // self.size
+
+    def num_threads(self) -> int:
+        return self.size
+
+    # -- group-scoped collectives ------------------------------------------
+    def psum(self, x):
+        return lax.psum(x, self.axis_name, axis_index_groups=self.groups)
+
+    def pmax(self, x):
+        return lax.pmax(x, self.axis_name, axis_index_groups=self.groups)
+
+    def pmean(self, x):
+        return lax.pmean(x, self.axis_name, axis_index_groups=self.groups)
+
+    def all_gather(self, x, axis: int = 0, tiled: bool = False):
+        return lax.all_gather(x, self.axis_name,
+                              axis_index_groups=self.groups,
+                              axis=axis, tiled=tiled)
+
+    def psum_scatter(self, x, scatter_dimension: int = 0, tiled: bool = True):
+        return lax.psum_scatter(x, self.axis_name,
+                                axis_index_groups=self.groups,
+                                scatter_dimension=scatter_dimension,
+                                tiled=tiled)
+
+    def ballot(self, pred) -> jnp.ndarray:
+        """vote_ballot across the group: bit i set iff member i's pred != 0."""
+        rank = self.thread_rank()
+        word = (pred != 0).astype(jnp.uint32) << rank.astype(jnp.uint32)
+        return self.psum(word)
+
+    def vote_any(self, pred):
+        return self.psum((pred != 0).astype(jnp.int32)) > 0
+
+    def vote_all(self, pred):
+        return self.psum((pred != 0).astype(jnp.int32)) == self.size
+
+    def shfl_idx(self, x, src_rank: int):
+        """Broadcast member ``src_rank``'s value to the whole group."""
+        sel = (self.thread_rank() == src_rank).astype(x.dtype)
+        return self.psum(x * sel)
+
+
+def hierarchical_psum(x, inner: MeshTileGroup, outer_axis: str,
+                      scatter_dim: int = 0):
+    """Reduce-scatter within the inner group, all-reduce across the outer
+    axis on 1/size shards, all-gather back — the bandwidth-optimal two-level
+    schedule (in-pod links are fast; the cross-pod hop moves 1/size bytes).
+
+    Requires ``x.shape[scatter_dim] % inner.size == 0``.
+    """
+    shard = inner.psum_scatter(x, scatter_dimension=scatter_dim, tiled=True)
+    shard = lax.psum(shard, outer_axis)
+    return inner.all_gather(shard, axis=scatter_dim, tiled=True)

@@ -1,0 +1,204 @@
+"""Hardware-path lowering of warp-level primitives (``vx_shfl`` / ``vx_vote``).
+
+Vortex's HW solution adds ALU datapaths so lanes exchange *register* values
+directly — no memory round trip.  The TPU-native analogue: every primitive
+here is a register-level vector op over the trailing lane axis (roll /
+permute / masked lane reduction), which XLA/Mosaic lowers to cross-lane
+shuffles on the 8x128 VREG lattice.  Nothing touches scratch memory; there
+are no gathers through HBM.  The same functions are used verbatim inside the
+Pallas kernels (``repro.kernels``), where residence in VMEM/VREGs is explicit.
+
+All functions operate on a *segment*: the trailing axis is one warp (or one
+cooperative-group tile after ``segment_view`` re-tiling).  Out-of-range
+shuffles keep the lane's own value (CUDA ``__shfl_*_sync`` semantics).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _lane_iota(width: int) -> jnp.ndarray:
+    return jnp.arange(width, dtype=jnp.int32)
+
+
+def _member_bool(member_mask, width: int) -> jnp.ndarray:
+    """Normalize a member mask (int bitmask or bool array) to bool (..., width).
+
+    Bit ``i`` of an integer mask corresponds to lane ``i`` (LSB-first, CUDA
+    convention for ``%laneid`` masks).
+    """
+    if member_mask is None:
+        return jnp.ones((width,), dtype=bool)
+    if isinstance(member_mask, int):
+        return jnp.array([(member_mask >> i) & 1 for i in range(width)], dtype=bool)
+    member_mask = jnp.asarray(member_mask)
+    if member_mask.dtype == bool:
+        return member_mask
+    lanes = _lane_iota(width)
+    return (jnp.right_shift(member_mask[..., None], lanes) & 1).astype(bool)
+
+
+# --------------------------------------------------------------------------
+# vx_shfl: Up, Down, Bfly (xor), Idx
+# --------------------------------------------------------------------------
+
+def shfl_up(value: jnp.ndarray, delta: int, width: int) -> jnp.ndarray:
+    """r[tid] = value[tid - delta]; lanes with tid < delta keep their own."""
+    if delta == 0:
+        return value
+    rolled = jnp.roll(value, delta, axis=-1)
+    keep = _lane_iota(width) < delta
+    return jnp.where(keep, value, rolled)
+
+
+def shfl_down(value: jnp.ndarray, delta: int, width: int) -> jnp.ndarray:
+    """r[tid] = value[tid + delta]; lanes with tid + delta >= width keep own."""
+    if delta == 0:
+        return value
+    rolled = jnp.roll(value, -delta, axis=-1)
+    keep = _lane_iota(width) >= width - delta
+    return jnp.where(keep, value, rolled)
+
+
+def shfl_xor(value: jnp.ndarray, mask: int, width: int) -> jnp.ndarray:
+    """r[tid] = value[tid ^ mask] — the butterfly exchange.
+
+    For the (ubiquitous) power-of-two mask the exchange is a static
+    reshape + pair swap — a register permute on TPU and a vectorized
+    shuffle on CPU, with no gather.  Arbitrary masks fall back to
+    take_along_axis.
+    """
+    if isinstance(mask, int) and mask > 0 and (mask & (mask - 1)) == 0 \
+            and width % (2 * mask) == 0:
+        shape = value.shape
+        v = value.reshape(shape[:-1] + (width // (2 * mask), 2, mask))
+        v = jnp.flip(v, axis=-2)
+        return v.reshape(shape)
+    lanes = _lane_iota(width)
+    src = lanes ^ mask
+    src = jnp.where(src < width, src, lanes)  # OOB: keep own value (CUDA)
+    src = jnp.broadcast_to(src, value.shape)
+    return jnp.take_along_axis(value, src, axis=-1)
+
+
+def shfl_idx(value: jnp.ndarray, src_lane, width: int) -> jnp.ndarray:
+    """r[tid] = value[srcLane] (srcLane may be scalar or per-lane)."""
+    src = jnp.asarray(src_lane, dtype=jnp.int32) % width
+    src = jnp.broadcast_to(src, value.shape)
+    return jnp.take_along_axis(value, src, axis=-1)
+
+
+# --------------------------------------------------------------------------
+# vx_vote: All, Any, Uni, Ballot
+# --------------------------------------------------------------------------
+
+def vote_all(pred: jnp.ndarray, width: int, member_mask=None) -> jnp.ndarray:
+    member = _member_bool(member_mask, width)
+    active = pred.astype(bool) | ~member  # inactive lanes don't veto
+    r = jnp.all(active, axis=-1, keepdims=True)
+    return jnp.broadcast_to(r, pred.shape)
+
+
+def vote_any(pred: jnp.ndarray, width: int, member_mask=None) -> jnp.ndarray:
+    member = _member_bool(member_mask, width)
+    active = pred.astype(bool) & member
+    r = jnp.any(active, axis=-1, keepdims=True)
+    return jnp.broadcast_to(r, pred.shape)
+
+
+def vote_uni(value: jnp.ndarray, width: int, member_mask=None) -> jnp.ndarray:
+    """True iff all member lanes hold the same value.
+
+    On Vortex the Uni mode compares lanes through the ALU; TPU lanes are
+    lockstep so uniformity is a pure value property (no PC comparison).
+    """
+    member = _member_bool(member_mask, width)
+    # Reference value: first member lane's value, broadcast across the segment.
+    lanes = _lane_iota(width)
+    first_idx = jnp.argmax(member.astype(jnp.int32) * 1 + 0 * lanes, axis=-1)
+    first = jnp.take_along_axis(
+        value, jnp.broadcast_to(first_idx[..., None], value.shape[:-1] + (1,)), axis=-1
+    )
+    same = (value == first) | ~member
+    r = jnp.all(same, axis=-1, keepdims=True)
+    return jnp.broadcast_to(r, value.shape[:-1] + (width,))
+
+
+def vote_ballot(pred: jnp.ndarray, width: int, member_mask=None) -> jnp.ndarray:
+    """Packed ballot words: bit tid set iff lane tid is a member with pred!=0.
+
+    Returns (..., n_words) uint32 with n_words = ceil(width/32); for
+    width <= 32 the trailing word axis is squeezed to match CUDA's uint32.
+    Every lane receives the ballot (broadcast over the lane axis is implicit:
+    result has no lane axis).
+    """
+    member = _member_bool(member_mask, width)
+    bits = (pred.astype(bool) & member).astype(jnp.uint32)
+    n_words = (width + 31) // 32
+    words = []
+    for w in range(n_words):
+        lo, hi = w * 32, min((w + 1) * 32, width)
+        shifts = jnp.arange(lo, hi, dtype=jnp.uint32) - jnp.uint32(lo)
+        words.append(jnp.sum(bits[..., lo:hi] << shifts, axis=-1, dtype=jnp.uint32))
+    out = jnp.stack(words, axis=-1)
+    if n_words == 1:
+        out = out[..., 0]
+    return out
+
+
+def match_any(value: jnp.ndarray, width: int, member_mask=None) -> jnp.ndarray:
+    """CUDA ``__match_any_sync``: per-lane ballot of lanes sharing its value.
+
+    Returns (..., width) uint32 (width <= 32 only, like CUDA).
+    """
+    if width > 32:
+        raise ValueError("match_any restricted to width <= 32 (single ballot word)")
+    member = _member_bool(member_mask, width)
+    eq = (value[..., :, None] == value[..., None, :]) & member[..., None, :] & member[..., :, None]
+    shifts = jnp.arange(width, dtype=jnp.uint32)
+    return jnp.sum(eq.astype(jnp.uint32) << shifts, axis=-1, dtype=jnp.uint32)
+
+
+# --------------------------------------------------------------------------
+# Warp/tile reductions: the log2-step shuffle tree, in registers.
+# --------------------------------------------------------------------------
+
+_REDUCE_OPS = {
+    "sum": jnp.add,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+    "prod": jnp.multiply,
+    "or": jnp.bitwise_or,
+    "and": jnp.bitwise_and,
+}
+
+
+def warp_reduce(value: jnp.ndarray, width: int, op: str = "sum") -> jnp.ndarray:
+    """Butterfly (shfl_xor) tree reduction — the cuda-samples ``reduce`` /
+    ``reduce_tile`` pattern.  log2(width) register exchanges, zero memory
+    traffic; every lane ends with the full reduction (xor tree is
+    all-reduce-like, matching ``cg::reduce``).
+    """
+    fn = _REDUCE_OPS[op]
+    offset = width // 2
+    while offset >= 1:
+        value = fn(value, shfl_xor(value, offset, width))
+        offset //= 2
+    return value
+
+
+def warp_scan(value: jnp.ndarray, width: int, op: str = "sum") -> jnp.ndarray:
+    """Inclusive Hillis-Steele scan via shfl_up — used by cg::inclusive_scan."""
+    fn = _REDUCE_OPS[op]
+    lanes = _lane_iota(width)
+    delta = 1
+    while delta < width:
+        shifted = shfl_up(value, delta, width)
+        value = jnp.where(lanes >= delta, fn(value, shifted), value)
+        delta *= 2
+    return value

@@ -1,0 +1,443 @@
+"""The parallel-region (PR) transformation and the two execution paths.
+
+Implements §IV of the paper as an executable compiler pass:
+
+  (1) identify parallel regions — boundaries are cross-thread operations
+      (Sync, TilePartition, Collective);
+  (2) control-structure fission — ``If`` nodes spanning boundaries are split;
+      the condition is re-evaluated per region (we carry it as a predicate
+      stack, so every fissioned region re-checks ``groupId == 0`` exactly
+      like Figure 4b does);
+  (3) regions containing only synchronization / partitioning are removed;
+  (4) loop serialization — each region becomes one ``lax.fori_loop`` over
+      threads; collectives get **nested** loop serialization (outer loop over
+      groups, inner serialized lane walk — ``sw_backend``);
+  (5) special variables are rewritten — ``threadIdx`` becomes the loop index,
+      thread-locals become arrays indexed by tid.
+
+Two executors share the flattened program:
+  run_hw — the vectorizer: the block is a value-per-lane array; collectives
+      lower to register-level ops (hw_backend); divergence is mask algebra
+      (the ``vx_split``/``vx_join`` analogue).
+  run_sw — the serializer: the PR transformation output.
+
+Divergence semantics (both paths, deterministic): predicated lanes do not
+update their targets; votes take the active mask as member mask; reductions
+neutralize inactive lanes (coalesced-group semantics); shuffles read the
+segment as-is (CUDA leaves reads from inactive lanes undefined — we pin them
+to the stored value so HW ≡ SW is testable).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import hw_backend as _hw
+from repro.core import sw_backend as _sw
+from repro.core.ir import (
+    Assign,
+    Collective,
+    ExecCtx,
+    If,
+    Load,
+    Stmt,
+    Store,
+    Sync,
+    ThreadProgram,
+    TilePartition,
+)
+from repro.core.warp import TileGroup, WarpConfig
+
+# ---------------------------------------------------------------------------
+# Pass 1+2: flatten control structure into predicated statements
+# ---------------------------------------------------------------------------
+
+PredFn = Callable[..., Any]
+
+
+@dataclasses.dataclass
+class FlatStmt:
+    """A statement with its enclosing predicate stack and static tile state."""
+
+    stmt: Stmt
+    preds: Tuple[Tuple[PredFn, bool], ...]  # (cond_fn, value_it_must_equal)
+    tile: Optional[TileGroup]
+
+    @property
+    def is_boundary(self) -> bool:
+        return isinstance(self.stmt, (Sync, TilePartition, Collective))
+
+
+def flatten(program: ThreadProgram) -> List[FlatStmt]:
+    """If-fission + predication.  TilePartition is interpreted statically."""
+    out: List[FlatStmt] = []
+
+    def walk(stmts: Sequence[Stmt], preds, tile):
+        for s in stmts:
+            if isinstance(s, If):
+                tile = walk(s.body, preds + ((s.cond, True),), tile)
+                tile = walk(s.orelse, preds + ((s.cond, False),), tile)
+            elif isinstance(s, TilePartition):
+                if preds:
+                    raise ValueError("tiled_partition under divergence is unsupported")
+                tile = TileGroup(size=s.size, warp=program.warp) \
+                    if s.size != program.warp.warp_size else None
+                out.append(FlatStmt(s, preds, tile))
+            else:
+                out.append(FlatStmt(s, preds, tile))
+        return tile
+
+    walk(program.stmts, (), None)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pass 3+4: region splitting (for reporting + the SW loop structure)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Region:
+    """A maximal run of per-thread statements — serialized as ONE loop."""
+
+    items: List[FlatStmt]
+
+
+@dataclasses.dataclass
+class TransformReport:
+    n_regions_identified: int   # before removal (incl. sync/partition-only)
+    n_regions_serialized: int   # loops actually emitted
+    n_collectives: int          # nested-loop serializations emitted
+    n_fissioned_ifs: int        # Ifs split across region boundaries
+
+
+def split_regions(flat: List[FlatStmt]) -> Tuple[List[Any], TransformReport]:
+    """Return the region/boundary sequence plus the paper-step report."""
+    seq: List[Any] = []
+    cur: List[FlatStmt] = []
+    n_identified = 0
+    n_collectives = 0
+    for fs in flat:
+        if fs.is_boundary:
+            n_identified += 1  # the boundary splits off a region
+            if cur:
+                seq.append(Region(cur))
+                cur = []
+            if isinstance(fs.stmt, Collective):
+                n_collectives += 1
+                seq.append(fs)
+            # Sync / TilePartition regions are *removed* (paper step 3);
+            # TilePartition already acted statically during flatten().
+        else:
+            cur.append(fs)
+    if cur:
+        seq.append(Region(cur))
+    regions = [r for r in seq if isinstance(r, Region)]
+    # fission count: an If was fissioned if its predicate spans >1 emitted
+    # unit (serialized region or collective boundary).
+    pred_regions: Dict[int, set] = {}
+    for uidx, unit in enumerate(seq):
+        items = unit.items if isinstance(unit, Region) else [unit]
+        for fs in items:
+            for (fn, _val) in fs.preds:
+                pred_regions.setdefault(id(fn), set()).add(uidx)
+    n_fissioned = sum(1 for v in pred_regions.values() if len(v) > 1)
+    report = TransformReport(
+        n_regions_identified=n_identified + len(regions),
+        n_regions_serialized=len(regions),
+        n_collectives=n_collectives,
+        n_fissioned_ifs=n_fissioned,
+    )
+    return seq, report
+
+
+# ---------------------------------------------------------------------------
+# Environment views
+# ---------------------------------------------------------------------------
+
+class EnvView:
+    """Read view over thread-local state handed to statement functions."""
+
+    def __init__(self, env: Dict[str, jnp.ndarray], tid=None, mode="hw"):
+        self._env = env
+        self._tid = tid
+        self._mode = mode
+
+    def __getitem__(self, name: str):
+        arr = self._env[name]
+        if self._mode == "hw":
+            return arr
+        # SW: scalar element view — the rewrite x -> x[tid] of paper step 5.
+        return lax.dynamic_index_in_dim(arr, self._tid, axis=0, keepdims=False)
+
+
+_NEUTRAL = {
+    "sum": 0,
+    "prod": 1,
+    "max": -jnp.inf,
+    "min": jnp.inf,
+    "or": 0,
+    "and": -1,
+}
+
+
+def _neutral_for(op: str, dtype) -> Any:
+    v = _NEUTRAL[op]
+    if jnp.issubdtype(dtype, jnp.integer):
+        if op == "max":
+            return jnp.iinfo(dtype).min
+        if op == "min":
+            return jnp.iinfo(dtype).max
+    if dtype == jnp.bool_ and op == "and":
+        return True
+    return v
+
+
+# ---------------------------------------------------------------------------
+# HW path: the vectorizer
+# ---------------------------------------------------------------------------
+
+def _init_env(program: ThreadProgram, inputs: Dict[str, jnp.ndarray]):
+    bs = program.block_size
+    env: Dict[str, jnp.ndarray] = {}
+    for name, dtype in program.locals.items():
+        env[name] = jnp.zeros((bs,), dtype=dtype)
+    for name, (shape, dtype) in program.buffers.items():
+        env[f"@{name}"] = jnp.zeros(shape, dtype=dtype)
+    for name, arr in inputs.items():
+        env[name] = jnp.asarray(arr)
+    return env
+
+
+def _mask_of(preds, env_view, tid, ctx, block_size):
+    mask = jnp.ones((block_size,), dtype=bool) if jnp.ndim(tid) else True
+    for fn, want in preds:
+        c = fn(env_view, tid, ctx).astype(bool)
+        mask = mask & (c if want else ~c)
+    return mask
+
+
+def _segmented(x: jnp.ndarray, seg: int):
+    return x.reshape((-1, seg))
+
+
+def _apply_collective_hw(kind, operand, mask, seg, params, dtype):
+    """Register-level collective over (n_segments, seg) with active mask."""
+    op = params.get("op", "sum")
+    if kind in ("warp_reduce", "warp_scan"):
+        neutral = _neutral_for(op, dtype)
+        operand = jnp.where(mask, operand, jnp.asarray(neutral, dtype=dtype))
+        fn = _hw.warp_reduce if kind == "warp_reduce" else _hw.warp_scan
+        return fn(operand, seg, op)
+    if kind == "shfl_up":
+        return _hw.shfl_up(operand, params["delta"], seg)
+    if kind == "shfl_down":
+        return _hw.shfl_down(operand, params["delta"], seg)
+    if kind == "shfl_xor":
+        return _hw.shfl_xor(operand, params["mask"], seg)
+    if kind == "shfl_idx":
+        return _hw.shfl_idx(operand, params["src_lane"], seg)
+    if kind == "vote_all":
+        return _hw.vote_all(operand, seg, member_mask=mask)
+    if kind == "vote_any":
+        return _hw.vote_any(operand, seg, member_mask=mask)
+    if kind == "vote_uni":
+        return _hw.vote_uni(operand, seg, member_mask=mask)
+    if kind == "vote_ballot":
+        b = _hw.vote_ballot(operand, seg, member_mask=mask)
+        # broadcast ballot word(s) back to every lane of the segment
+        if b.ndim == operand.ndim - 1:
+            b = jnp.broadcast_to(b[..., None], operand.shape[:-1] + (seg,))
+        else:  # multi-word: give each lane word 0 (CUDA uint32 convention)
+            b = jnp.broadcast_to(b[..., :1], operand.shape[:-1] + (seg,))
+        return b
+    raise ValueError(f"unknown collective kind {kind!r}")
+
+
+def run_hw(program: ThreadProgram, inputs: Dict[str, jnp.ndarray]):
+    """Vectorized execution — the hardware path."""
+    bs = program.block_size
+    env = _init_env(program, inputs)
+    tid = jnp.arange(bs, dtype=jnp.int32)
+    flat = flatten(program)
+
+    for fs in flat:
+        ctx = ExecCtx(warp=program.warp, tile=fs.tile)
+        view = EnvView(env, mode="hw")
+        s = fs.stmt
+        if isinstance(s, (Sync, TilePartition)):
+            continue  # lockstep: sync is free; partition acted statically
+        mask = _mask_of(fs.preds, view, tid, ctx, bs)
+        if isinstance(s, Assign):
+            val = jnp.asarray(s.fn(view, tid, ctx))
+            val = jnp.broadcast_to(val, (bs,)).astype(env[s.target].dtype)
+            env[s.target] = jnp.where(mask, val, env[s.target])
+        elif isinstance(s, Load):
+            idx = jnp.broadcast_to(jnp.asarray(s.index_fn(view, tid, ctx)), (bs,))
+            buf = env[f"@{s.buffer}"]
+            val = buf[idx].astype(env[s.target].dtype)
+            env[s.target] = jnp.where(mask, val, env[s.target])
+        elif isinstance(s, Store):
+            idx = jnp.broadcast_to(jnp.asarray(s.index_fn(view, tid, ctx)), (bs,))
+            val = jnp.broadcast_to(jnp.asarray(s.value_fn(view, tid, ctx)), (bs,))
+            buf = env[f"@{s.buffer}"]
+            safe_idx = jnp.where(mask, idx, buf.shape[0])  # OOB drops
+            env[f"@{s.buffer}"] = buf.at[safe_idx].set(
+                val.astype(buf.dtype), mode="drop")
+        elif isinstance(s, Collective):
+            seg = ctx.segment_size
+            operand = jnp.broadcast_to(
+                jnp.asarray(s.operand_fn(view, tid, ctx)), (bs,))
+            seg_op = _segmented(operand, seg)
+            seg_mask = _segmented(mask if mask is not True
+                                  else jnp.ones((bs,), bool), seg)
+            res = _apply_collective_hw(s.kind, seg_op, seg_mask, seg,
+                                       s.params, seg_op.dtype)
+            res = res.reshape((bs,)).astype(env[s.target].dtype)
+            env[s.target] = jnp.where(mask, res, env[s.target])
+        else:
+            raise TypeError(f"unknown stmt {type(s)}")
+    return _finalize(program, env)
+
+
+# ---------------------------------------------------------------------------
+# SW path: the serializer (PR transformation output)
+# ---------------------------------------------------------------------------
+
+def _apply_collective_sw(kind, env, target, operand_fn, preds, tile, program,
+                         params):
+    """Nested loop serialization: outer serial loop over segments (lax.map),
+    inner serialized lane walk (sw_backend fori_loops)."""
+    bs = program.block_size
+    ws = program.warp.warp_size
+    seg = tile.size if tile is not None else ws
+    tid = jnp.arange(bs, dtype=jnp.int32)
+    ctx = ExecCtx(warp=program.warp, tile=tile)
+    view = EnvView(env, mode="hw")  # operand gather is itself a region output
+    operand = jnp.broadcast_to(jnp.asarray(operand_fn(view, tid, ctx)), (bs,))
+    mask = _mask_of(preds, view, tid, ctx, bs)
+    if mask is True:
+        mask = jnp.ones((bs,), bool)
+    op = params.get("op", "sum")
+    seg_op = _segmented(operand, seg)
+    seg_mask = _segmented(mask, seg)
+
+    def per_group(args):
+        v, m = args
+        if kind in ("warp_reduce", "warp_scan"):
+            neutral = _neutral_for(op, v.dtype)
+            v = jnp.where(m, v, jnp.asarray(neutral, dtype=v.dtype))
+            fn = _sw.warp_reduce if kind == "warp_reduce" else _sw.warp_scan
+            return fn(v, seg, op)
+        if kind == "shfl_up":
+            return _sw.shfl_up(v, params["delta"], seg)
+        if kind == "shfl_down":
+            return _sw.shfl_down(v, params["delta"], seg)
+        if kind == "shfl_xor":
+            return _sw.shfl_xor(v, params["mask"], seg)
+        if kind == "shfl_idx":
+            return _sw.shfl_idx(v, params["src_lane"], seg)
+        if kind == "vote_all":
+            return _sw.vote_all(v, seg, member_mask=m)
+        if kind == "vote_any":
+            return _sw.vote_any(v, seg, member_mask=m)
+        if kind == "vote_uni":
+            return _sw.vote_uni(v, seg, member_mask=m)
+        if kind == "vote_ballot":
+            b = _sw.vote_ballot(v, seg, member_mask=m)
+            if b.ndim == v.ndim - 1:
+                return jnp.broadcast_to(b[..., None], v.shape[:-1] + (seg,))
+            return jnp.broadcast_to(b[..., :1], v.shape[:-1] + (seg,))
+        raise ValueError(f"unknown collective kind {kind!r}")
+
+    res = lax.map(per_group, (seg_op, seg_mask))  # outer serial group loop
+    res = res.reshape((bs,)).astype(env[target].dtype)
+    env[target] = jnp.where(mask, res, env[target])
+    return env
+
+
+def run_sw(program: ThreadProgram, inputs: Dict[str, jnp.ndarray]):
+    """Serialized execution — the PR-transformation software path."""
+    bs = program.block_size
+    env = _init_env(program, inputs)
+    flat = flatten(program)
+    seq, _report = split_regions(flat)
+
+    local_names = sorted(k for k in env if not k.startswith("@"))
+    buf_names = sorted(k for k in env if k.startswith("@"))
+
+    for item in seq:
+        if isinstance(item, FlatStmt):  # a Collective boundary
+            s = item.stmt
+            env = _apply_collective_sw(s.kind, env, s.target, s.operand_fn,
+                                       item.preds, item.tile, program, s.params)
+            continue
+        region: Region = item
+
+        def body(tid, carry):
+            env_loc = dict(carry)
+            for fs in region.items:
+                ctx = ExecCtx(warp=program.warp, tile=fs.tile)
+                view = EnvView(env_loc, tid=tid, mode="sw")
+                pred = jnp.asarray(True)
+                for fn, want in fs.preds:  # re-evaluated per region (fission)
+                    c = jnp.asarray(fn(view, tid, ctx)).astype(bool)
+                    pred = pred & (c if want else ~c)
+                s = fs.stmt
+                if isinstance(s, Assign):
+                    old = lax.dynamic_index_in_dim(env_loc[s.target], tid, 0,
+                                                   keepdims=False)
+                    val = jnp.asarray(s.fn(view, tid, ctx)).astype(old.dtype)
+                    val = jnp.where(pred, val, old)
+                    env_loc[s.target] = lax.dynamic_update_index_in_dim(
+                        env_loc[s.target], val[None], tid, axis=0)
+                elif isinstance(s, Load):
+                    idx = jnp.asarray(s.index_fn(view, tid, ctx), jnp.int32)
+                    buf = env_loc[f"@{s.buffer}"]
+                    val = lax.dynamic_index_in_dim(buf, idx, 0, keepdims=False)
+                    old = lax.dynamic_index_in_dim(env_loc[s.target], tid, 0,
+                                                   keepdims=False)
+                    val = jnp.where(pred, val.astype(old.dtype), old)
+                    env_loc[s.target] = lax.dynamic_update_index_in_dim(
+                        env_loc[s.target], val[None], tid, axis=0)
+                elif isinstance(s, Store):
+                    idx = jnp.asarray(s.index_fn(view, tid, ctx), jnp.int32)
+                    buf = env_loc[f"@{s.buffer}"]
+                    old = lax.dynamic_index_in_dim(buf, idx, 0, keepdims=False)
+                    val = jnp.asarray(s.value_fn(view, tid, ctx)).astype(buf.dtype)
+                    val = jnp.where(pred, val, old)
+                    env_loc[f"@{s.buffer}"] = lax.dynamic_update_index_in_dim(
+                        buf, val[None], idx, axis=0)
+                else:
+                    raise TypeError(f"{type(s)} inside a serialized region")
+            return env_loc
+
+        env = lax.fori_loop(0, bs, body, env)
+
+    return _finalize(program, env)
+
+
+def _finalize(program: ThreadProgram, env):
+    out = {}
+    for k, v in env.items():
+        out[k.lstrip("@")] = v
+    return out
+
+
+def run(program: ThreadProgram, inputs: Dict[str, jnp.ndarray],
+        path: str = "hw"):
+    if path == "hw":
+        return run_hw(program, inputs)
+    if path == "sw":
+        return run_sw(program, inputs)
+    raise ValueError(f"unknown path {path!r}")
+
+
+def transform_report(program: ThreadProgram) -> TransformReport:
+    seq, report = split_regions(flatten(program))
+    del seq
+    return report

@@ -1,0 +1,261 @@
+"""Software-path lowering: the PR-transformation rules of Table III.
+
+The paper's software solution has no ISA support; the compiler serializes
+each parallel region into loops over threads and rewrites warp primitives
+into *memory arrays*: a temporary array as large as the warp stores each
+thread's contribution, and results are read back by (transformed) thread
+index.  Collectives use **nested loop serialization** — an outer loop over
+groups and inner loops over lanes (Figure 4b of the paper).
+
+Faithful carrier on TPU/JAX: thread-local values become scratch arrays,
+loops become ``lax.fori_loop`` with element-wise dynamic update/slice —
+i.e. genuine serialized memory traffic (scatter/gather per element), not a
+vector shuffle.  This is intentionally the *expensive* path: it is the
+baseline the paper's Figure 5 compares against, and its extra HLO
+instructions and bytes are what our IPC-analogue benchmark measures.
+
+All functions take segments whose trailing axis is one warp/tile, identical
+to :mod:`repro.core.hw_backend`, and must agree with it bit-for-bit (tested
+by hypothesis property tests).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _serial_map(width: int, src_of_tid, value: jnp.ndarray) -> jnp.ndarray:
+    """Loop-serialized ``r[tid] = value[src_of_tid(tid)]``.
+
+    One fori_loop iteration per thread: read ``value[src]`` (dynamic gather
+    through the temporary array) and scatter into the result — exactly the
+    single-loop serialization of a parallel region containing a shuffle.
+    """
+
+    def body(tid, out):
+        src = src_of_tid(tid)
+        elem = lax.dynamic_index_in_dim(value, src, axis=-1, keepdims=True)
+        return lax.dynamic_update_index_in_dim(out, elem, tid, axis=-1)
+
+    return lax.fori_loop(0, width, body, jnp.zeros_like(value))
+
+
+# --------------------------------------------------------------------------
+# Table III shuffle rules
+# --------------------------------------------------------------------------
+
+def shfl_up(value: jnp.ndarray, delta: int, width: int) -> jnp.ndarray:
+    # r[tid] = value[tid - delta]  (clamped: keep own when tid < delta)
+    return _serial_map(
+        width, lambda tid: jnp.where(tid >= delta, tid - delta, tid), value
+    )
+
+
+def shfl_down(value: jnp.ndarray, delta: int, width: int) -> jnp.ndarray:
+    # r[tid] = value[tid + delta]  (keep own when tid + delta >= width)
+    return _serial_map(
+        width, lambda tid: jnp.where(tid + delta < width, tid + delta, tid), value
+    )
+
+
+def shfl_xor(value: jnp.ndarray, mask: int, width: int) -> jnp.ndarray:
+    # r[tid] = value[tid ^ delta]  (OOB partner: keep own value, CUDA)
+    return _serial_map(
+        width,
+        lambda tid: jnp.where((tid ^ mask) < width, tid ^ mask, tid), value)
+
+
+def shfl_idx(value: jnp.ndarray, src_lane, width: int) -> jnp.ndarray:
+    # r = value[srcLane]
+    if jnp.ndim(jnp.asarray(src_lane)) == 0:
+        src_scalar = jnp.asarray(src_lane, dtype=jnp.int32) % width
+        return _serial_map(width, lambda tid: src_scalar, value)
+    src_arr = jnp.asarray(src_lane, dtype=jnp.int32) % width
+
+    def body(tid, out):
+        # per-lane source: gather src index then value element, serially.
+        src = lax.dynamic_index_in_dim(src_arr, tid, axis=-1, keepdims=False)
+        src = jnp.max(src)  # collapse leading dims: index arrays share lanes
+        elem = lax.dynamic_index_in_dim(value, src, axis=-1, keepdims=True)
+        return lax.dynamic_update_index_in_dim(out, elem, tid, axis=-1)
+
+    # Per-lane src with differing leading dims needs the general path:
+    if src_arr.shape == value.shape:
+        def body_full(tid, out):
+            src_col = lax.dynamic_index_in_dim(src_arr, tid, axis=-1, keepdims=False)
+            # gather one element per leading index: serial inner walk
+            gathered = jnp.take_along_axis(value, src_col[..., None], axis=-1)
+            return lax.dynamic_update_index_in_dim(out, gathered, tid, axis=-1)
+        return lax.fori_loop(0, width, body_full, jnp.zeros_like(value))
+    return lax.fori_loop(0, width, body, jnp.zeros_like(value))
+
+
+# --------------------------------------------------------------------------
+# Table III vote rules — nested loop serialization (Figure 4b)
+# --------------------------------------------------------------------------
+
+def _member_bool(member_mask, width: int) -> jnp.ndarray:
+    from repro.core.hw_backend import _member_bool as _mb
+
+    return _mb(member_mask, width)
+
+
+def _nested_vote(pred: jnp.ndarray, width: int, member_mask, init, combine):
+    """Figure 4b: inner loop accumulates ``temp = combine(temp, value[tid])``
+    over the lanes of one group, a second inner loop broadcasts ``temp`` to
+    every lane.  (The outer loop over groups lives in ``primitives.py`` —
+    here the segment *is* the group.)
+    """
+    member = _member_bool(member_mask, width)
+    init_arr = jnp.full(pred.shape[:-1], init, dtype=pred.dtype if pred.dtype != bool else jnp.bool_)
+
+    def accum(tid, temp):
+        v = lax.dynamic_index_in_dim(pred, tid, axis=-1, keepdims=False)
+        m = lax.dynamic_index_in_dim(member, tid, axis=-1, keepdims=False)
+        return combine(temp, v, m)
+
+    temp = lax.fori_loop(0, width, accum, init_arr)
+
+    out = jnp.zeros(pred.shape, dtype=temp.dtype)
+
+    def bcast(tid, o):
+        return lax.dynamic_update_index_in_dim(o, temp[..., None], tid, axis=-1)
+
+    return lax.fori_loop(0, width, bcast, out)
+
+
+def vote_any(pred: jnp.ndarray, width: int, member_mask=None) -> jnp.ndarray:
+    # r = r || value[tid]
+    p = pred.astype(bool)
+    return _nested_vote(
+        p, width, member_mask, False, lambda t, v, m: t | (v & m)
+    )
+
+
+def vote_all(pred: jnp.ndarray, width: int, member_mask=None) -> jnp.ndarray:
+    # r = r && value[tid]
+    p = pred.astype(bool)
+    return _nested_vote(
+        p, width, member_mask, True, lambda t, v, m: t & (v | ~m)
+    )
+
+
+def vote_uni(value: jnp.ndarray, width: int, member_mask=None) -> jnp.ndarray:
+    member = _member_bool(member_mask, width)
+    # serial pass: find first member's value, then check equality serially.
+    big = jnp.int32(width)
+    lanes = jnp.arange(width, dtype=jnp.int32)
+    first_idx = jnp.min(jnp.where(member, lanes, big), axis=-1)
+
+    def get_first(v):
+        return jnp.take_along_axis(
+            v, jnp.broadcast_to(jnp.minimum(first_idx, width - 1)[..., None],
+                                v.shape[:-1] + (1,)), axis=-1)[..., 0]
+
+    first = get_first(value)
+
+    def accum(tid, ok):
+        v = lax.dynamic_index_in_dim(value, tid, axis=-1, keepdims=False)
+        m = lax.dynamic_index_in_dim(member, tid, axis=-1, keepdims=False)
+        return ok & ((v == first) | ~m)
+
+    ok = lax.fori_loop(0, width, accum, jnp.ones(value.shape[:-1], dtype=bool))
+    out = jnp.zeros(value.shape[:-1] + (width,), dtype=bool)
+
+    def bcast(tid, o):
+        return lax.dynamic_update_index_in_dim(o, ok[..., None], tid, axis=-1)
+
+    return lax.fori_loop(0, width, bcast, out)
+
+
+def vote_ballot(pred: jnp.ndarray, width: int, member_mask=None) -> jnp.ndarray:
+    # r = r | ((value[tid] != 0) << tid) — serial OR accumulation per word.
+    member = _member_bool(member_mask, width)
+    bits = (pred.astype(bool) & member)
+    n_words = (width + 31) // 32
+    words = []
+    for w in range(n_words):
+        lo, hi = w * 32, min((w + 1) * 32, width)
+
+        def accum(i, r, lo=lo):
+            tid = lo + i
+            v = lax.dynamic_index_in_dim(bits, tid, axis=-1, keepdims=False)
+            return r | (v.astype(jnp.uint32) << jnp.uint32(tid - lo))
+
+        words.append(
+            lax.fori_loop(0, hi - lo, accum,
+                          jnp.zeros(pred.shape[:-1], dtype=jnp.uint32))
+        )
+    out = jnp.stack(words, axis=-1)
+    if n_words == 1:
+        out = out[..., 0]
+    return out
+
+
+def match_any(value: jnp.ndarray, width: int, member_mask=None) -> jnp.ndarray:
+    if width > 32:
+        raise ValueError("match_any restricted to width <= 32")
+    member = _member_bool(member_mask, width)
+
+    def outer(tid, out):
+        mine = lax.dynamic_index_in_dim(value, tid, axis=-1, keepdims=False)
+        my_m = lax.dynamic_index_in_dim(member, tid, axis=-1, keepdims=False)
+
+        def inner(j, r):
+            v = lax.dynamic_index_in_dim(value, j, axis=-1, keepdims=False)
+            m = lax.dynamic_index_in_dim(member, j, axis=-1, keepdims=False)
+            bit = ((v == mine) & m & my_m).astype(jnp.uint32) << jnp.uint32(j)
+            return r | bit
+
+        r = lax.fori_loop(0, width, inner, jnp.zeros(value.shape[:-1], jnp.uint32))
+        return lax.dynamic_update_index_in_dim(out, r[..., None], tid, axis=-1)
+
+    return lax.fori_loop(
+        0, width, outer, jnp.zeros(value.shape[:-1] + (width,), jnp.uint32)
+    )
+
+
+# --------------------------------------------------------------------------
+# Reductions / scans: serialized accumulation (the reduce benchmark's SW form)
+# --------------------------------------------------------------------------
+
+_INITS = {"sum": 0, "max": None, "min": None, "prod": 1, "or": 0, "and": -1}
+
+
+def warp_reduce(value: jnp.ndarray, width: int, op: str = "sum") -> jnp.ndarray:
+    from repro.core.hw_backend import _REDUCE_OPS
+
+    fn = _REDUCE_OPS[op]
+
+    def accum(tid, temp):
+        v = lax.dynamic_index_in_dim(value, tid, axis=-1, keepdims=False)
+        return fn(temp, v)
+
+    first = lax.dynamic_index_in_dim(value, 0, axis=-1, keepdims=False)
+    temp = lax.fori_loop(1, width, accum, first)
+    out = jnp.zeros_like(value)
+
+    def bcast(tid, o):
+        return lax.dynamic_update_index_in_dim(o, temp[..., None], tid, axis=-1)
+
+    return lax.fori_loop(0, width, bcast, out)
+
+
+def warp_scan(value: jnp.ndarray, width: int, op: str = "sum") -> jnp.ndarray:
+    from repro.core.hw_backend import _REDUCE_OPS
+
+    fn = _REDUCE_OPS[op]
+    out = jnp.zeros_like(value)
+
+    def body(tid, carry):
+        acc, out = carry
+        v = lax.dynamic_index_in_dim(value, tid, axis=-1, keepdims=False)
+        acc = jnp.where(tid == 0, v, fn(acc, v))
+        out = lax.dynamic_update_index_in_dim(out, acc[..., None], tid, axis=-1)
+        return acc, out
+
+    first = lax.dynamic_index_in_dim(value, 0, axis=-1, keepdims=False)
+    _, out = lax.fori_loop(0, width, body, (first, out))
+    return out

@@ -1,0 +1,121 @@
+"""Flash attention Pallas TPU kernel with warp-style in-register reductions.
+
+The online-softmax running max / running sum are exactly the paper's
+warp-reduce pattern applied per query row: they live in VMEM scratch across
+the KV grid axis and never round-trip to HBM (the HW path).  The SW-path
+comparison point is the naive materialized-scores attention in ``ref.py``.
+
+Grid: (batch*heads, q_blocks, kv_blocks), kv innermost with "arbitrary"
+semantics so the scratch accumulator carries across kv steps.  BlockSpecs
+keep q/k/v/o tiles MXU-aligned (block_q x d and block_k x d in VMEM).
+
+VMEM budget per step (fp32): bq*d + 2*bk*d + bq*bk + bq*(d+2) floats —
+with bq=bk=512, d=128: ~1.4 MB, comfortably under the ~16 MB/core VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_MASK_VALUE = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  kv_steps: int):
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)            # (bq, d)
+    k = k_ref[0].astype(jnp.float32)            # (bk, d)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    if causal:
+        q_ids = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                        (block_q, block_k), 0)
+        k_ids = kj * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                        (block_q, block_k), 1)
+        s = jnp.where(q_ids >= k_ids, s, DEFAULT_MASK_VALUE)
+
+    m_prev = m_scr[...]                          # (bq, 1)
+    m_cur = jnp.max(s, axis=-1, keepdims=True)   # lane-axis reduce (registers)
+    m_new = jnp.maximum(m_prev, m_cur)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                       # (bq, bk)
+    l_new = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)             # (bk, d)
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kj == kv_steps - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> zero output
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, scale: Optional[float] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q: (bh, sq, d), k/v: (bh, skv, d) — heads pre-flattened into batch.
+
+    GQA is handled by the caller (repeat/reshape of kv to match q heads)."""
+    from repro.kernels.common import default_interpret
+
+    if interpret is None:
+        interpret = default_interpret()
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    q_steps = pl.cdiv(sq, block_q)
+    kv_steps = pl.cdiv(skv, block_k)
+    grid = (bh, q_steps, kv_steps)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal,
+        block_q=block_q, block_k=block_k, kv_steps=kv_steps)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q, k, v)

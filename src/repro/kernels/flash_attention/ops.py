@@ -1,0 +1,33 @@
+"""Jitted wrapper for the flash attention kernel (with GQA head expansion)."""
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                             "interpret"))
+def mha_op(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+           causal: bool = True, block_q: int = 512, block_k: int = 512,
+           interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q: (b, sq, hq, d); k/v: (b, skv, hkv, d) with hq % hkv == 0.
+
+    Returns (b, sq, hq, d)."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    group = hq // hkv
+    skv = k.shape[1]
+    # expand kv heads to q heads (GQA), flatten (b, h) into the grid batch
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hq, skv, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hq, skv, d)
+    o = flash_attention(qf, kf, vf, causal=causal, block_q=block_q,
+                        block_k=block_k, interpret=interpret)
+    return o.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,25 @@
+"""Oracle attention: materialized scores, fp32 softmax (the SW-path shape)."""
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qi = jnp.arange(sq)[:, None]
+        ki = jnp.arange(skv)[None, :]
+        s = jnp.where(qi >= ki, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    p = p / jnp.where(l == 0.0, 1.0, l)
+    p = jnp.where(jnp.isfinite(s), p, 0.0)  # fully-masked rows
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,18 @@
+"""Jitted wrapper for the tiled matmul kernel."""
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.matmul.matmul import matmul as _matmul
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                             "interpret"))
+def matmul_op(a: jnp.ndarray, b: jnp.ndarray, block_m: int = 256,
+              block_n: int = 256, block_k: int = 512,
+              interpret: Optional[bool] = None) -> jnp.ndarray:
+    return _matmul(a, b, block_m=block_m, block_n=block_n, block_k=block_k,
+                   interpret=interpret)

@@ -1,0 +1,74 @@
+"""MoE top-k gating Pallas kernel using vote/match semantics.
+
+Expert routing is the natural production consumer of the paper's vote
+primitive: selecting the top-k experts per token is k rounds of
+(argmax → ballot-mask-out), all in registers over an (tokens, experts) VMEM
+block.  Experts axis <= 128 fits one lane row (OLMoE: 64, Granite: 32).
+
+Outputs: combine weights (tokens, experts) — softmax over the selected
+experts, zero elsewhere — and the selection mask.  Downstream dispatch uses
+the dense one-hot form (dry-run friendly, shardable over the expert axis).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _gating_kernel(logits_ref, w_ref, m_ref, *, top_k: int):
+    x = logits_ref[...].astype(jnp.float32)          # (bt, E)
+    remaining = x
+    selected = jnp.zeros_like(x, dtype=jnp.bool_)
+    for _ in range(top_k):  # k rounds of vote-style argmax extraction
+        mx = jnp.max(remaining, axis=-1, keepdims=True)     # lane reduce
+        hit = remaining == mx                                # match_any-style
+        # break ties toward the lowest expert id (first true lane):
+        first = jnp.cumsum(hit.astype(jnp.int32), axis=-1) == 1
+        hit = hit & first
+        selected = selected | hit
+        remaining = jnp.where(hit, _NEG, remaining)
+    # softmax over the selected experts only
+    masked = jnp.where(selected, x, _NEG)
+    mx = jnp.max(masked, axis=-1, keepdims=True)
+    p = jnp.exp(masked - mx)
+    p = jnp.where(selected, p, 0.0)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    w_ref[...] = p.astype(w_ref.dtype)
+    m_ref[...] = selected.astype(m_ref.dtype)
+
+
+def moe_gating(logits: jnp.ndarray, top_k: int, *, block_tokens: int = 512,
+               interpret: Optional[bool] = None):
+    """logits: (tokens, experts) -> (weights (t,E) fp32, mask (t,E) int32)."""
+    from repro.kernels.common import default_interpret
+
+    if interpret is None:
+        interpret = default_interpret()
+    t, e = logits.shape
+    block_tokens = min(block_tokens, t)
+    grid = (pl.cdiv(t, block_tokens),)
+    return pl.pallas_call(
+        functools.partial(_gating_kernel, top_k=top_k),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_tokens, e), lambda i: (i, 0),
+                               memory_space=pltpu.VMEM)],
+        out_specs=[
+            pl.BlockSpec((block_tokens, e), lambda i: (i, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((block_tokens, e), lambda i: (i, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((t, e), jnp.float32),
+            jax.ShapeDtypeStruct((t, e), jnp.int32),
+        ],
+        interpret=interpret,
+    )(logits)

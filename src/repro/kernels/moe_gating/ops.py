@@ -1,0 +1,15 @@
+"""Jitted wrapper for the MoE gating kernel."""
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gating.moe_gating import moe_gating as _moe_gating
+
+
+@functools.partial(jax.jit, static_argnames=("top_k", "interpret"))
+def moe_gating_op(logits: jnp.ndarray, top_k: int,
+                  interpret: Optional[bool] = None):
+    return _moe_gating(logits, top_k, interpret=interpret)

@@ -1,0 +1,16 @@
+"""Oracle gating: jax.lax.top_k + masked softmax."""
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_gating_ref(logits: jnp.ndarray, top_k: int):
+    x = logits.astype(jnp.float32)
+    t, e = x.shape
+    _, idx = jax.lax.top_k(x, top_k)
+    mask = jnp.zeros((t, e), bool).at[jnp.arange(t)[:, None], idx].set(True)
+    masked = jnp.where(mask, x, -1e30)
+    p = jax.nn.softmax(masked, axis=-1)
+    p = jnp.where(mask, p, 0.0)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p.astype(jnp.float32), mask.astype(jnp.int32)

@@ -1,0 +1,17 @@
+"""Jitted wrapper: mean of the kernel's partial sum."""
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.mse.mse import mse_partial_sum
+
+
+@functools.partial(jax.jit, static_argnames=("warp_size", "interpret"))
+def mse_op(pred: jnp.ndarray, target: jnp.ndarray, warp_size: int = 32,
+           interpret: Optional[bool] = None) -> jnp.ndarray:
+    total = mse_partial_sum(pred.ravel(), target.ravel(),
+                            warp_size=warp_size, interpret=interpret)
+    return total / pred.size

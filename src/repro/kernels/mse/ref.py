@@ -1,0 +1,8 @@
+"""Oracle MSE (fp32)."""
+
+import jax.numpy as jnp
+
+
+def mse_ref(pred: jnp.ndarray, target: jnp.ndarray) -> jnp.ndarray:
+    d = pred.astype(jnp.float32) - target.astype(jnp.float32)
+    return jnp.mean(d * d)

@@ -1,0 +1,15 @@
+"""Jitted wrapper for the fused RMSNorm kernel."""
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm as _rmsnorm
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "interpret"))
+def rmsnorm_op(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    return _rmsnorm(x, w, eps, interpret=interpret)

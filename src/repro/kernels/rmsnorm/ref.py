@@ -1,0 +1,11 @@
+"""Oracle RMSNorm in plain jnp (fp32 accumulation, same as the kernel)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps) * w.astype(jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,15 @@
+"""Jitted wrapper for the tile_reduce kernel."""
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.tile_reduce.tile_reduce import tile_reduce as _tile_reduce
+
+
+@functools.partial(jax.jit, static_argnames=("tile_size", "op", "interpret"))
+def tile_reduce_op(x: jnp.ndarray, tile_size: int, op: str = "sum",
+                   interpret: Optional[bool] = None) -> jnp.ndarray:
+    return _tile_reduce(x, tile_size, op, interpret=interpret)

@@ -1,0 +1,12 @@
+"""Oracle: segment fold over tiles (paper Table III, reduce over tile)."""
+
+import jax.numpy as jnp
+
+_NP_OPS = {"sum": jnp.sum, "max": jnp.max, "min": jnp.min}
+
+
+def tile_reduce_ref(x: jnp.ndarray, tile_size: int, op: str = "sum") -> jnp.ndarray:
+    n, w = x.shape
+    seg = x.reshape(n, w // tile_size, tile_size)
+    red = _NP_OPS[op](seg, axis=-1, keepdims=True)
+    return jnp.broadcast_to(red, seg.shape).reshape(n, w)

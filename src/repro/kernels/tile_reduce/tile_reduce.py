@@ -1,0 +1,64 @@
+"""Pallas TPU kernel for cooperative-group tiled reduction (``vx_tile`` + reduce).
+
+The butterfly property makes tiles free on the lane lattice: ``lane ^ offset``
+stays inside a power-of-two segment whenever ``offset < tile_size``, so a
+tiled reduction is simply the shfl_xor tree *truncated* to log2(tile_size)
+steps — no reshape, no segment bookkeeping, exactly how ``cg::reduce`` on a
+``thread_block_tile<g>`` executes on NVIDIA hardware and how the merged-warp
+register crossbar of the paper serves sub-warp groups.
+
+Block layout: (block_rows, warp_size) in VMEM; each butterfly step is one
+cross-lane permute + one VPU ALU op.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_OPS = {
+    "sum": jnp.add,
+    "max": jnp.maximum,
+    "min": jnp.minimum,
+}
+
+
+def tile_reduce_kernel(x_ref, o_ref, *, tile_size: int, op: str, width: int):
+    x = x_ref[...]
+    fn = _OPS[op]
+    lanes = jax.lax.broadcasted_iota(jnp.int32, x.shape, dimension=x.ndim - 1)
+    offset = tile_size // 2
+    while offset >= 1:
+        src = lanes ^ offset  # stays within the tile segment: offset < tile_size
+        x = fn(x, jnp.take_along_axis(x, src, axis=-1))
+        offset //= 2
+    o_ref[...] = x
+
+
+def tile_reduce(x: jnp.ndarray, tile_size: int, op: str = "sum", *,
+                block_rows: int = 256,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    from repro.kernels.common import default_interpret
+
+    if interpret is None:
+        interpret = default_interpret()
+    n, w = x.shape
+    if tile_size & (tile_size - 1) or tile_size > w:
+        raise ValueError(f"tile_size {tile_size} must be a power of two <= {w}")
+    block_rows = min(block_rows, n)
+    grid = (pl.cdiv(n, block_rows),)
+    return pl.pallas_call(
+        functools.partial(tile_reduce_kernel, tile_size=tile_size, op=op, width=w),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, w), lambda i: (i, 0),
+                               memory_space=pltpu.VMEM)],
+        out_specs=pl.BlockSpec((block_rows, w), lambda i: (i, 0),
+                               memory_space=pltpu.VMEM),
+        out_shape=jax.ShapeDtypeStruct((n, w), x.dtype),
+        interpret=interpret,
+    )(x)

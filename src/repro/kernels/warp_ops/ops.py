@@ -1,0 +1,26 @@
+"""Jitted public wrappers for the warp_ops Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.warp_ops.warp_ops import shfl as _shfl, vote as _vote
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "imm", "interpret"))
+def shfl_op(x: jnp.ndarray, mode: str, imm: int,
+            interpret: Optional[bool] = None) -> jnp.ndarray:
+    """x: (num_warps_total, warp_size) register block; returns shuffled block."""
+    return _shfl(x, mode, imm, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def vote_op(pred: jnp.ndarray, mode: str,
+            member_mask: Optional[jnp.ndarray] = None,
+            interpret: Optional[bool] = None) -> jnp.ndarray:
+    """pred: (num_warps_total, warp_size); mode in all/any/uni/ballot."""
+    return _vote(pred, mode, member_mask, interpret=interpret)

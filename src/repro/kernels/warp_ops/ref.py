@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the warp_ops kernel — Table III semantics."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import hw_backend as _hw
+
+
+def shfl_ref(x: jnp.ndarray, mode: str, imm: int) -> jnp.ndarray:
+    w = x.shape[-1]
+    if mode == "up":
+        return _hw.shfl_up(x, imm, w)
+    if mode == "down":
+        return _hw.shfl_down(x, imm, w)
+    if mode == "bfly":
+        return _hw.shfl_xor(x, imm, w)
+    if mode == "idx":
+        return _hw.shfl_idx(x, imm, w)
+    raise ValueError(mode)
+
+
+def vote_ref(pred: jnp.ndarray, mode: str,
+             member_mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    w = pred.shape[-1]
+    mm = None if member_mask is None else jnp.broadcast_to(member_mask, pred.shape).astype(bool)
+    if mode == "all":
+        return _hw.vote_all(pred, w, mm).astype(jnp.int32)
+    if mode == "any":
+        return _hw.vote_any(pred, w, mm).astype(jnp.int32)
+    if mode == "uni":
+        return _hw.vote_uni(pred, w, mm).astype(jnp.int32)
+    if mode == "ballot":
+        return _hw.vote_ballot(pred, w, mm)[..., None].astype(jnp.uint32)
+    raise ValueError(mode)

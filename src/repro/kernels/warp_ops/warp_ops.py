@@ -1,0 +1,137 @@
+"""Pallas TPU kernel for the ``vx_shfl`` / ``vx_vote`` instruction family.
+
+The paper's HW solution routes register values through a modified ALU +
+crossbar so lanes exchange without memory traffic.  The TPU analogue: values
+live in a VMEM block ``(block_rows, warp_size)``; shuffles are cross-lane
+vector permutes (``take_along_axis`` with a static permutation → Mosaic
+lowers to VREG lane shuffles on the 8x128 lattice), votes are lane-axis
+reductions on the VPU.  Nothing is spilled: one HBM→VMEM read of the operand
+block, one VMEM→HBM write of the result.
+
+Instruction encoding analogy (Table I): ``mode`` is the func field; ``delta``
+/ ``src_lane`` are the immediates; the member mask arrives as a register
+operand (a second input block).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+SHFL_MODES = ("up", "down", "bfly", "idx")
+VOTE_MODES = ("all", "any", "uni", "ballot")
+
+
+def _lane_perm_shfl(mode: str, width: int, imm: int) -> jnp.ndarray:
+    """Static source-lane permutation for a shuffle instruction."""
+    lanes = jnp.arange(width, dtype=jnp.int32)
+    if mode == "up":
+        src = jnp.where(lanes >= imm, lanes - imm, lanes)
+    elif mode == "down":
+        src = jnp.where(lanes + imm < width, lanes + imm, lanes)
+    elif mode == "bfly":
+        src = lanes ^ imm
+    elif mode == "idx":
+        src = jnp.full((width,), imm % width, jnp.int32)
+    else:
+        raise ValueError(mode)
+    return src
+
+
+def shfl_kernel(x_ref, o_ref, *, mode: str, imm: int, width: int):
+    x = x_ref[...]
+    src = _lane_perm_shfl(mode, width, imm)
+    src = jnp.broadcast_to(src, x.shape)
+    o_ref[...] = jnp.take_along_axis(x, src, axis=-1)
+
+
+def vote_kernel(p_ref, m_ref, o_ref, *, mode: str, width: int):
+    """Vote over the lane axis; member mask is a register operand block."""
+    p = p_ref[...] != 0
+    member = m_ref[...] != 0
+    if mode == "all":
+        r = jnp.all(p | ~member, axis=-1, keepdims=True)
+        o_ref[...] = jnp.broadcast_to(r, p.shape).astype(o_ref.dtype)
+    elif mode == "any":
+        r = jnp.any(p & member, axis=-1, keepdims=True)
+        o_ref[...] = jnp.broadcast_to(r, p.shape).astype(o_ref.dtype)
+    elif mode == "uni":
+        v = p_ref[...]
+        first = v[..., 0:1]  # member-0 reference (mask must include lane 0)
+        r = jnp.all((v == first) | ~member, axis=-1, keepdims=True)
+        o_ref[...] = jnp.broadcast_to(r, p.shape).astype(o_ref.dtype)
+    elif mode == "ballot":
+        shifts = jax.lax.broadcasted_iota(jnp.uint32, p.shape, dimension=p.ndim - 1)
+        bits = jnp.where(p & member, jnp.uint32(1) << shifts, jnp.uint32(0))
+        o_ref[...] = jnp.sum(bits, axis=-1, keepdims=True).astype(o_ref.dtype)
+    else:
+        raise ValueError(mode)
+
+
+def _grid_call(kernel, x, out_shape, block_rows, extra_inputs=()):
+    n, w = x.shape
+    grid = (pl.cdiv(n, block_rows),)
+    in_specs = [pl.BlockSpec((block_rows, w), lambda i: (i, 0),
+                             memory_space=pltpu.VMEM)]
+    for _ in extra_inputs:
+        in_specs.append(pl.BlockSpec((block_rows, w), lambda i: (i, 0),
+                                     memory_space=pltpu.VMEM))
+    out_w = out_shape.shape[1]
+    out_spec = pl.BlockSpec((block_rows, out_w), lambda i: (i, 0),
+                            memory_space=pltpu.VMEM)
+    return grid, in_specs, out_spec
+
+
+def shfl(x: jnp.ndarray, mode: str, imm: int, *, block_rows: int = 256,
+         interpret: Optional[bool] = None) -> jnp.ndarray:
+    from repro.kernels.common import default_interpret
+
+    if interpret is None:
+        interpret = default_interpret()
+    n, w = x.shape
+    block_rows = min(block_rows, n)
+    out_shape = jax.ShapeDtypeStruct((n, w), x.dtype)
+    grid, in_specs, out_spec = _grid_call(None, x, out_shape, block_rows)
+    return pl.pallas_call(
+        functools.partial(shfl_kernel, mode=mode, imm=imm, width=w),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x)
+
+
+def vote(pred: jnp.ndarray, mode: str, member_mask: Optional[jnp.ndarray] = None,
+         *, block_rows: int = 256, interpret: Optional[bool] = None) -> jnp.ndarray:
+    from repro.kernels.common import default_interpret
+
+    if interpret is None:
+        interpret = default_interpret()
+    n, w = pred.shape
+    block_rows = min(block_rows, n)
+    if member_mask is None:
+        member_mask = jnp.ones((n, w), jnp.int32)
+    else:
+        member_mask = jnp.broadcast_to(member_mask, (n, w)).astype(jnp.int32)
+    if mode == "ballot":
+        if w > 32:
+            raise ValueError("ballot kernel emits one 32-bit word per warp")
+        out_shape = jax.ShapeDtypeStruct((n, 1), jnp.uint32)
+    else:
+        out_shape = jax.ShapeDtypeStruct((n, w), jnp.int32)
+    grid, in_specs, out_spec = _grid_call(None, pred, out_shape, block_rows,
+                                          extra_inputs=(member_mask,))
+    return pl.pallas_call(
+        functools.partial(vote_kernel, mode=mode, width=w),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(pred.astype(jnp.int32), member_mask)

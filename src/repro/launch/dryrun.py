@@ -1,0 +1,368 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This is the proof that the distribution config is coherent without real
+hardware: ``jax.jit(step).lower(**ShapeDtypeStructs).compile()`` must
+succeed on the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh for
+every assigned cell.  No arrays are ever allocated — inputs are
+ShapeDtypeStruct stand-ins and the compiled executable is only analyzed
+(memory_analysis / cost_analysis / HLO collective scan), never run.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmoe-1b-7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out artifacts/dryrun
+"""
+
+import argparse
+import functools
+import gzip
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import get_config, list_archs
+from repro.dist.sharding import (
+    batch_pspecs,
+    cache_pspecs,
+    param_pspecs,
+    shardings,
+    ShardingPolicy,
+    DEFAULT_POLICY,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import SHAPES, ShapeCell, get_shape
+from repro.models.lm import Model
+from repro.optim.optimizer import AdamWConfig, AdamWState
+from repro.roofline.analysis import (
+    model_flops,
+    parse_hlo_collectives_trip_aware,
+    roofline_report,
+)
+from repro.roofline.jaxpr_cost import trace_cost
+from repro.train.step import TrainState, init_train_state, make_train_step
+
+
+# ---------------------------------------------------------------------------
+# Input stand-ins (ShapeDtypeStruct only — never allocated)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg, cell: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Batch stand-ins for one cell (tokens + stubbed modality frontend)."""
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "decode":
+        specs = {"tokens": jax.ShapeDtypeStruct((b,), jnp.int32),
+                 "pos": jax.ShapeDtypeStruct((b,), jnp.int32)}
+        return specs
+    specs = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.n_frontend_tokens:
+        specs["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+    return specs
+
+
+def skip_reason(cfg, cell: ShapeCell) -> Optional[str]:
+    if cell.name == "long_500k" and not cfg.supports_long_context:
+        return ("full-attention arch: 500k dense-KV decode is the quadratic "
+                "case the shape note excludes (DESIGN.md §6)")
+    return None
+
+
+def _chunk_q(cell: ShapeCell) -> Optional[int]:
+    # bound the live score tile for long training/prefill sequences
+    return 512 if (cell.kind != "decode" and cell.seq_len > 2048) else None
+
+
+# ---------------------------------------------------------------------------
+# Cell builders: (fn, example_args, in_shardings, donate)
+# ---------------------------------------------------------------------------
+
+def _act_sharding(cfg, cell, mesh, policy):
+    """Residual-stream pin: batch over the dp axes (micro-batch under
+    accumulation keeps the same leading-axis spec).
+
+    A sequence-dim fallback pin (for B < dp extent) was tried and REFUTED:
+    pinning S across the chunked-attention scan forced per-chunk resharding
+    (olmoe prefill X: 44 -> 192 s).  Cells whose batch does not divide the
+    dp axes are left unpinned. (EXPERIMENTS.md §Perf iter 4)"""
+    dp = policy.dp_axes(mesh)
+    if (not policy.pin_activations or not dp
+            or cell.global_batch % _mesh_size(mesh, dp) != 0):
+        return None
+    axis = dp if len(dp) > 1 else dp[0]
+    return NamedSharding(mesh, P(axis, None, None))
+
+
+def _mesh_size(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def build_train(cfg, cell, mesh, policy: ShardingPolicy = DEFAULT_POLICY,
+                accum_steps: int = 1, opt: bool = False):
+    model = Model(cfg, chunk_q=_chunk_q(cell), remat=True,
+                  param_dtype=jnp.float32, compute_dtype=jnp.bfloat16,
+                  act_sharding=_act_sharding(cfg, cell, mesh, policy),
+                  remat_policy="save_attn" if opt else None)
+    opt_cfg = AdamWConfig()
+    step = make_train_step(model, opt_cfg, vocab_chunks=8,
+                           accum_steps=accum_steps, cast_bf16=opt)
+    state_shapes = jax.eval_shape(
+        functools.partial(init_train_state, model), jax.random.PRNGKey(0))
+    pspec = param_pspecs(state_shapes.params, mesh, policy)
+    state_spec = TrainState(
+        params=pspec,
+        opt=AdamWState(step=P(), m=pspec, v=pspec))
+    batch_shapes = input_specs(cfg, cell)
+    batch_spec = batch_pspecs(batch_shapes, mesh, policy)
+    in_sh = (shardings(state_spec, mesh), shardings(batch_spec, mesh))
+    return step, (state_shapes, batch_shapes), in_sh, (0,)
+
+
+def build_prefill(cfg, cell, mesh, policy: ShardingPolicy = DEFAULT_POLICY):
+    model = Model(cfg, chunk_q=_chunk_q(cell), remat=False,
+                  param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+                  act_sharding=_act_sharding(cfg, cell, mesh, policy))
+
+    def prefill_step(params, batch):
+        return model.prefill(params, batch, cell.seq_len)
+
+    param_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    pspec = param_pspecs(param_shapes, mesh, policy)
+    batch_shapes = input_specs(cfg, cell)
+    batch_spec = batch_pspecs(batch_shapes, mesh, policy)
+    in_sh = (shardings(pspec, mesh), shardings(batch_spec, mesh))
+    return prefill_step, (param_shapes, batch_shapes), in_sh, ()
+
+
+def build_decode(cfg, cell, mesh, policy: ShardingPolicy = DEFAULT_POLICY):
+    model = Model(cfg, remat=False, param_dtype=jnp.bfloat16,
+                  compute_dtype=jnp.bfloat16)
+
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = model.decode_step(params, cache, tokens, pos)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), cache
+
+    b = cell.global_batch
+    param_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(b, cell.seq_len))
+    pspec = param_pspecs(param_shapes, mesh, policy)
+    cspec = cache_pspecs(cache_shapes, mesh, policy)
+    io = input_specs(cfg, cell)
+    iospec = batch_pspecs(io, mesh, policy)
+    in_sh = (shardings(pspec, mesh), shardings(cspec, mesh),
+             NamedSharding(mesh, iospec["tokens"]),
+             NamedSharding(mesh, iospec["pos"]))
+    args = (param_shapes, cache_shapes, io["tokens"], io["pos"])
+    return serve_step, args, in_sh, (1,)
+
+
+_BUILDERS = {"train": build_train, "prefill": build_prefill,
+             "decode": build_decode}
+
+
+# ---------------------------------------------------------------------------
+# Run one cell
+# ---------------------------------------------------------------------------
+
+def optimized_variant(cfg, strategy: str = "fsdp",
+                      mesh_kind: str = "single") -> "tuple":
+    """Beyond-paper-baseline optimized configurations (§Perf):
+      common: bf16 PV contraction, GShard MoE token grouping, vocab padding
+      'tp':   head-aware Megatron-style attention TP (16x16 FSDP x TP)
+      'fsdp': pure ZeRO-3 over all chips (tp=1) — batch over the whole pod,
+              params/optimizer fully sharded, per-layer weight gathers are
+              the only collectives."""
+    import dataclasses
+    opt_cfg = dataclasses.replace(
+        cfg, pv_bf16=True,
+        moe_group_size=2048 if cfg.n_experts else 0,
+        pad_vocab_to=256)
+    if strategy == "tp":
+        policy = ShardingPolicy(head_aware=True, n_heads=cfg.n_heads,
+                                n_kv_heads=cfg.n_kv_heads,
+                                pin_activations=True)
+    elif mesh_kind == "multi":
+        # ZeRO-3 inside each pod, plain DP (replicated params + gradient
+        # all-reduce over the slow cross-pod hop) between pods
+        policy = ShardingPolicy(fsdp_axis=("data", "model"), tp_axis=None,
+                                batch_axes=("pod", "data"),
+                                pin_activations=True)
+    elif strategy == "kvseq":
+        # decode-only: baseline layout + sequence-sharded KV cache
+        policy = ShardingPolicy(kv_seq_tp=True)
+    else:
+        policy = ShardingPolicy(fsdp_axis=("data", "model"), tp_axis=None,
+                                pin_activations=True)
+    return opt_cfg, policy
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str,
+             policy: ShardingPolicy = DEFAULT_POLICY,
+             keep_hlo: bool = False, opt: bool = False,
+             strategy: str = "fsdp") -> Dict:
+    cfg = get_config(arch)
+    cell = get_shape(shape)
+    reason = skip_reason(cfg, cell)
+    base = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+            "kind": cell.kind,
+            "variant": f"opt-{strategy}" if opt else "baseline"}
+    if reason:
+        return dict(base, status="SKIP", reason=reason)
+
+    if opt:
+        cfg, policy = optimized_variant(cfg, strategy, mesh_kind)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = mesh.devices.size
+    if cell.kind == "train":
+        # opt-tp: microbatch accumulation bounds the remat carry stack
+        # (L x B_local x S x d) so the cell fits 16 GB HBM per chip.
+        # opt-fsdp spreads the batch over every chip instead (B_local=1),
+        # so no accumulation is needed (and micro-batches would no longer
+        # divide the dp axis).
+        accum = 1
+        if opt and strategy == "tp":
+            accum = 16
+        elif opt and mesh_kind == "multi":
+            accum = 8  # activations replicated over 'model' between pods
+        fn, args, in_sh, donate = build_train(
+            cfg, cell, mesh, policy, accum_steps=accum, opt=opt)
+    else:
+        fn, args, in_sh, donate = _BUILDERS[cell.kind](cfg, cell, mesh,
+                                                       policy)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh,
+                          donate_argnums=donate).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    # XLA's cost analysis counts while (scan) bodies ONCE — useless for an
+    # 80-layer scanned stack.  Primary accounting is the trip-count-aware
+    # jaxpr walker (global; divided by device count); the raw HLO numbers
+    # are retained for reference.
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    jc = trace_cost(fn, *args)
+    flops = jc["flops_total"] / n_dev
+    bytes_acc = jc["bytes_total"] / n_dev
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            if hasattr(ma, k):
+                mem[k] = int(getattr(ma, k))
+    except Exception as e:  # pragma: no cover - backend-dependent
+        mem["error"] = str(e)
+
+    hlo = compiled.as_text()
+    colls = parse_hlo_collectives_trip_aware(hlo)
+    mf = model_flops(cfg, cell.seq_len, cell.global_batch, cell.kind)
+    report = roofline_report(flops_per_dev=flops, bytes_per_dev=bytes_acc,
+                             collectives=colls, n_devices=n_dev,
+                             model_flops_total=mf)
+    result = dict(
+        base,
+        status="OK",
+        n_devices=n_dev,
+        flops_per_dev=flops,
+        bytes_per_dev=bytes_acc,
+        hlo_flops_per_dev=hlo_flops,
+        hlo_bytes_per_dev=hlo_bytes,
+        memory=mem,
+        lower_s=round(t_lower, 2),
+        compile_s=round(t_compile, 2),
+        hlo_lines=hlo.count("\n"),
+        roofline=report,
+    )
+    if keep_hlo:
+        result["hlo"] = hlo
+    return result
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def iter_cells():
+    for arch in list_archs():
+        for cell in SHAPES:
+            yield arch, cell.name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--opt", action="store_true",
+                    help="optimized variant (bf16 PV, MoE grouping, vocab "
+                         "padding + sharding strategy) — §Perf comparisons")
+    ap.add_argument("--opt-strategy", default="fsdp",
+                    choices=["fsdp", "tp", "kvseq"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        cells = list(iter_cells())
+    elif args.arch and not args.shape:
+        cells = [(args.arch, c.name) for c in SHAPES]
+    else:
+        cells = [(args.arch, args.shape)]
+    os.makedirs(args.out, exist_ok=True)
+
+    failures = 0
+    for arch, shape in cells:
+        for mesh_kind in meshes:
+            tag = f"{arch}__{shape}__{mesh_kind}"
+            try:
+                res = run_cell(arch, shape, mesh_kind, keep_hlo=True,
+                               opt=args.opt, strategy=args.opt_strategy)
+            except Exception as e:
+                failures += 1
+                res = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                       "status": "FAIL", "error": str(e),
+                       "traceback": traceback.format_exc()}
+            hlo = res.pop("hlo", None)
+            if hlo is not None:
+                with gzip.open(os.path.join(args.out, tag + ".hlo.txt.gz"),
+                               "wt") as f:
+                    f.write(hlo)
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(res, f, indent=1)
+            if res["status"] == "OK":
+                r = res["roofline"]
+                print(f"OK   {tag:60s} bottleneck={r['bottleneck']:10s} "
+                      f"C={r['compute_s']:.2e} M={r['memory_s']:.2e} "
+                      f"X={r['collective_s']:.2e} "
+                      f"MFU~{100 * r['roofline_fraction_mfu']:.1f}%",
+                      flush=True)
+            elif res["status"] == "SKIP":
+                print(f"SKIP {tag:60s} {res['reason'][:60]}", flush=True)
+            else:
+                print(f"FAIL {tag:60s} {res['error'][:100]}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Production mesh builders.
+
+Functions, not module-level constants — importing this module never touches
+jax device state (device count is locked on first jax init, and only
+``dryrun.py`` sets the 512-device XLA flag).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips with a 'pod' axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Tiny mesh over however many host devices exist (tests/examples)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,304 @@
+"""Attention: GQA (with optional chunked-flash lowering) and MLA.
+
+The flash-style chunked form is the HW-path story at the XLA level: the
+online-softmax running max/sum are register-resident lane reductions (the
+warp-reduce pattern), and chunking bounds the score tile exactly like the
+Pallas kernel's BlockSpec does.  ``repro.kernels.flash_attention`` is the
+explicit-kernel version; this module is the SPMD-friendly jnp lowering used
+inside the big models (safe to pjit/shard, compiles on CPU).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rope_freqs
+
+NEG_INF = -1e30
+
+
+def _scores_mask(sq: int, skv: int, q_offset, causal: bool):
+    if not causal:
+        return None
+    qi = q_offset + jnp.arange(sq)[:, None]
+    ki = jnp.arange(skv)[None, :]
+    return qi >= ki
+
+
+def gqa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, q_offset: int = 0,
+                  kv_valid_len: Optional[jnp.ndarray] = None,
+                  chunk_q: Optional[int] = None,
+                  pv_bf16: bool = False) -> jnp.ndarray:
+    """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D), Hq % Hkv == 0.
+
+    chunk_q: when set and Sq > chunk_q, scan over query chunks with online
+    softmax — activation memory O(chunk_q * Skv) instead of O(Sq * Skv).
+    pv_bf16: compute the probability x value contraction in bf16 (softmax
+    max/sum stay fp32) — halves the dominant score-tensor traffic.
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]  # MLA: value head dim may differ from qk head dim
+    g = hq // hkv
+    scale = d ** -0.5
+    qg = q.reshape(b, sq, hkv, g, d)
+
+    def full_attn(qc, q_off):
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qc.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale
+        sq_c = qc.shape[1]
+        if causal:
+            qi = q_off + jnp.arange(sq_c)[:, None]
+            ki = jnp.arange(skv)[None, :]
+            s = jnp.where(qi >= ki, s, NEG_INF)
+        if kv_valid_len is not None:
+            ki = jnp.arange(skv)
+            valid = ki[None, :] < kv_valid_len[:, None]  # (B, Skv)
+            s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        if pv_bf16:
+            o = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(jnp.bfloat16),
+                           v.astype(jnp.bfloat16)).astype(jnp.float32)
+        else:
+            o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+        return o.reshape(b, sq_c, hq, dv).astype(q.dtype)
+
+    if chunk_q is None or sq <= chunk_q or sq % chunk_q != 0:
+        return full_attn(qg, q_offset)
+
+    n_chunks = sq // chunk_q
+    qs = qg.reshape(b, n_chunks, chunk_q, hkv, g, d).transpose(1, 0, 2, 3, 4, 5)
+
+    def body(carry, inp):
+        idx, qc = inp
+        o = full_attn(qc, q_offset + idx * chunk_q)
+        return carry, o
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(n_chunks), qs))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, hq, dv)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+    """One-token decode: q (B, 1, Hq, D), caches (B, Smax, Hkv, D),
+    pos (B,) current position (cache filled up to and including pos)."""
+    b, _, hq, d = q.shape
+    smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    scale = d ** -0.5
+    qg = q.reshape(b, hkv, g, d)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    ki = jnp.arange(smax)
+    s = jnp.where((ki[None, :] <= pos[:, None])[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block: projections + rope + cache plumbing
+# ---------------------------------------------------------------------------
+
+def init_gqa_params(key, cfg, dtype=jnp.float32):
+    from repro.models.layers import dense_init
+
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, hq * dh, dtype),
+        "wk": dense_init(ks[1], d, hkv * dh, dtype),
+        "wv": dense_init(ks[2], d, hkv * dh, dtype),
+        "wo": dense_init(ks[3], hq * dh, d, dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def gqa_qkv(params, x: jnp.ndarray, cfg, positions: jnp.ndarray):
+    b, s, _ = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.einsum("bsd,df->bsf", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,df->bsf", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,df->bsf", x, params["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(b, s, hq, dh)
+    k = k.reshape(b, s, hkv, dh)
+    v = v.reshape(b, s, hkv, dh)
+    cos, sin = rope_freqs(dh, cfg.rope_theta, positions)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def gqa_block_kv(params, x: jnp.ndarray, cfg, *, causal=True,
+                 chunk_q: Optional[int] = None):
+    """Like :func:`gqa_block` but also returns (k, v) for prefill caching."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)
+    q, k, v = gqa_qkv(params, x, cfg, positions)
+    o = gqa_attention(q, k, v, causal=causal, chunk_q=chunk_q,
+                      pv_bf16=cfg.pv_bf16)
+    out = jnp.einsum("bsf,fd->bsd", o.reshape(b, s, -1),
+                     params["wo"].astype(x.dtype))
+    return out, (k, v)
+
+
+def gqa_block(params, x: jnp.ndarray, cfg, *, causal=True,
+              chunk_q: Optional[int] = None) -> jnp.ndarray:
+    return gqa_block_kv(params, x, cfg, causal=causal, chunk_q=chunk_q)[0]
+
+
+def gqa_decode_block(params, x: jnp.ndarray, cfg, cache: dict,
+                     pos: jnp.ndarray):
+    """x: (B, 1, d).  cache: {'k': (B,Smax,Hkv,D), 'v': ...}.  pos: (B,)."""
+    b = x.shape[0]
+    q, k, v = gqa_qkv(params, x, cfg, pos[:, None])
+    k_cache = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(
+        c, u, (p, 0, 0)))(cache["k"], k, pos)
+    v_cache = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(
+        c, u, (p, 0, 0)))(cache["v"], v, pos)
+    o = decode_attention(q, k_cache, v_cache, pos)
+    out = jnp.einsum("bsf,fd->bsd", o.reshape(b, 1, -1),
+                     params["wo"].astype(x.dtype))
+    return out, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# Cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_block(params, x: jnp.ndarray, enc_kv: Tuple[jnp.ndarray, jnp.ndarray],
+                cfg) -> jnp.ndarray:
+    b, s, _ = x.shape
+    hq, dh = cfg.n_heads, cfg.d_head
+    q = jnp.einsum("bsd,df->bsf", x, params["wq"].astype(x.dtype))
+    q = q.reshape(b, s, hq, dh)
+    k, v = enc_kv
+    o = gqa_attention(q, k, v, causal=False)
+    return jnp.einsum("bsf,fd->bsd", o.reshape(b, s, -1),
+                      params["wo"].astype(x.dtype))
+
+
+def encode_cross_kv(params, enc_out: jnp.ndarray, cfg):
+    b, s, _ = enc_out.shape
+    hkv, dh = cfg.n_kv_heads, cfg.d_head
+    k = jnp.einsum("bsd,df->bsf", enc_out, params["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,df->bsf", enc_out, params["wv"].astype(enc_out.dtype))
+    return k.reshape(b, s, hkv, dh), v.reshape(b, s, hkv, dh)
+
+
+# ---------------------------------------------------------------------------
+# MLA (MiniCPM3 / DeepSeek-V2): latent-compressed KV
+# ---------------------------------------------------------------------------
+
+def init_mla_params(key, cfg, dtype=jnp.float32):
+    from repro.models.layers import dense_init
+
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "q_down": dense_init(ks[0], d, qr, dtype),
+        "q_norm": jnp.ones((qr,), dtype),
+        "q_up": dense_init(ks[1], qr, h * (nd + rd), dtype),
+        "kv_down": dense_init(ks[2], d, kr + rd, dtype),
+        "kv_norm": jnp.ones((kr,), dtype),
+        "kv_up": dense_init(ks[3], kr, h * (nd + vd), dtype),
+        "wo": dense_init(ks[4], h * vd, d, dtype),
+    }
+
+
+def _mla_qkv(params, x, cfg, positions):
+    from repro.models.layers import rmsnorm
+
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kr = cfg.kv_lora_rank
+    cq = rmsnorm(jnp.einsum("bsd,dr->bsr", x, params["q_down"].astype(x.dtype)),
+                 params["q_norm"])
+    q = jnp.einsum("bsr,rf->bsf", cq, params["q_up"].astype(x.dtype))
+    q = q.reshape(b, s, h, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["kv_down"].astype(x.dtype))
+    latent, k_rope = ckv[..., :kr], ckv[..., kr:]
+    latent = rmsnorm(latent, params["kv_norm"])
+    cos, sin = rope_freqs(rd, cfg.rope_theta, positions)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos, sin)[:, :, 0, :]
+    return q_nope, q_rope, latent, k_rope
+
+
+def mla_block_kv(params, x: jnp.ndarray, cfg, *, causal=True,
+                 chunk_q: Optional[int] = None):
+    """Like :func:`mla_block` but also returns (latent, k_rope) for prefill."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    positions = jnp.arange(s)
+    q_nope, q_rope, latent, k_rope = _mla_qkv(params, x, cfg, positions)
+    kv = jnp.einsum("bsr,rf->bsf", latent, params["kv_up"].astype(x.dtype))
+    kv = kv.reshape(b, s, h, nd + vd)
+    k_nope, v = kv[..., :nd], kv[..., nd:]
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rd))], axis=-1)
+    o = gqa_attention(q, k, v, causal=causal, chunk_q=chunk_q,
+                      pv_bf16=cfg.pv_bf16)
+    out = jnp.einsum("bsf,fd->bsd", o.reshape(b, s, -1),
+                     params["wo"].astype(x.dtype))
+    return out, (latent, k_rope)
+
+
+def mla_block(params, x: jnp.ndarray, cfg, *, causal=True,
+              chunk_q: Optional[int] = None) -> jnp.ndarray:
+    """Training/prefill: decompress the latent into per-head K/V (naive form)."""
+    return mla_block_kv(params, x, cfg, causal=causal, chunk_q=chunk_q)[0]
+
+
+def mla_decode_block(params, x: jnp.ndarray, cfg, cache: dict,
+                     pos: jnp.ndarray):
+    """Absorbed-matmul decode: attention runs in the latent space, so the
+    cache stores only (latent, k_rope) — the MLA serving trick.  Cache:
+    {'latent': (B, Smax, kr), 'rope': (B, Smax, rd)}."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    kr = cfg.kv_lora_rank
+    q_nope, q_rope, latent, k_rope = _mla_qkv(params, x, cfg, pos[:, None])
+    lat_cache = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(
+        c, u, (p, 0)))(cache["latent"], latent, pos)
+    rope_cache = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(
+        c, u, (p, 0)))(cache["rope"], k_rope, pos)
+    kv_up = params["kv_up"].reshape(kr, h, nd + vd)
+    w_uk, w_uv = kv_up[..., :nd], kv_up[..., nd:]
+    # absorb W_uk into the query:  q' = q_nope @ W_uk^T  -> latent space
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk.astype(x.dtype))
+    scale = (nd + rd) ** -0.5
+    s_lat = jnp.einsum("bhr,bkr->bhk", q_lat[:, 0].astype(jnp.float32),
+                       lat_cache.astype(jnp.float32))
+    s_rope = jnp.einsum("bhr,bkr->bhk", q_rope[:, 0].astype(jnp.float32),
+                        rope_cache.astype(jnp.float32))
+    s = (s_lat + s_rope) * scale
+    smax = lat_cache.shape[1]
+    ki = jnp.arange(smax)
+    s = jnp.where((ki[None, :] <= pos[:, None])[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhk,bkr->bhr", p, lat_cache.astype(jnp.float32))
+    o = jnp.einsum("bhr,rhv->bhv", ctx_lat,
+                   w_uv.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("bf,fd->bd", o.reshape(b, -1),
+                     params["wo"].astype(x.dtype))[:, None, :]
+    return out, {"latent": lat_cache, "rope": rope_cache}

@@ -1,0 +1,135 @@
+"""Shared layers: norms (warp-feature sites), MLPs, embeddings, RoPE.
+
+RMSNorm is the universal paper-technique site: its row reduction is the
+warp/tile reduction.  ``WarpFeatureConfig`` selects how reductions execute:
+  - 'hw'     register-level vector reduction (XLA lane ops / Pallas kernel)
+  - 'sw'     the PR-transformation serialized form (loop + memory arrays)
+  - 'pallas' the fused Pallas kernel (TPU HW path, interpret on CPU)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import primitives as P
+
+
+@dataclasses.dataclass(frozen=True)
+class WarpFeatureConfig:
+    """Deployment knob: the paper's HW-vs-SW choice, per site."""
+
+    reduction_backend: str = "hw"   # 'hw' | 'sw' | 'pallas'
+    gating_backend: str = "hw"      # for MoE expert selection
+    warp_size: int = 128            # TPU lane-group width
+
+
+DEFAULT_WF = WarpFeatureConfig()
+
+
+def _rmsnorm_warp(x: jnp.ndarray, w: jnp.ndarray, eps: float,
+                  backend: str, warp_size: int) -> jnp.ndarray:
+    """RMSNorm via explicit warp-tile reductions (HW or SW primitive path).
+
+    The row of width d is processed as d/warp_size lane groups: each group
+    reduces in registers (or serialized memory), and the partial sums are
+    combined — the cross-warp shared-memory step of the reduce benchmark.
+    """
+    d = x.shape[-1]
+    xf = x.astype(jnp.float32)
+    sq = xf * xf
+    if d % warp_size == 0 and d >= warp_size:
+        g = sq.reshape(x.shape[:-1] + (d // warp_size, warp_size))
+        partial = P.warp_reduce(g, "sum", backend=backend)[..., 0]  # (.., n_warps)
+        ms = jnp.sum(partial, axis=-1, keepdims=True) / d
+    else:
+        ms = jnp.mean(sq, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6,
+            wf: WarpFeatureConfig = DEFAULT_WF) -> jnp.ndarray:
+    if wf.reduction_backend == "pallas":
+        from repro.kernels.rmsnorm.ops import rmsnorm_op
+
+        return rmsnorm_op(x, w, eps)
+    if wf.reduction_backend == "sw":
+        return _rmsnorm_warp(x, w, eps, "sw", wf.warp_size)
+    if wf.reduction_backend == "hw_warp":
+        # explicit lane-group (vx_*-instruction) form of the HW path
+        return _rmsnorm_warp(x, w, eps, "hw", wf.warp_size)
+    # 'hw': the vectorized register-level form (XLA lowers the lane reduce)
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w + b).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers (plain pytrees; deterministic per name)
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jnp.ndarray:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float, positions: jnp.ndarray):
+    """positions: (..., S) int -> cos/sin (..., S, d_head//2) fp32."""
+    inv = 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray):
+    """x: (B, S, H, D); cos/sin: (B, S, D//2) or (S, D//2)."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    cos = cos.astype(x.dtype)
+    sin = sin.astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu(x: jnp.ndarray, w_gate: jnp.ndarray, w_up: jnp.ndarray,
+           w_down: jnp.ndarray) -> jnp.ndarray:
+    g = jnp.einsum("...d,df->...f", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", jax.nn.silu(g) * u,
+                      w_down.astype(x.dtype))
+
+
+def gelu_mlp(x: jnp.ndarray, w_up: jnp.ndarray, b_up: jnp.ndarray,
+             w_down: jnp.ndarray, b_down: jnp.ndarray) -> jnp.ndarray:
+    h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, w_up.astype(x.dtype))
+                    + b_up.astype(x.dtype))
+    return jnp.einsum("...f,fd->...d", h, w_down.astype(x.dtype)) \
+        + b_down.astype(x.dtype)

@@ -1,0 +1,111 @@
+"""Mixture-of-Experts layer: vote-style gating + GShard grouped dispatch.
+
+Expert selection is the production consumer of the paper's vote/match
+primitives (k rounds of argmax-extract == ballot-mask-out; see
+``repro.kernels.moe_gating``).  Dispatch uses the grouped capacity-based
+one-hot einsum form: tokens are grouped per sequence, each group has
+capacity C = S * top_k * cf / E, and the dispatch/combine tensors
+(G, S, E, C) shard cleanly — G over the data axes, E over the model axis
+(expert parallelism) — with XLA inserting the all-to-alls.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+
+def gating_topk(logits: jnp.ndarray, top_k: int, backend: str = "hw"):
+    """Top-k selection as iterated vote/ballot rounds.
+
+    logits: (..., E).  Returns (weights (..., E), mask (..., E) bool) —
+    softmax over the selected experts.  The 'hw' path vectorizes the rounds;
+    the 'sw' path would serialize them (the PR-transformed form is exercised
+    in benchmarks; model forward uses the vectorized semantics for both)."""
+    x = logits.astype(jnp.float32)
+    remaining = x
+    selected = jnp.zeros(x.shape, dtype=bool)
+    for _ in range(top_k):
+        mx = jnp.max(remaining, axis=-1, keepdims=True)      # lane reduce
+        hit = remaining == mx
+        first = jnp.cumsum(hit.astype(jnp.int32), axis=-1) == 1
+        hit = hit & first                                     # match-any tie-break
+        selected = selected | hit
+        remaining = jnp.where(hit, -1e30, remaining)
+    masked = jnp.where(selected, x, -1e30)
+    p = jax.nn.softmax(masked, axis=-1)
+    p = jnp.where(selected, p, 0.0)
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return p, selected
+
+
+def init_moe_params(key, cfg, dtype=jnp.float32):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_ff
+    ks = jax.random.split(key, 4)
+    scale = (2.0 / (d + f)) ** 0.5
+    return {
+        "router": dense_init(ks[0], d, e, dtype),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f)) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d)) * scale).astype(dtype),
+    }
+
+
+def moe_block(params, x: jnp.ndarray, cfg, *,
+              capacity_factor: Optional[float] = None) -> jnp.ndarray:
+    """x: (B, S, d) — B is the group axis (one group per sequence).
+
+    With ``cfg.moe_group_size = g > 0`` and S > g, the sequence is split
+    into token groups of g before dispatch (GShard grouping).  The dispatch
+    tensor is (G, g, E, C) with C = g*k*cf/E, i.e. total size B*S*g*k*cf —
+    *linear* in S — instead of the ungrouped B*S^2*k*cf, which is quadratic
+    and is what blows up 32k-token prefill.
+    """
+    b, s, d = x.shape
+    g = cfg.moe_group_size
+    if g and s > g and s % g == 0:
+        xg = x.reshape(b * (s // g), g, d)
+        yg = _moe_dispatch(params, xg, cfg, capacity_factor)
+        return yg.reshape(b, s, d)
+    return _moe_dispatch(params, x, cfg, capacity_factor)
+
+
+def _moe_dispatch(params, x: jnp.ndarray, cfg,
+                  capacity_factor: Optional[float] = None) -> jnp.ndarray:
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cf = capacity_factor or cfg.capacity_factor
+    cap = max(int(s * k * cf / e), 1)
+
+    logits = jnp.einsum("bsd,de->bse", x, params["router"].astype(x.dtype))
+    weights, mask = gating_topk(logits, k)          # (B, S, E)
+
+    # position of each token within its expert's capacity buffer
+    pos_in_expert = jnp.cumsum(mask.astype(jnp.int32), axis=1) - 1  # (B,S,E)
+    keep = mask & (pos_in_expert < cap)
+    # dispatch tensor (B, S, E, C): one-hot over capacity slots
+    disp = keep[..., None] & (
+        pos_in_expert[..., None] == jnp.arange(cap)[None, None, None, :])
+    disp_f = disp.astype(x.dtype)
+    combine = disp_f * weights[..., None].astype(x.dtype)
+
+    xe = jnp.einsum("bsec,bsd->ebcd", disp_f, x)    # (E, B, C, d)
+    g = jnp.einsum("ebcd,edf->ebcf", xe, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ebcd,edf->ebcf", xe, params["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    ye = jnp.einsum("ebcf,efd->ebcd", h, params["w_down"].astype(x.dtype))
+    y = jnp.einsum("bsec,ebcd->bsd", combine, ye)
+    return y
+
+
+def aux_load_balance_loss(logits: jnp.ndarray, mask: jnp.ndarray,
+                          n_experts: int) -> jnp.ndarray:
+    """Switch-style auxiliary loss: E * sum(f_i * p_i)."""
+    p = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    f = jnp.mean(mask.astype(jnp.float32), axis=(0, 1))   # fraction per expert
+    pbar = jnp.mean(p, axis=(0, 1))
+    return n_experts * jnp.sum(f * pbar)

@@ -1,0 +1,206 @@
+"""Attention-free token mixers: RWKV6 (Finch) and Mamba2 (SSD).
+
+Both are O(1)-state decoders — the two assigned archs that run the
+``long_500k`` cell.  Training uses lax.scan over time (or chunks); decode is
+a single state update.  The paper's warp primitives have no attention site
+here (noted in DESIGN.md §Arch-applicability); reductions in the norms and
+output head still use the warp-feature path.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch): data-dependent decay time-mix + channel-mix
+# ---------------------------------------------------------------------------
+
+def init_rwkv6_params(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    hs = cfg.rwkv_head_size
+    n_heads = d // hs
+    lora = 64
+    ks = jax.random.split(key, 12)
+    return {
+        # token-shift mix coefficients (per channel, per projection)
+        "mu": (jax.random.uniform(ks[0], (5, d)) * 0.5 + 0.25).astype(dtype),
+        "wr": dense_init(ks[1], d, d, dtype),
+        "wk": dense_init(ks[2], d, d, dtype),
+        "wv": dense_init(ks[3], d, d, dtype),
+        "wg": dense_init(ks[4], d, d, dtype),
+        "wo": dense_init(ks[5], d, d, dtype),
+        # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": (jax.random.normal(ks[6], (d,)) * 0.1 - 6.0).astype(dtype),
+        "wA": dense_init(ks[7], d, lora, dtype),
+        "wB": dense_init(ks[8], lora, d, dtype),
+        "bonus": (jax.random.normal(ks[9], (n_heads, hs)) * 0.1).astype(dtype),
+        "ln_x": jnp.ones((d,), dtype),
+        # channel mix
+        "mu_c": (jax.random.uniform(ks[10], (2, d)) * 0.5 + 0.25).astype(dtype),
+        "ck": dense_init(ks[11], d, cfg.d_ff, dtype),
+        "cv": dense_init(jax.random.fold_in(key, 99), cfg.d_ff, d, dtype),
+        "cr": dense_init(jax.random.fold_in(key, 98), d, d, dtype),
+    }
+
+
+def _rwkv6_projections(p, x, x_prev, cfg):
+    """x: (B, S, d); x_prev: (B, S, d) token-shifted input."""
+    mu = p["mu"].astype(x.dtype)
+    xs = [x + (x_prev - x) * mu[i] for i in range(5)]  # r,k,v,g,w mixes
+    r = jnp.einsum("bsd,de->bse", xs[0], p["wr"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", xs[1], p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", xs[2], p["wv"].astype(x.dtype))
+    g = jnp.einsum("bsd,de->bse", xs[3], p["wg"].astype(x.dtype))
+    dd = jnp.tanh(jnp.einsum("bsd,dl->bsl", xs[4], p["wA"].astype(x.dtype)))
+    w = p["w0"].astype(x.dtype) + jnp.einsum("bsl,ld->bsd", dd,
+                                             p["wB"].astype(x.dtype))
+    w = jnp.exp(-jnp.exp(w.astype(jnp.float32)))  # decay in (0, 1)
+    return r, k, v, g, w
+
+
+def rwkv6_time_mix(p, x: jnp.ndarray, cfg, state=None):
+    """Training form: scan over time.  state: ((B,d) shift, (B,H,hs,hs) wkv).
+
+    Returns (out, new_state)."""
+    b, s, d = x.shape
+    hs = cfg.rwkv_head_size
+    h = d // hs
+    if state is None:
+        shift = jnp.zeros((b, d), x.dtype)
+        wkv = jnp.zeros((b, h, hs, hs), jnp.float32)
+    else:
+        shift, wkv = state
+    x_prev = jnp.concatenate([shift[:, None, :], x[:, :-1, :]], axis=1)
+    r, k, v, g, w = _rwkv6_projections(p, x, x_prev, cfg)
+    rh = r.reshape(b, s, h, hs).astype(jnp.float32)
+    kh = k.reshape(b, s, h, hs).astype(jnp.float32)
+    vh = v.reshape(b, s, h, hs).astype(jnp.float32)
+    wh = w.reshape(b, s, h, hs)
+    u = p["bonus"].astype(jnp.float32)
+
+    def step(carry, inp):
+        S = carry                       # (B, H, hs, hs) state: k-major
+        rt, kt, vt, wt = inp            # (B, H, hs) each
+        kv = kt[..., :, None] * vt[..., None, :]          # (B,H,hs,hs)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[..., :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, out
+
+    xs = (rh.transpose(1, 0, 2, 3), kh.transpose(1, 0, 2, 3),
+          vh.transpose(1, 0, 2, 3), wh.transpose(1, 0, 2, 3))
+    wkv, outs = jax.lax.scan(step, wkv, xs)
+    out = outs.transpose(1, 0, 2, 3).reshape(b, s, d)
+    out = rmsnorm(out.astype(x.dtype), p["ln_x"])
+    out = out * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", out, p["wo"].astype(x.dtype))
+    return out, (x[:, -1, :], wkv)
+
+
+def rwkv6_channel_mix(p, x: jnp.ndarray, cfg, shift=None):
+    b, s, d = x.shape
+    if shift is None:
+        shift = jnp.zeros((b, d), x.dtype)
+    x_prev = jnp.concatenate([shift[:, None, :], x[:, :-1, :]], axis=1)
+    mu = p["mu_c"].astype(x.dtype)
+    xk = x + (x_prev - x) * mu[0]
+    xr = x + (x_prev - x) * mu[1]
+    kk = jnp.einsum("bsd,df->bsf", xk, p["ck"].astype(x.dtype))
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["cv"].astype(x.dtype))
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["cr"].astype(x.dtype)))
+    return rr * vv, x[:, -1, :]
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block — Zamba2's backbone mixer
+# ---------------------------------------------------------------------------
+
+def init_mamba2_params(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    nh = d_in // hd
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * n + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, d_in + 2 * n))
+                   * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((d_in + 2 * n,), dtype),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32) *
+                         jnp.ones((nh,))).astype(dtype),
+        "D": jnp.ones((nh,), dtype),
+        "dt_bias": (jax.random.uniform(ks[3], (nh,)) * 2 - 4).astype(dtype),
+        "norm_w": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[4], d_in, d, dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 conv_state=None):
+    """Depthwise causal conv1d.  x: (B, S, C), w: (K, C).
+
+    conv_state: (B, K-1, C) trailing context (for decode continuity)."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return jax.nn.silu(out + b[None, None, :]), new_state
+
+
+def mamba2_mix(p, x: jnp.ndarray, cfg, state=None):
+    """SSD recurrence, scan over time.  state: ((B,K-1,C) conv, (B,H,hd,n) ssm)."""
+    b, s, d = x.shape
+    d_in = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    nh = d_in // hd
+    proj = jnp.einsum("bsd,df->bsf", x, p["in_proj"].astype(x.dtype))
+    z, xbc_dt = proj[..., :d_in], proj[..., d_in:]
+    xbc, dt = xbc_dt[..., :d_in + 2 * n], xbc_dt[..., d_in + 2 * n:]
+    conv_state = None if state is None else state[0]
+    xbc, new_conv = _causal_conv(xbc, p["conv_w"].astype(x.dtype),
+                                 p["conv_b"].astype(x.dtype), conv_state)
+    xs, B, C = (xbc[..., :d_in], xbc[..., d_in:d_in + n],
+                xbc[..., d_in + n:])
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # (H,)
+    dA = jnp.exp(dt * A[None, None, :])                       # (B,S,H)
+    xh = xs.reshape(b, s, nh, hd).astype(jnp.float32)
+    Bf = B.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    ssm0 = (jnp.zeros((b, nh, hd, n), jnp.float32) if state is None
+            else state[1])
+
+    def step(S, inp):
+        xt, bt, ct, dat, dtt = inp   # (B,H,hd), (B,n), (B,n), (B,H), (B,H)
+        dBx = (dtt[..., None, None] * xt[..., :, None]) * bt[:, None, None, :]
+        S = dat[..., None, None] * S + dBx
+        yt = jnp.einsum("bhdn,bn->bhd", S, ct)
+        return S, yt
+
+    xs_t = (xh.transpose(1, 0, 2, 3), Bf.transpose(1, 0, 2),
+            Cf.transpose(1, 0, 2), dA.transpose(1, 0, 2),
+            dt.transpose(1, 0, 2))
+    ssm, ys = jax.lax.scan(step, ssm0, xs_t)
+    y = ys.transpose(1, 0, 2, 3)                              # (B,S,H,hd)
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(b, s, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_w"])
+    out = jnp.einsum("bsf,fd->bsd", y, p["out_proj"].astype(x.dtype))
+    new_state = (new_conv if new_conv is not None
+                 else jnp.zeros((b, cfg.ssm_conv - 1, d_in + 2 * n), x.dtype),
+                 ssm)
+    return out, new_state

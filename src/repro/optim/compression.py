@@ -1,0 +1,55 @@
+"""Gradient compression for the cross-pod hop: int8 quantization with
+error feedback (EF-SGD style residual carry).
+
+At 2+ pods the data-center interconnect between pods is the scarcest
+bandwidth; compressing the cross-pod all-reduce payload 4x (fp32->int8 with
+per-tensor scale) trades a little optimizer noise for a 4x smaller bisection
+transfer.  Error feedback keeps the quantization bias from accumulating.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def init_error_feedback(params) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def compress_with_feedback(grads, residual):
+    """Returns ((q, scales) compressed pytree, new_residual)."""
+
+    def one(g, r):
+        target = g.astype(jnp.float32) + r
+        q, s = quantize_int8(target)
+        deq = dequantize_int8(q, s)
+        return (q, s), target - deq
+
+    pairs = jax.tree.map(one, grads, residual,
+                         is_leaf=lambda x: isinstance(x, jnp.ndarray))
+    comp = jax.tree.map(lambda p: p[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple)
+                        and len(x) == 2 and not isinstance(x[0], tuple))
+    new_res = jax.tree.map(lambda p: p[1], pairs,
+                           is_leaf=lambda x: isinstance(x, tuple)
+                           and len(x) == 2 and not isinstance(x[0], tuple))
+    return comp, new_res
+
+
+def decompress(comp):
+    return jax.tree.map(
+        lambda p: dequantize_int8(p[0], p[1]), comp,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2)

@@ -1,0 +1,7 @@
+from repro.roofline.analysis import (  # noqa: F401
+    HardwareSpec,
+    TPU_V5E,
+    model_flops,
+    parse_hlo_collectives,
+    roofline_report,
+)

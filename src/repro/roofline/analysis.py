@@ -1,0 +1,272 @@
+"""Three-term roofline from compiled dry-run artifacts.
+
+CPU containers cannot measure TPU wall time, so the roofline terms are
+*derived* from the compiled SPMD module (which is per-device after GSPMD
+partitioning):
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory term     = HLO_bytes_per_device / HBM_bandwidth
+  collective term = sum over collectives of ring-factor x payload / ICI_bw
+
+cost_analysis() provides FLOPs and bytes; collectives are parsed from the
+optimized HLO text (they are never fused, so a line scan is exact).  Ring
+factors: all-reduce 2(N-1)/N, all-gather/reduce-scatter/all-to-all (N-1)/N,
+collective-permute 1 — the standard bandwidth-optimal schedules on a torus.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float          # per chip, bf16
+    hbm_bw: float              # bytes/s per chip
+    ici_bw: float              # bytes/s per link direction
+
+
+TPU_V5E = HardwareSpec(name="tpu_v5e", peak_flops=197e12, hbm_bw=819e9,
+                       ici_bw=50e9)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                   "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_RING_FACTOR = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / max(n, 1),
+    "all-gather": lambda n: (n - 1) / max(n, 1),
+    "reduce-scatter": lambda n: (n - 1) / max(n, 1),
+    "all-to-all": lambda n: (n - 1) / max(n, 1),
+    "collective-permute": lambda n: 1.0,
+}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Largest array in a (possibly tuple) HLO result type, in bytes."""
+    best = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        best = max(best, n * _DTYPE_BYTES[dtype])
+    return best
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))  # [num_groups, group_size]
+    return default
+
+
+def parse_hlo_collectives(hlo_text: str,
+                          default_group: int = 1) -> List[Dict]:
+    """Scan optimized HLO for collective ops -> [{op, bytes, group, factor_bytes}].
+
+    ``bytes`` is the per-device payload (shapes in a partitioned module are
+    per-device); ``factor_bytes`` applies the ring factor — the bytes that
+    actually cross links per device.
+    """
+    out: List[Dict] = []
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        for op in _COLLECTIVE_OPS:
+            token = f" {op}("
+            start_token = f" {op}-start("
+            if token not in line and start_token not in line:
+                continue
+            lhs = line.split(f" {op}")[0]
+            if "=" not in lhs:
+                continue
+            type_str = lhs.split("=", 1)[1]
+            nbytes = _shape_bytes(type_str)
+            if nbytes == 0:
+                continue
+            n = _group_size(line, default_group)
+            factor = _RING_FACTOR[op](max(n, 1))
+            out.append({"op": op, "bytes": nbytes, "group": n,
+                        "factor_bytes": nbytes * factor})
+            break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# While-trip-aware collective accounting
+# ---------------------------------------------------------------------------
+
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_WHILE_RE = re.compile(r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\s*\{\s*"n"\s*:\s*"?(\d+)"?')
+_CALL_RE = re.compile(r"(?:calls|to_apply|condition|body|branch_computations)=\{?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)\}?")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur: Optional[str] = None
+    entry: Optional[str] = None
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if (stripped.endswith("{") and "->" in stripped
+                and cur is None):
+            m = _COMP_HEADER_RE.match(stripped)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+                continue
+        if stripped == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _trip_count(while_line: str, cond_name: str,
+                comps: Dict[str, List[str]]) -> int:
+    """Trip count of a while loop.
+
+    Primary: XLA's own ``backend_config={"known_trip_count":{"n":...}}``
+    annotation on the while instruction (exact for every lax.scan).
+    Fallback: if the loop condition computation holds exactly one integer
+    constant, it is the LT bound of a counted loop.  Otherwise 1
+    (conservative under-count rather than a wild guess).
+    """
+    m = _TRIP_RE.search(while_line)
+    if m:
+        return int(m.group(1))
+    consts = set()
+    for line in comps.get(cond_name, []):
+        for c in _CONST_RE.findall(line):
+            if int(c) > 0:
+                consts.add(int(c))
+    if len(consts) == 1:
+        return consts.pop()
+    return 1
+
+
+def parse_hlo_collectives_trip_aware(hlo_text: str) -> List[Dict]:
+    """Collective scan with while-loop trip multipliers.
+
+    XLA prints each while body once; collectives inside a scanned layer
+    stack run once per iteration.  We DFS from ENTRY, multiply by the trip
+    count of each enclosing while (from the loop-condition constant), and
+    scale every collective's bytes by the product of its enclosing trips.
+    """
+    comps = _split_computations(hlo_text)
+    if "__entry__" not in comps:
+        return parse_hlo_collectives(hlo_text)
+
+    per_comp: Dict[str, List[Dict]] = {}
+    for name, lines in comps.items():
+        per_comp[name] = parse_hlo_collectives("\n".join(lines))
+
+    out: List[Dict] = []
+    visited: set = set()
+
+    def visit(name: str, mult: float):
+        if name not in comps:
+            return
+        key = (name, mult)
+        if key in visited:  # same comp at same multiplier: count once
+            return
+        visited.add(key)
+        for c in per_comp.get(name, []):
+            out.append(dict(c, trips=mult,
+                            factor_bytes=c["factor_bytes"] * mult))
+        for line in comps[name]:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                visit(body, mult * _trip_count(line, cond, comps))
+                continue
+            cm = _CALL_RE.search(line)
+            if cm and "while(" not in line:
+                for callee in cm.group(1).split(","):
+                    visit(callee.strip().lstrip("%"), mult)
+
+    visit("__entry__", 1.0)
+    return out
+
+
+def model_flops(cfg, seq_len: int, global_batch: int, kind: str) -> float:
+    """6*N*D (train) / 2*N*D (prefill) / 2*N*B (decode); MoE uses N_active."""
+    n = cfg.active_param_count
+    if kind == "train":
+        return 6.0 * n * seq_len * global_batch
+    if kind == "prefill":
+        return 2.0 * n * seq_len * global_batch
+    return 2.0 * n * global_batch  # decode: one token per sequence
+
+
+def roofline_report(*, flops_per_dev: float, bytes_per_dev: float,
+                    collectives: List[Dict], n_devices: int,
+                    model_flops_total: float,
+                    hw: HardwareSpec = TPU_V5E) -> Dict:
+    """The three terms (seconds) + bottleneck + useful-compute ratio."""
+    t_compute = flops_per_dev / hw.peak_flops
+    t_memory = bytes_per_dev / hw.hbm_bw
+    coll_bytes = sum(c["factor_bytes"] for c in collectives)
+    t_collective = coll_bytes / hw.ici_bw
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    bottleneck = max(terms, key=terms.get)
+    step_time = max(terms.values())  # perfect-overlap bound
+    useful = (model_flops_total / (flops_per_dev * n_devices)
+              if flops_per_dev else 0.0)
+    mfu = (model_flops_total / n_devices / hw.peak_flops / step_time
+           if step_time > 0 else 0.0)
+    return {
+        **terms,
+        "bottleneck": bottleneck.replace("_s", ""),
+        "collective_bytes_per_dev": coll_bytes,
+        "n_collectives": len(collectives),
+        "collective_mix": _mix(collectives),
+        "model_flops_total": model_flops_total,
+        "useful_flops_ratio": useful,
+        "roofline_fraction_mfu": mfu,
+        "hw": hw.name,
+    }
+
+
+def _mix(collectives: List[Dict]) -> Dict[str, Dict]:
+    mix: Dict[str, Dict] = {}
+    for c in collectives:
+        m = mix.setdefault(c["op"], {"count": 0, "bytes": 0})
+        m["count"] += 1
+        m["bytes"] += c["factor_bytes"]
+    return mix
+
+
+def format_row(arch: str, shape: str, mesh: str, rep: Dict) -> str:
+    return (f"{arch:24s} {shape:12s} {mesh:6s} "
+            f"C={rep['compute_s']:.3e}s M={rep['memory_s']:.3e}s "
+            f"X={rep['collective_s']:.3e}s -> {rep['bottleneck']:10s} "
+            f"useful={rep['useful_flops_ratio']:.2f} "
+            f"MFU~{100 * rep['roofline_fraction_mfu']:.1f}%")

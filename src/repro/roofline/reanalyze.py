@@ -1,0 +1,60 @@
+"""Recompute roofline reports from stored dry-run artifacts — no recompile.
+
+The dry-run stores the compiled HLO next to each cell's JSON; analysis
+changes (collective factors, trip parsing, hardware constants) can be
+re-applied in seconds:
+
+  PYTHONPATH=src python -m repro.roofline.reanalyze artifacts/dryrun
+"""
+
+from __future__ import annotations
+
+import glob
+import gzip
+import json
+import os
+import sys
+
+from repro.configs.registry import get_config
+from repro.models.config import get_shape
+from repro.roofline.analysis import (
+    model_flops,
+    parse_hlo_collectives_trip_aware,
+    roofline_report,
+)
+
+
+def reanalyze_dir(art_dir: str) -> int:
+    n = 0
+    for jf in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        d = json.load(open(jf))
+        if d.get("status") != "OK":
+            continue
+        hf = jf.replace(".json", ".hlo.txt.gz")
+        if not os.path.exists(hf):
+            continue
+        with gzip.open(hf, "rt") as f:
+            hlo = f.read()
+        colls = parse_hlo_collectives_trip_aware(hlo)
+        cfg = get_config(d["arch"])
+        cell = get_shape(d["shape"])
+        mf = model_flops(cfg, cell.seq_len, cell.global_batch, cell.kind)
+        d["roofline"] = roofline_report(
+            flops_per_dev=d["flops_per_dev"],
+            bytes_per_dev=d["bytes_per_dev"],
+            collectives=colls, n_devices=d["n_devices"],
+            model_flops_total=mf)
+        with open(jf, "w") as f:
+            json.dump(d, f, indent=1)
+        r = d["roofline"]
+        print(f"{d['arch']:22s} {d['shape']:12s} {d['mesh']:6s} "
+              f"{r['bottleneck']:11s} C={r['compute_s']:.2e} "
+              f"M={r['memory_s']:.2e} X={r['collective_s']:.2e} "
+              f"MFU~{100 * r['roofline_fraction_mfu']:.1f}%")
+        n += 1
+    return n
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun"
+    print(f"reanalyzed {reanalyze_dir(d)} cells")

@@ -1,0 +1,159 @@
+"""Batched serving engine: prefill + KV-cache decode with slot management.
+
+The engine keeps a fixed pool of batch slots (the static shape pjit needs).
+Requests are admitted into free slots; every decode step advances all live
+slots together (continuous-batching-lite: admission happens at step
+boundaries, finished slots free immediately).  Per-slot position counters
+mean requests of different lengths coexist in one cache.
+
+Both ``prefill`` and ``decode_step`` are jit-compiled once per engine; on a
+pod the same functions are pjit-sharded with ``repro.dist`` cache specs (the
+decode dry-run lowers exactly this step at production shapes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_token(logits: jnp.ndarray, key, temperature: float = 0.0):
+    """logits (B, V) -> tokens (B,).  temperature 0 = greedy."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(
+        key, logits.astype(jnp.float32) / temperature, axis=-1).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int
+    generated: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, model, params, *, max_seq: int, batch_slots: int,
+                 temperature: float = 0.0, seed: int = 0,
+                 cache_shardings=None):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+        self.slots = batch_slots
+        self.temperature = temperature
+        self._key = jax.random.PRNGKey(seed)
+
+        def prefill_fn(params, batch):
+            return model.prefill(params, batch, max_seq)
+
+        def decode_fn(params, cache, tokens, pos):
+            logits, cache = model.decode_step(params, cache, tokens, pos)
+            return logits, cache
+
+        kw = {}
+        if cache_shardings is not None:
+            kw["out_shardings"] = (None, cache_shardings)
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn, **kw)
+
+    # ----------------------------------------------------------- primitives
+    def prefill(self, batch: Dict[str, jnp.ndarray]):
+        """Equal-length prompt batch -> (last_logits, cache)."""
+        return self._prefill(self.params, batch)
+
+    def decode_step(self, cache, tokens, pos):
+        return self._decode(self.params, cache, tokens, pos)
+
+    # ------------------------------------------------------------ generation
+    def generate(self, prompts: jnp.ndarray, n_tokens: int,
+                 frontend_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """prompts: (B, S) equal-length batch.  Returns (B, n_tokens)."""
+        b, s = prompts.shape
+        batch = {"tokens": prompts}
+        offset = 0
+        if frontend_embeds is not None:
+            batch["frontend_embeds"] = frontend_embeds
+            if self.model.cfg.family == "vlm":
+                offset = frontend_embeds.shape[1]
+        logits, cache = self.prefill(batch)
+        pos = jnp.full((b,), s + offset, jnp.int32)
+        out = []
+        tok = sample_token(logits, self._next_key(), self.temperature)
+        out.append(tok)
+        for _ in range(n_tokens - 1):
+            logits, cache = self.decode_step(cache, tok, pos)
+            tok = sample_token(logits, self._next_key(), self.temperature)
+            out.append(tok)
+            pos = pos + 1
+        return jnp.stack(out, axis=1)
+
+    # ------------------------------------------------- continuous batching
+    def serve(self, requests: List[Request]) -> Dict[int, List[int]]:
+        """Slot-based scheduler: admit -> prefill slot -> joint decode.
+
+        Prompts may have different lengths; each admitted request is
+        prefilled into its slot (batch-1 prefill), then all live slots
+        decode together.  Returns {uid: generated tokens}.
+        """
+        queue = list(requests)
+        live: Dict[int, Request] = {}          # slot -> request
+        cache = self.model.init_cache(self.slots, self.max_seq)
+        pos = jnp.zeros((self.slots,), jnp.int32)
+        tok = jnp.zeros((self.slots,), jnp.int32)
+        remaining = jnp.zeros((self.slots,), jnp.int32)
+        results: Dict[int, List[int]] = {}
+
+        def admit():
+            nonlocal cache, pos, tok, remaining
+            for slot in range(self.slots):
+                if slot in live or not queue:
+                    continue
+                req = queue.pop(0)
+                req.generated = []
+                live[slot] = req
+                prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+                logits, pcache = self._prefill(self.params,
+                                               {"tokens": prompt})
+                cache = _write_slot(cache, pcache, slot)
+                first = sample_token(logits, self._next_key(),
+                                     self.temperature)[0]
+                req.generated.append(int(first))
+                pos = pos.at[slot].set(len(req.prompt))
+                tok = tok.at[slot].set(first)
+                remaining = remaining.at[slot].set(req.max_new_tokens - 1)
+
+        admit()
+        while live:
+            logits, cache = self.decode_step(cache, tok, pos)
+            nxt = sample_token(logits, self._next_key(), self.temperature)
+            pos = pos + 1
+            remaining = remaining - 1
+            tok = nxt
+            for slot in list(live):
+                req = live[slot]
+                req.generated.append(int(nxt[slot]))
+                if int(remaining[slot]) <= 0 or pos[slot] >= self.max_seq - 1:
+                    results[req.uid] = req.generated
+                    del live[slot]
+            admit()
+        return results
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+
+def _write_slot(cache, pcache, slot: int):
+    """Copy a batch-1 prefilled cache into slot ``slot`` of the pool cache.
+
+    Every cache leaf has the batch dim at position 1 (layer-stacked leaves).
+    """
+    def one(pool, single):
+        return jax.lax.dynamic_update_slice_in_dim(
+            pool, single.astype(pool.dtype), slot, axis=1)
+
+    return jax.tree.map(one, cache, pcache)

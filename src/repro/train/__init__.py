@@ -1,0 +1,8 @@
+from repro.train.step import (  # noqa: F401
+    TrainState,
+    chunked_xent_loss,
+    init_train_state,
+    make_loss_fn,
+    make_train_step,
+)
+from repro.train.trainer import Trainer, TrainerConfig  # noqa: F401

@@ -1,0 +1,149 @@
+"""Fault-tolerant training loop: checkpoint/restart, stragglers, elasticity.
+
+Fault-tolerance contract (matched to the stateless-seeded data pipeline):
+  * checkpoints are atomic (tmp + rename) and carry the step, so a restart
+    resumes from the newest *committed* step with a bit-identical stream;
+  * a per-step wall-time watchdog flags stragglers (> k x rolling median);
+    on a real pod the hook would trigger backup-step relaunch — here the
+    event is recorded and surfaced in metrics (CPU simulation, see DESIGN);
+  * ``reshard_state`` re-lays a restored state onto a *different* mesh —
+    elastic resize is restore + reshard, nothing in the step function
+    changes because shardings enter only through pjit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.checkpoint import (
+    AsyncCheckpointer,
+    latest_step,
+    prune_old,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.optim.optimizer import AdamWConfig
+from repro.train.step import TrainState, init_train_state, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 50
+    checkpoint_dir: Optional[str] = None
+    keep_checkpoints: int = 3
+    log_every: int = 10
+    vocab_chunks: int = 8
+    accum_steps: int = 1
+    straggler_factor: float = 3.0   # step > factor x median -> straggler
+    straggler_window: int = 20
+    async_checkpoint: bool = False  # overlap serialization with training
+
+
+class Trainer:
+    """Single-host training driver (jit; shardings optional via pjit)."""
+
+    def __init__(self, model, data, opt_cfg: AdamWConfig,
+                 cfg: TrainerConfig = TrainerConfig(),
+                 in_shardings=None, grad_sync_fn=None):
+        self.model = model
+        self.data = data
+        self.opt_cfg = opt_cfg
+        self.cfg = cfg
+        step_fn = make_train_step(model, opt_cfg,
+                                  vocab_chunks=cfg.vocab_chunks,
+                                  accum_steps=cfg.accum_steps,
+                                  grad_sync_fn=grad_sync_fn)
+        if in_shardings is not None:
+            self._step = jax.jit(step_fn, in_shardings=in_shardings)
+        else:
+            self._step = jax.jit(step_fn)
+        self.straggler_events: List[Dict] = []
+        self._durations: List[float] = []
+        self._async_ckpt: Optional[AsyncCheckpointer] = None
+        if cfg.async_checkpoint and cfg.checkpoint_dir:
+            self._async_ckpt = AsyncCheckpointer(cfg.checkpoint_dir,
+                                                 keep=cfg.keep_checkpoints)
+
+    # ------------------------------------------------------------- lifecycle
+    def init_or_restore(self, key) -> tuple:
+        """Returns (state, start_step).  Restores when a checkpoint exists."""
+        state = init_train_state(self.model, key)
+        ckpt = self.cfg.checkpoint_dir
+        if ckpt and latest_step(ckpt) is not None:
+            state, step, _meta = restore_checkpoint(ckpt, state)
+            return state, int(step)
+        return state, 0
+
+    # ------------------------------------------------------------------ run
+    def run(self, key, start_state=None, start_step: Optional[int] = None,
+            on_metrics: Optional[Callable[[int, Dict], None]] = None,
+            should_stop: Optional[Callable[[], bool]] = None):
+        """should_stop: preemption hook — polled each step; when it fires
+        the trainer commits a checkpoint and returns early (the restart
+        resumes bit-identically from it)."""
+        if start_state is None:
+            state, step0 = self.init_or_restore(key)
+        else:
+            state, step0 = start_state, int(start_step or 0)
+        history = []
+        for step in range(step0, self.cfg.total_steps):
+            batch = self.data.batch_at(step)
+            t0 = time.perf_counter()
+            state, metrics = self._step(state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            self._watchdog(step, dt)
+            metrics["step_time_s"] = dt
+            history.append((step, metrics))
+            if on_metrics:
+                on_metrics(step, metrics)
+            preempted = bool(should_stop and should_stop())
+            if (self.cfg.checkpoint_dir
+                    and ((step + 1) % self.cfg.checkpoint_every == 0
+                         or preempted)):
+                meta = {"loss": metrics["loss"], "preempted": preempted}
+                if self._async_ckpt is not None:
+                    self._async_ckpt.save(step + 1, state, metadata=meta)
+                else:
+                    save_checkpoint(self.cfg.checkpoint_dir, step + 1,
+                                    state, metadata=meta)
+                    prune_old(self.cfg.checkpoint_dir,
+                              self.cfg.keep_checkpoints)
+            if preempted:
+                break
+        if self._async_ckpt is not None:
+            self._async_ckpt.wait()  # commit in-flight saves before return
+        return state, history
+
+    # -------------------------------------------------------------- watchdog
+    def _watchdog(self, step: int, dt: float):
+        w = self._durations[-self.cfg.straggler_window:]
+        if len(w) >= 5:
+            med = statistics.median(w)
+            if dt > self.cfg.straggler_factor * med:
+                # On a pod: signal the coordinator to relaunch the step on
+                # backup hosts.  Here: record the event (simulated hook).
+                self.straggler_events.append(
+                    {"step": step, "duration": dt, "median": med})
+        self._durations.append(dt)
+
+
+# ---------------------------------------------------------------------------
+# Elastic resize
+# ---------------------------------------------------------------------------
+
+def reshard_state(state: TrainState, sharding_tree) -> TrainState:
+    """Re-lay a (restored) state onto a new mesh's shardings.
+
+    Elastic scaling: save on mesh A, restore host-local, reshard to mesh B.
+    The step function is re-jitted against the new shardings by the caller.
+    """
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), state, sharding_tree)

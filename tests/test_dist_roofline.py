@@ -1,0 +1,272 @@
+"""Sharding rule engine, hierarchical collectives, roofline accounting."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist.sharding import (
+    batch_pspecs,
+    cache_spec,
+    param_spec,
+)
+from repro.roofline.analysis import (
+    model_flops,
+    parse_hlo_collectives,
+    parse_hlo_collectives_trip_aware,
+    roofline_report,
+)
+from repro.roofline.jaxpr_cost import jaxpr_cost, trace_cost
+
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape and .axis_names are consulted."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+MESH = FakeMesh(data=16, model=16)
+MESH3 = FakeMesh(pod=2, data=16, model=16)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+def test_param_spec_matrix_fsdp_tp():
+    # (L, d, f) big matrix: FSDP on d, TP on f
+    assert param_spec("layers/attn/wq", (28, 1536, 1536), MESH) == \
+        P(None, "data", "model")
+
+
+def test_param_spec_small_replicated():
+    assert param_spec("layers/ln1", (28, 1536), MESH) == P()
+    assert param_spec("layers/attn/bq", (28, 256), MESH) == P()
+
+
+def test_param_spec_embed_vocab_tp():
+    # divisible vocab -> vocab over model, d over data
+    assert param_spec("embed", (151936, 1536), MESH) == P("model", "data")
+    # indivisible vocab (granite 49155) -> fall back to d over model
+    assert param_spec("embed", (49155, 1024), MESH) == P(None, "model")
+
+
+def test_param_spec_lm_head():
+    assert param_spec("lm_head", (1536, 151936), MESH) == P("data", "model")
+    assert param_spec("lm_head", (1024, 49155), MESH) == P("model", None)
+
+
+def test_param_spec_moe_expert_parallel():
+    # (L, E, d, f): experts over model, d over data
+    spec = param_spec("layers/moe/w_gate", (16, 64, 2048, 1024), MESH)
+    assert spec == P(None, "model", "data", None)
+
+
+def test_param_spec_indivisible_falls_back():
+    # 10 experts don't divide 16 -> TP moves to f, FSDP to d
+    spec = param_spec("layers/moe/w_gate", (4, 10, 2048, 1024), MESH)
+    assert spec == P(None, None, "data", "model")
+
+
+# ---------------------------------------------------------------------------
+# Cache rules
+# ---------------------------------------------------------------------------
+
+def test_cache_spec_kv_heads_divisible():
+    # (L, B, S, H, D): B over data, H over model
+    assert cache_spec("k", (80, 128, 32768, 16, 128), MESH) == \
+        P(None, "data", None, "model", None)
+
+
+def test_cache_spec_kv_heads_fallback_to_dhead():
+    # H=2 < 16 -> shard D instead
+    assert cache_spec("k", (28, 128, 32768, 2, 128), MESH) == \
+        P(None, "data", None, None, "model")
+
+
+def test_cache_spec_batch1_sequence_parallel():
+    # long_500k B=1 -> sequence over data axes
+    assert cache_spec("attn_k", (9, 1, 524288, 32, 80), MESH) == \
+        P(None, None, "data", "model", None)
+
+
+def test_cache_spec_multipod():
+    spec = cache_spec("k", (28, 128, 32768, 2, 128), MESH3)
+    assert spec == P(None, ("pod", "data"), None, None, "model")
+
+
+def test_batch_specs():
+    shapes = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
+    spec = batch_pspecs(shapes, MESH3)
+    assert spec["tokens"] == P(("pod", "data"), None)
+    spec1 = batch_pspecs({"tokens": jax.ShapeDtypeStruct((1,), jnp.int32)},
+                         MESH)
+    assert spec1["tokens"] == P(None)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr cost walker
+# ---------------------------------------------------------------------------
+
+def test_jaxpr_cost_dot_exact():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    b = jax.ShapeDtypeStruct((256, 64), jnp.float32)
+    flops, _ = jaxpr_cost(jax.make_jaxpr(f)(a, b))
+    assert flops == 2 * 128 * 256 * 64
+
+
+def test_jaxpr_cost_scan_multiplies():
+    def f(x, ws):
+        def body(h, w):
+            return jnp.tanh(h @ w), None
+        out, _ = jax.lax.scan(body, x, ws)
+        return out
+
+    x = jax.ShapeDtypeStruct((8, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((12, 32, 32), jnp.float32)
+    flops, _ = jaxpr_cost(jax.make_jaxpr(f)(x, ws))
+    dot = 2 * 8 * 32 * 32
+    assert flops >= 12 * dot           # 12 iterations counted
+    assert flops < 13 * dot + 12 * 8 * 32 * 4  # no gross overcount
+
+
+def test_jaxpr_cost_batched_dot():
+    def f(a, b):
+        return jnp.einsum("bik,bkj->bij", a, b)
+
+    a = jax.ShapeDtypeStruct((4, 8, 16), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 16, 32), jnp.float32)
+    flops, _ = jaxpr_cost(jax.make_jaxpr(f)(a, b))
+    assert flops == 2 * 4 * 8 * 16 * 32
+
+
+def test_trace_cost_grad_counts_backward():
+    def loss(w, x):
+        return jnp.sum((x @ w) ** 2)
+
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    fwd = trace_cost(loss, w, x)["flops_total"]
+    bwd = trace_cost(jax.grad(loss), w, x)["flops_total"]
+    assert bwd > 2 * fwd  # backward has ~2x the matmul work
+
+
+# ---------------------------------------------------------------------------
+# HLO collective parsing
+# ---------------------------------------------------------------------------
+
+HLO_FLAT = """
+HloModule test
+
+ENTRY %main (p0: f32[1024,512]) -> f32[1024,512] {
+  %p0 = f32[1024,512] parameter(0)
+  %ar = f32[1024,512] all-reduce(%p0), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[2048,512]{1,0} all-gather(%p0), replica_groups=[4,8]<=[32], dimensions={0}
+  ROOT %out = f32[1024,512] copy(%ar)
+}
+"""
+
+
+def test_parse_flat_collectives():
+    colls = parse_hlo_collectives(HLO_FLAT)
+    assert len(colls) == 2
+    ar = next(c for c in colls if c["op"] == "all-reduce")
+    assert ar["bytes"] == 1024 * 512 * 4
+    assert ar["group"] == 4
+    assert ar["factor_bytes"] == pytest.approx(1024 * 512 * 4 * 2 * 3 / 4)
+    ag = next(c for c in colls if c["op"] == "all-gather")
+    assert ag["group"] == 8
+    assert ag["bytes"] == 2048 * 512 * 2
+
+
+HLO_WHILE = """
+HloModule test
+
+%body.1 (arg: (s32[], f32[64])) -> (s32[], f32[64]) {
+  %arg = (s32[], f32[64]) parameter(0)
+  %ar = f32[64] all-reduce(%gte), replica_groups={{0,1}}, to_apply=%add
+  ROOT %t = (s32[], f32[64]) tuple(%iv, %ar)
+}
+
+%cond.1 (arg: (s32[], f32[64])) -> pred[] {
+  %arg = (s32[], f32[64]) parameter(0)
+  %iv = s32[] get-tuple-element(%arg), index=0
+  %limit = s32[] constant(28)
+  ROOT %lt = pred[] compare(%iv, %limit), direction=LT
+}
+
+ENTRY %main (p: f32[64]) -> f32[64] {
+  %p = f32[64] parameter(0)
+  %init = (s32[], f32[64]) tuple(%c0, %p)
+  %w = (s32[], f32[64]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %out = f32[64] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_parse_trip_aware_scales_loop_body():
+    colls = parse_hlo_collectives_trip_aware(HLO_WHILE)
+    assert len(colls) == 1
+    c = colls[0]
+    assert c["trips"] == 28
+    assert c["factor_bytes"] == pytest.approx(64 * 4 * 2 * 0.5 * 28)
+
+
+def test_roofline_report_bottleneck():
+    rep = roofline_report(
+        flops_per_dev=1e12, bytes_per_dev=1e9,
+        collectives=[{"op": "all-reduce", "bytes": 1e9, "group": 16,
+                      "factor_bytes": 2e9}],
+        n_devices=256, model_flops_total=2e14)
+    assert rep["bottleneck"] in ("compute", "memory", "collective")
+    assert rep["compute_s"] == pytest.approx(1e12 / 197e12)
+    assert 0 < rep["roofline_fraction_mfu"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical grad sync on a multi-device host mesh (subprocess: needs its
+# own XLA_FLAGS before jax import)
+# ---------------------------------------------------------------------------
+
+SYNC_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.dist.collectives import make_dp_sync_fn
+
+    mesh = jax.make_mesh((2, 4), ("pod", "data"))
+    grads = {"w": jnp.arange(32, dtype=jnp.float32).reshape(8, 4),
+             "b": jnp.ones((5,), jnp.float32)}
+    for strategy in ("hierarchical", "compressed"):
+        sync = make_dp_sync_fn(mesh, strategy=strategy)
+        out = jax.jit(sync)(grads)
+        # grads replicated across DP -> mean == identity
+        tol = 1e-6 if strategy == "hierarchical" else 2e-2
+        np.testing.assert_allclose(np.asarray(out["w"]),
+                                   np.asarray(grads["w"]), rtol=tol, atol=tol)
+        np.testing.assert_allclose(np.asarray(out["b"]),
+                                   np.asarray(grads["b"]), rtol=tol, atol=tol)
+    print("SYNC_OK")
+""")
+
+
+@pytest.mark.slow
+def test_hierarchical_grad_sync_subprocess():
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", SYNC_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert "SYNC_OK" in r.stdout, r.stdout + r.stderr

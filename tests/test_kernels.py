@@ -1,0 +1,224 @@
+"""Per-kernel Pallas (interpret=True) vs pure-jnp oracle, swept over
+shapes/dtypes.  Every kernel targets TPU BlockSpec tiling; interpret mode
+executes the identical kernel body on CPU."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.warp_ops.ops import shfl_op, vote_op
+from repro.kernels.warp_ops.ref import shfl_ref, vote_ref
+from repro.kernels.tile_reduce.ops import tile_reduce_op
+from repro.kernels.tile_reduce.ref import tile_reduce_ref
+from repro.kernels.rmsnorm.ops import rmsnorm_op
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.flash_attention.ops import mha_op
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.matmul.ops import matmul_op
+from repro.kernels.matmul.ref import matmul_ref
+from repro.kernels.mse.ops import mse_op
+from repro.kernels.mse.ref import mse_ref
+from repro.kernels.moe_gating.ops import moe_gating_op
+from repro.kernels.moe_gating.ref import moe_gating_ref
+
+
+def rnd(shape, dtype=jnp.float32, seed=0, scale=1.0):
+    key = jax.random.PRNGKey(seed)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# warp_ops (vx_shfl / vx_vote)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,w", [(8, 32), (64, 32), (32, 64), (16, 128)])
+@pytest.mark.parametrize("mode,imm", [("up", 3), ("down", 5), ("bfly", 4),
+                                      ("idx", 7)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+def test_shfl_kernel_vs_ref(n, w, mode, imm, dtype):
+    x = rnd((n, w), jnp.float32, seed=n + imm) * 10
+    x = x.astype(dtype)
+    got = shfl_op(x, mode, imm, interpret=True)
+    want = shfl_ref(x, mode, imm)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n,w", [(8, 32), (64, 32), (16, 8)])
+@pytest.mark.parametrize("mode", ["all", "any", "uni", "ballot"])
+def test_vote_kernel_vs_ref(n, w, mode):
+    key = jax.random.PRNGKey(n)
+    pred = jax.random.bernoulli(key, 0.5, (n, w)).astype(jnp.int32)
+    if mode == "uni":
+        pred = pred.at[: n // 2].set(1)  # some uniform warps
+    got = vote_op(pred, mode, interpret=True)
+    want = vote_ref(pred, mode)
+    if mode == "ballot":
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        np.testing.assert_array_equal(np.asarray(got) != 0,
+                                      np.asarray(want) != 0)
+
+
+def test_vote_kernel_member_mask():
+    pred = jnp.array([[1, 0, 1, 1, 1, 1, 1, 1]], jnp.int32)
+    member = jnp.array([[1, 0, 1, 1, 1, 1, 1, 1]], jnp.int32)
+    got = vote_op(pred, "all", member, interpret=True)
+    assert bool(np.asarray(got).all())
+
+
+# ---------------------------------------------------------------------------
+# tile_reduce (vx_tile + cg::reduce)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,w", [(16, 32), (128, 64), (32, 128)])
+@pytest.mark.parametrize("tile", [4, 8, 32])
+@pytest.mark.parametrize("op", ["sum", "max", "min"])
+def test_tile_reduce_kernel_vs_ref(n, w, tile, op):
+    if tile > w:
+        pytest.skip("tile exceeds warp")
+    x = rnd((n, w), seed=n + tile) * 4
+    got = tile_reduce_op(x, tile, op, interpret=True)
+    want = tile_reduce_ref(x, tile, op)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_tile_reduce_dtypes(dtype):
+    x = (rnd((32, 32), seed=3) * 8).astype(dtype)
+    got = tile_reduce_op(x, 8, "max", interpret=True)
+    want = tile_reduce_ref(x, 8, "max")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 256), (2, 16, 512), (128, 1024),
+                                   (3, 7, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_kernel_vs_ref(shape, dtype):
+    x = rnd(shape, seed=shape[-1]).astype(dtype)
+    w = (1.0 + rnd((shape[-1],), seed=1) * 0.1).astype(dtype)
+    got = rmsnorm_op(x, w, interpret=True)
+    want = rmsnorm_ref(x, w)
+    rtol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=rtol,
+                               atol=rtol)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,h,hkv,sq,skv,d", [
+    (2, 4, 4, 128, 128, 64),     # MHA square
+    (1, 8, 2, 256, 256, 64),     # GQA 4:1
+    (1, 4, 4, 128, 384, 64),     # cross/kv-longer (non-causal)
+    (2, 2, 1, 64, 64, 128),      # MQA, head_dim 128
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_vs_ref(b, h, hkv, sq, skv, d, causal):
+    if causal and sq != skv:
+        pytest.skip("causal requires square")
+    q = rnd((b, sq, h, d), seed=1)
+    k = rnd((b, skv, hkv, d), seed=2)
+    v = rnd((b, skv, hkv, d), seed=3)
+    got = mha_op(q, k, v, causal=causal, block_q=64, block_k=64,
+                 interpret=True)
+    group = h // hkv
+    kq = jnp.repeat(k, group, axis=2) if group > 1 else k
+    vq = jnp.repeat(v, group, axis=2) if group > 1 else v
+    want = jnp.stack([
+        attention_ref(q[:, :, i].reshape(b, sq, d),
+                      kq[:, :, i].reshape(b, skv, d),
+                      vq[:, :, i].reshape(b, skv, d), causal=causal)
+        for i in range(h)], axis=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = rnd((1, 128, 2, 64), seed=4).astype(dtype)
+    k = rnd((1, 128, 2, 64), seed=5).astype(dtype)
+    v = rnd((1, 128, 2, 64), seed=6).astype(dtype)
+    got = mha_op(q, k, v, causal=True, block_q=64, block_k=64, interpret=True)
+    want = jnp.stack([
+        attention_ref(q[:, :, i], k[:, :, i], v[:, :, i], causal=True)
+        for i in range(2)], axis=2)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol, atol=tol)
+
+
+def test_flash_attention_blocks_divide_unevenly_guard():
+    """Kernel requires seq % block == 0 handled by block clamping."""
+    q = rnd((1, 96, 1, 64), seed=7)
+    k = rnd((1, 96, 1, 64), seed=8)
+    v = rnd((1, 96, 1, 64), seed=9)
+    got = mha_op(q, k, v, causal=True, block_q=96, block_k=96, interpret=True)
+    want = attention_ref(q[:, :, 0], k[:, :, 0], v[:, :, 0], causal=True)
+    np.testing.assert_allclose(np.asarray(got[:, :, 0]), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 512, 128),
+                                   (512, 256, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_kernel_vs_ref(m, k, n, dtype):
+    a = rnd((m, k), seed=m).astype(dtype)
+    b = rnd((k, n), seed=n).astype(dtype)
+    got = matmul_op(a, b, block_m=128, block_n=128, block_k=128,
+                    interpret=True)
+    want = matmul_ref(a, b)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), rtol=tol,
+                               atol=tol * 8)
+
+
+# ---------------------------------------------------------------------------
+# mse (unet.cu mse_forward)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1024, 8192, 65536])
+@pytest.mark.parametrize("warp_size", [32, 128])
+def test_mse_kernel_vs_ref(n, warp_size):
+    p = rnd((n,), seed=1)
+    t = rnd((n,), seed=2)
+    got = mse_op(p, t, warp_size=warp_size, interpret=True)
+    want = mse_ref(p, t)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# moe gating
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t,e,k", [(64, 32, 8), (256, 64, 8), (128, 128, 2),
+                                   (512, 64, 1)])
+def test_moe_gating_kernel_vs_ref(t, e, k):
+    logits = rnd((t, e), seed=t + e) * 2
+    w_got, m_got = moe_gating_op(logits, k, interpret=True)
+    w_want, m_want = moe_gating_ref(logits, k)
+    np.testing.assert_array_equal(np.asarray(m_got), np.asarray(m_want))
+    np.testing.assert_allclose(np.asarray(w_got), np.asarray(w_want),
+                               rtol=1e-5, atol=1e-6)
+    # combine weights sum to 1 over selected experts
+    np.testing.assert_allclose(np.asarray(w_got.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_moe_gating_tie_break_deterministic():
+    logits = jnp.zeros((4, 16))  # all ties -> lowest expert ids win
+    w, m = moe_gating_op(logits, 4, interpret=True)
+    expect = np.zeros((4, 16), np.int32)
+    expect[:, :4] = 1
+    np.testing.assert_array_equal(np.asarray(m), expect)

@@ -1,0 +1,199 @@
+"""PR-transformation tests: the compiler pass (paper §IV) and HW ≡ SW on
+whole thread programs, including the paper's Figure 3/4 running example."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.ir import (
+    Assign,
+    Collective,
+    If,
+    Load,
+    Store,
+    Sync,
+    ThreadProgram,
+    TilePartition,
+)
+from repro.core.pr_transform import run, transform_report
+from repro.core.warp import WarpConfig
+
+WARP = WarpConfig(warp_size=8, num_warps=4)  # the paper's eval config
+
+
+def fig3_program():
+    """Figure 3a: tile<4> partition, divergent tile work, tile.any vote."""
+    return ThreadProgram(
+        warp=WARP,
+        locals={"groupId": jnp.int32, "gtid": jnp.int32,
+                "x": jnp.float32, "r": jnp.bool_},
+        buffers={"out": ((32,), jnp.float32)},
+        stmts=[
+            TilePartition(4),
+            Assign("groupId", lambda env, tid, ctx: tid // 4),
+            If(lambda env, tid, ctx: env["groupId"] == 0, [
+                Assign("gtid", lambda env, tid, ctx: tid % 4),
+                Assign("x", lambda env, tid, ctx: env["inp"] * 2.0),
+                Sync("tile"),
+                Collective("r", "vote_any",
+                           lambda env, tid, ctx: env["x"] > 2.0),
+            ]),
+            Sync("block"),
+            Store("out", lambda env, tid, ctx: tid,
+                  lambda env, tid, ctx: env["x"]),
+        ],
+    )
+
+
+def _inputs(seed=0, n=32):
+    rng = np.random.default_rng(seed)
+    return {"inp": jnp.asarray(rng.uniform(0, 2, size=(n,)).astype(np.float32))}
+
+
+def test_fig3_hw_equals_sw():
+    prog = fig3_program()
+    inputs = _inputs()
+    hw, sw = run(prog, inputs, "hw"), run(prog, inputs, "sw")
+    for k in ("groupId", "gtid", "x", "r", "out"):
+        np.testing.assert_array_equal(np.asarray(hw[k]), np.asarray(sw[k]),
+                                      err_msg=k)
+
+
+def test_fig3_vote_scoped_to_tile_and_predicate():
+    prog = fig3_program()
+    inputs = _inputs(seed=3)
+    out = run(prog, inputs, "hw")
+    x = np.asarray(out["x"])
+    r = np.asarray(out["r"])
+    # only group 0 (tids 0..3) participates; its vote is any(x[0:4] > 2)
+    expect = (x[0:4] > 2.0).any()
+    assert (r[0:4] == expect).all()
+    assert not r[4:].any()  # non-participating lanes never written
+
+
+def test_fig3_transform_report():
+    rep = transform_report(fig3_program())
+    # paper Fig 4: gray sync/partition-only regions removed; two serialized
+    # loops remain (the work region + the store region) plus one nested-loop
+    # collective; the if was fissioned across the vote boundary.
+    assert rep.n_regions_serialized == 2
+    assert rep.n_collectives == 1
+    assert rep.n_fissioned_ifs == 1
+
+
+def test_if_else_fission():
+    """if/else spanning a sync boundary — both arms must survive fission."""
+    prog = ThreadProgram(
+        warp=WARP,
+        locals={"a": jnp.float32, "b": jnp.float32},
+        stmts=[
+            If(lambda env, tid, ctx: tid % 2 == 0,
+               [Assign("a", lambda env, tid, ctx: env["inp"] + 1.0),
+                Sync("block"),
+                Assign("b", lambda env, tid, ctx: env["a"] * 3.0)],
+               [Assign("a", lambda env, tid, ctx: env["inp"] - 1.0),
+                Sync("block"),
+                Assign("b", lambda env, tid, ctx: env["a"] * 5.0)]),
+        ],
+    )
+    inputs = _inputs(seed=4)
+    hw, sw = run(prog, inputs, "hw"), run(prog, inputs, "sw")
+    np.testing.assert_allclose(np.asarray(hw["b"]), np.asarray(sw["b"]), rtol=1e-6)
+    inp = np.asarray(inputs["inp"])
+    tid = np.arange(32)
+    expect = np.where(tid % 2 == 0, (inp + 1) * 3, (inp - 1) * 5)
+    np.testing.assert_allclose(np.asarray(hw["b"]), expect, rtol=1e-6)
+
+
+def test_special_variable_rewrite():
+    """threadIdx -> loopIdx / outer*warpSize+inner (paper step 5): tid must
+    be consistent across paths and match the block linearization."""
+    prog = ThreadProgram(
+        warp=WARP, locals={"t": jnp.int32, "w": jnp.int32, "l": jnp.int32},
+        stmts=[
+            Assign("t", lambda env, tid, ctx: tid),
+            Assign("w", lambda env, tid, ctx: tid // ctx.warp.warp_size),
+            Assign("l", lambda env, tid, ctx: tid % ctx.warp.warp_size),
+        ],
+    )
+    hw, sw = run(prog, {}, "hw"), run(prog, {}, "sw")
+    np.testing.assert_array_equal(np.asarray(hw["t"]), np.arange(32))
+    for k in ("t", "w", "l"):
+        np.testing.assert_array_equal(np.asarray(hw[k]), np.asarray(sw[k]))
+
+
+def test_shared_memory_store_load():
+    """Cross-warp reduction through a shared buffer (the 'reduce' pattern)."""
+    prog = ThreadProgram(
+        warp=WARP,
+        locals={"v": jnp.float32, "partial": jnp.float32, "total": jnp.float32},
+        buffers={"smem": ((4,), jnp.float32)},
+        stmts=[
+            Assign("v", lambda env, tid, ctx: env["inp"]),
+            Collective("partial", "warp_reduce",
+                       lambda env, tid, ctx: env["v"], {"op": "sum"}),
+            If(lambda env, tid, ctx: tid % 8 == 0, [
+                Store("smem", lambda env, tid, ctx: tid // 8,
+                      lambda env, tid, ctx: env["partial"]),
+            ]),
+            Sync("block"),
+            Load("total", "smem", lambda env, tid, ctx: tid % 4),
+        ],
+    )
+    inputs = _inputs(seed=5)
+    hw, sw = run(prog, inputs, "hw"), run(prog, inputs, "sw")
+    np.testing.assert_allclose(np.asarray(hw["total"]), np.asarray(sw["total"]),
+                               rtol=1e-5)
+    inp = np.asarray(inputs["inp"]).reshape(4, 8)
+    np.testing.assert_allclose(np.asarray(hw["smem"]), inp.sum(-1), rtol=1e-5)
+
+
+@pytest.mark.parametrize("kind,params", [
+    ("shfl_up", {"delta": 2}),
+    ("shfl_down", {"delta": 3}),
+    ("shfl_xor", {"mask": 1}),
+    ("vote_all", {}),
+    ("vote_any", {}),
+    ("vote_ballot", {}),
+    ("warp_reduce", {"op": "max"}),
+    ("warp_scan", {"op": "sum"}),
+])
+def test_every_collective_kind_hw_eq_sw(kind, params):
+    prog = ThreadProgram(
+        warp=WARP, locals={"x": jnp.float32, "r": jnp.float32},
+        stmts=[
+            Assign("x", lambda env, tid, ctx: env["inp"]),
+            Collective("r", kind, lambda env, tid, ctx: env["x"] > 1.0
+                       if kind.startswith("vote") else env["x"], params),
+        ],
+    )
+    inputs = _inputs(seed=6)
+    hw, sw = run(prog, inputs, "hw"), run(prog, inputs, "sw")
+    np.testing.assert_allclose(np.asarray(hw["r"]), np.asarray(sw["r"]),
+                               rtol=1e-6)
+
+
+def test_tile_reconfiguration_sequence():
+    """vx_tile(...,4) ... vx_tile(...,warp_size): reset restores full-warp
+    collectives, matching Figure 3b's epilogue."""
+    prog = ThreadProgram(
+        warp=WARP, locals={"r4": jnp.float32, "r8": jnp.float32},
+        stmts=[
+            TilePartition(4),
+            Collective("r4", "warp_reduce", lambda env, tid, ctx: env["inp"],
+                       {"op": "sum"}),
+            TilePartition(WARP.warp_size),
+            Collective("r8", "warp_reduce", lambda env, tid, ctx: env["inp"],
+                       {"op": "sum"}),
+        ],
+    )
+    inputs = _inputs(seed=7)
+    for path in ("hw", "sw"):
+        out = run(prog, inputs, path)
+        inp = np.asarray(inputs["inp"])
+        np.testing.assert_allclose(
+            np.asarray(out["r4"]),
+            np.repeat(inp.reshape(8, 4).sum(-1), 4), rtol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(out["r8"]),
+            np.repeat(inp.reshape(4, 8).sum(-1), 8), rtol=1e-5)

@@ -1,0 +1,200 @@
+"""HW ≡ SW ≡ oracle semantics for every warp-level primitive (paper Table I/III)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import repro.core.primitives as P
+from repro.core import TileGroup, WarpConfig, group_mask_for, size_from_group_mask
+
+
+def rand(shape, dtype=np.int32, seed=0, lo=0, hi=100):
+    rng = np.random.default_rng(seed)
+    if np.issubdtype(dtype, np.floating):
+        return jnp.asarray(rng.uniform(-4, 4, size=shape).astype(dtype))
+    return jnp.asarray(rng.integers(lo, hi, size=shape).astype(dtype))
+
+
+WS = [4, 8, 16, 32, 64, 128]
+
+
+# ---------------------------------------------------------------------------
+# Oracles: straight numpy statements of the CUDA semantics
+# ---------------------------------------------------------------------------
+
+def np_shfl_up(v, d):
+    out = v.copy()
+    out[..., d:] = v[..., :-d] if d else v
+    return out
+
+
+def np_shfl_down(v, d):
+    out = v.copy()
+    if d:
+        out[..., :-d] = v[..., d:]
+    return out
+
+
+def np_shfl_xor(v, m):
+    idx = np.arange(v.shape[-1]) ^ m
+    return v[..., idx]
+
+
+@pytest.mark.parametrize("ws", WS)
+@pytest.mark.parametrize("backend", ["hw", "sw"])
+def test_shfl_up_down_oracle(ws, backend):
+    v = rand((2, ws))
+    for d in [0, 1, ws // 2, ws - 1]:
+        np.testing.assert_array_equal(
+            np.asarray(P.shfl_up(v, d, backend=backend)), np_shfl_up(np.asarray(v), d))
+        np.testing.assert_array_equal(
+            np.asarray(P.shfl_down(v, d, backend=backend)), np_shfl_down(np.asarray(v), d))
+
+
+@pytest.mark.parametrize("ws", WS)
+@pytest.mark.parametrize("backend", ["hw", "sw"])
+def test_shfl_xor_oracle(ws, backend):
+    v = rand((3, ws), seed=2)
+    for m in [1, 2, ws // 2, ws - 1]:
+        np.testing.assert_array_equal(
+            np.asarray(P.shfl_xor(v, m, backend=backend)), np_shfl_xor(np.asarray(v), m))
+
+
+@pytest.mark.parametrize("ws", [8, 32])
+@pytest.mark.parametrize("backend", ["hw", "sw"])
+def test_shfl_idx_scalar_and_vector(ws, backend):
+    v = rand((2, ws), seed=3)
+    out = P.shfl_idx(v, 5, backend=backend)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.broadcast_to(np.asarray(v)[..., 5:6], v.shape))
+    src = rand((2, ws), seed=4, lo=0, hi=ws)
+    out = P.shfl_idx(v, src, backend=backend)
+    expect = np.take_along_axis(np.asarray(v), np.asarray(src) % ws, axis=-1)
+    np.testing.assert_array_equal(np.asarray(out), expect)
+
+
+@pytest.mark.parametrize("ws", WS)
+@pytest.mark.parametrize("backend", ["hw", "sw"])
+def test_votes_oracle(ws, backend):
+    p = rand((4, ws), seed=5, lo=0, hi=2).astype(bool)
+    np_p = np.asarray(p)
+    np.testing.assert_array_equal(
+        np.asarray(P.vote_all(p, backend=backend)),
+        np.broadcast_to(np_p.all(-1, keepdims=True), np_p.shape))
+    np.testing.assert_array_equal(
+        np.asarray(P.vote_any(p, backend=backend)),
+        np.broadcast_to(np_p.any(-1, keepdims=True), np_p.shape))
+
+
+@pytest.mark.parametrize("ws", [8, 32, 64, 128])
+@pytest.mark.parametrize("backend", ["hw", "sw"])
+def test_ballot_oracle(ws, backend):
+    p = rand((3, ws), seed=6, lo=0, hi=2).astype(bool)
+    got = np.asarray(P.vote_ballot(p, backend=backend))
+    np_p = np.asarray(p)
+    n_words = (ws + 31) // 32
+    for r in range(p.shape[0]):
+        words = [sum(int(np_p[r, w * 32 + i]) << i
+                     for i in range(min(32, ws - w * 32)))
+                 for w in range(n_words)]
+        if n_words == 1:
+            assert int(got[r]) == words[0]
+        else:
+            assert [int(x) for x in got[r]] == words
+
+
+@pytest.mark.parametrize("backend", ["hw", "sw"])
+def test_vote_uni(backend):
+    uniform = jnp.ones((2, 16), jnp.int32) * 7
+    mixed = uniform.at[0, 3].set(5)
+    assert bool(jnp.all(P.vote_uni(uniform, backend=backend)))
+    got = P.vote_uni(mixed, backend=backend)
+    assert not bool(jnp.any(got[0])) and bool(jnp.all(got[1]))
+
+
+@pytest.mark.parametrize("backend", ["hw", "sw"])
+def test_vote_member_mask(backend):
+    # lanes outside the member mask must not affect the vote
+    p = jnp.array([[True, False, True, True, True, True, True, True]])
+    mask = 0b11111101  # exclude lane 1
+    assert bool(jnp.all(P.vote_all(p, member_mask=mask, backend=backend)))
+    assert not bool(jnp.all(P.vote_all(p, backend=backend)))
+
+
+@pytest.mark.parametrize("ws", WS)
+@pytest.mark.parametrize("op", ["sum", "max", "min"])
+@pytest.mark.parametrize("backend", ["hw", "sw"])
+def test_warp_reduce_oracle(ws, op, backend):
+    v = rand((2, ws), dtype=np.float32, seed=7)
+    got = np.asarray(P.warp_reduce(v, op, backend=backend))
+    fn = {"sum": np.sum, "max": np.max, "min": np.min}[op]
+    expect = np.broadcast_to(fn(np.asarray(v), -1, keepdims=True), v.shape)
+    # tree vs serial accumulation order differs: rtol alone fails on
+    # catastrophic-cancellation sums near zero, hence the atol term.
+    np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["hw", "sw"])
+def test_warp_scan_oracle(backend):
+    v = rand((2, 32), dtype=np.float32, seed=8)
+    got = np.asarray(P.warp_scan(v, "sum", backend=backend))
+    np.testing.assert_allclose(got, np.cumsum(np.asarray(v), -1), rtol=1e-5)
+
+
+@pytest.mark.parametrize("tile_size", [4, 8, 16])
+@pytest.mark.parametrize("backend", ["hw", "sw"])
+def test_tile_segments(tile_size, backend):
+    """Collectives under vx_tile act within tile segments only."""
+    warp = WarpConfig(warp_size=32)
+    tile = TileGroup(tile_size, warp)
+    v = rand((2, 32), dtype=np.float32, seed=9)
+    got = np.asarray(P.tile_reduce(v, tile, "sum", backend=backend))
+    seg = np.asarray(v).reshape(2, 32 // tile_size, tile_size)
+    expect = np.broadcast_to(seg.sum(-1, keepdims=True), seg.shape).reshape(2, 32)
+    np.testing.assert_allclose(got, expect, rtol=1e-6)
+
+    d = 1
+    got = np.asarray(P.shfl_up(v, d, tile=tile, backend=backend))
+    expect = np_shfl_up(seg, d).reshape(2, 32)
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_group_masks_table2():
+    """Table II of the paper, verbatim."""
+    assert group_mask_for(32, 32) == 0b10000000
+    assert group_mask_for(16, 32) == 0b10001000
+    assert group_mask_for(8, 32) == 0b10101010
+    assert group_mask_for(4, 32) == 0b11111111
+    for size in (4, 8, 16, 32):
+        assert size_from_group_mask(group_mask_for(size, 32), 32) == size
+
+
+def test_match_any():
+    v = jnp.array([[1, 2, 1, 3, 2, 1, 3, 3]], jnp.int32)
+    for backend in ("hw", "sw"):
+        got = np.asarray(P.match_any(v, backend=backend))[0]
+        assert got[0] == 0b00100101  # lanes 0,2,5 share value 1
+        assert got[1] == 0b00010010  # lanes 1,4 share value 2
+        assert got[3] == 0b11001000  # lanes 3,6,7 share value 3
+
+
+def test_grad_through_primitives():
+    """Both paths must be differentiable (they sit inside model losses)."""
+    import jax
+
+    v = rand((1, 16), dtype=np.float32, seed=10)
+    for backend in ("hw", "sw"):
+        g = jax.grad(lambda x: P.warp_reduce(x, "sum", backend=backend).sum())(v)
+        np.testing.assert_allclose(np.asarray(g), 16.0, rtol=1e-6)
+        g2 = jax.grad(lambda x: P.shfl_down(x, 2, backend=backend).sum())(v)
+        assert np.asarray(g2).shape == (1, 16)
+
+
+def test_jit_both_backends():
+    import jax
+
+    v = rand((2, 32), dtype=np.float32, seed=11)
+    for backend in ("hw", "sw"):
+        f = jax.jit(lambda x: P.warp_reduce(x, "sum", backend=backend))
+        np.testing.assert_allclose(np.asarray(f(v)), np.asarray(
+            P.warp_reduce(v, "sum", backend=backend)))

@@ -1,0 +1,156 @@
+"""Hypothesis property tests for the system's invariants.
+
+Invariant 1 (the paper's core contract): the HW path and the SW path are
+*semantically identical* for every primitive, every warp/tile geometry, every
+member mask — they differ only in where the exchange happens.
+
+Invariant 2: algebraic laws of the collectives (shuffle round-trips, ballot
+popcount == any-count, reduce == segment fold, scan last == reduce).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+import repro.core.primitives as P
+from repro.core import TileGroup, WarpConfig
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+pow2_ws = st.sampled_from([4, 8, 16, 32, 64])
+small_batch = st.integers(min_value=1, max_value=3)
+
+
+def _vals(draw, batch, ws, dtype=np.int32):
+    data = draw(st.lists(st.integers(-1000, 1000),
+                         min_size=batch * ws, max_size=batch * ws))
+    return jnp.asarray(np.asarray(data, dtype=dtype).reshape(batch, ws))
+
+
+@st.composite
+def warp_values(draw):
+    ws = draw(pow2_ws)
+    batch = draw(small_batch)
+    return _vals(draw, batch, ws), ws
+
+
+@given(warp_values(), st.integers(0, 63))
+@settings(**SETTINGS)
+def test_shfl_hw_eq_sw(wv, delta):
+    v, ws = wv
+    d = delta % ws
+    for f in (P.shfl_up, P.shfl_down):
+        np.testing.assert_array_equal(
+            np.asarray(f(v, d, backend="hw")), np.asarray(f(v, d, backend="sw")))
+    m = delta % ws
+    np.testing.assert_array_equal(
+        np.asarray(P.shfl_xor(v, m, backend="hw")),
+        np.asarray(P.shfl_xor(v, m, backend="sw")))
+
+
+@given(warp_values())
+@settings(**SETTINGS)
+def test_shfl_xor_involution(wv):
+    """shfl_xor(shfl_xor(v, m), m) == v — butterfly is its own inverse."""
+    v, ws = wv
+    for m in (1, ws // 2, ws - 1):
+        for b in ("hw", "sw"):
+            r = P.shfl_xor(P.shfl_xor(v, m, backend=b), m, backend=b)
+            np.testing.assert_array_equal(np.asarray(r), np.asarray(v))
+
+
+@given(warp_values(), st.integers(0, 2**32 - 1))
+@settings(**SETTINGS)
+def test_votes_hw_eq_sw_with_masks(wv, raw_mask):
+    v, ws = wv
+    pred = v > 0
+    mask = raw_mask | 1  # lane 0 always a member (vote_uni needs >= 1 member)
+    for f in (P.vote_all, P.vote_any):
+        np.testing.assert_array_equal(
+            np.asarray(f(pred, member_mask=mask, backend="hw")),
+            np.asarray(f(pred, member_mask=mask, backend="sw")))
+    np.testing.assert_array_equal(
+        np.asarray(P.vote_ballot(pred, member_mask=mask, backend="hw")),
+        np.asarray(P.vote_ballot(pred, member_mask=mask, backend="sw")))
+    np.testing.assert_array_equal(
+        np.asarray(P.vote_uni(v, member_mask=mask, backend="hw")),
+        np.asarray(P.vote_uni(v, member_mask=mask, backend="sw")))
+
+
+@given(warp_values())
+@settings(**SETTINGS)
+def test_ballot_popcount_equals_sum(wv):
+    """popcount(ballot(p)) == sum(p) — ballot and reduction must agree."""
+    v, ws = wv
+    pred = v > 0
+    ballot = np.asarray(P.vote_ballot(pred, backend="hw"))
+    counts = np.asarray(pred.sum(-1))
+    if ballot.ndim == 1:  # <=32 lanes: single word
+        pop = np.array([bin(int(w)).count("1") for w in ballot])
+    else:
+        pop = np.array([sum(bin(int(w)).count("1") for w in row)
+                        for row in ballot])
+    np.testing.assert_array_equal(pop, counts)
+
+
+@given(warp_values(), st.sampled_from(["sum", "max", "min"]))
+@settings(**SETTINGS)
+def test_reduce_hw_eq_sw_and_oracle(wv, op):
+    v, ws = wv
+    hw = np.asarray(P.warp_reduce(v, op, backend="hw"))
+    sw = np.asarray(P.warp_reduce(v, op, backend="sw"))
+    np.testing.assert_array_equal(hw, sw)  # ints: exact
+    fn = {"sum": np.sum, "max": np.max, "min": np.min}[op]
+    np.testing.assert_array_equal(
+        hw, np.broadcast_to(fn(np.asarray(v), -1, keepdims=True), v.shape))
+
+
+@given(warp_values())
+@settings(**SETTINGS)
+def test_scan_last_equals_reduce(wv):
+    v, ws = wv
+    for b in ("hw", "sw"):
+        scan = np.asarray(P.warp_scan(v, "sum", backend=b))
+        red = np.asarray(P.warp_reduce(v, "sum", backend=b))
+        np.testing.assert_array_equal(scan[..., -1], red[..., -1])
+
+
+@st.composite
+def tiled_values(draw):
+    ws = draw(st.sampled_from([8, 16, 32]))
+    size = draw(st.sampled_from([s for s in (4, 8, 16) if s <= ws]))
+    batch = draw(small_batch)
+    return _vals(draw, batch, ws), TileGroup(size, WarpConfig(warp_size=ws))
+
+
+@given(tiled_values())
+@settings(**SETTINGS)
+def test_tile_reduce_segment_locality(tv):
+    """A tile collective must never mix values across tile boundaries."""
+    v, tile = tv
+    ws, size = tile.warp.warp_size, tile.size
+    for b in ("hw", "sw"):
+        got = np.asarray(P.tile_reduce(v, tile, "sum", backend=b))
+        seg = np.asarray(v).reshape(v.shape[0], ws // size, size)
+        expect = np.broadcast_to(seg.sum(-1, keepdims=True), seg.shape)
+        np.testing.assert_array_equal(got, expect.reshape(v.shape))
+
+
+@given(tiled_values(), st.integers(1, 7))
+@settings(**SETTINGS)
+def test_tile_shfl_up_down_compose(tv, delta):
+    """shfl_down(shfl_up(v, d), d) restores interior lanes of each segment."""
+    v, tile = tv
+    d = delta % tile.size
+    for b in ("hw", "sw"):
+        r = P.shfl_down(P.shfl_up(v, d, tile=tile, backend=b), d,
+                        tile=tile, backend=b)
+        got = np.asarray(r).reshape(v.shape[0], -1, tile.size)
+        want = np.asarray(v).reshape(v.shape[0], -1, tile.size)
+        if d:
+            np.testing.assert_array_equal(got[..., d:-d] if d < tile.size - d
+                                          else got[..., 0:0],
+                                          want[..., d:-d] if d < tile.size - d
+                                          else want[..., 0:0])
+        else:
+            np.testing.assert_array_equal(got, want)

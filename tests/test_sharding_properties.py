@@ -1,0 +1,136 @@
+"""Hypothesis property tests for the sharding rule engine.
+
+System invariant: every PartitionSpec the engine emits must be *valid* for
+its shape on its mesh — each dim's assigned axes divide the dim — across
+arbitrary shapes, meshes, and policies.  This is the property the 512-chip
+dry-run depends on (an invalid spec is a compile failure at scale).
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import (
+    ShardingPolicy,
+    batch_pspecs,
+    cache_spec,
+    param_spec,
+)
+
+
+class FakeMesh:
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+        self.axis_names = tuple(axes)
+
+
+def _axes_size(mesh, entry):
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in entry)
+    return mesh.shape[entry]
+
+
+def assert_valid(spec: P, shape, mesh):
+    assert len(spec) <= len(shape)
+    seen = set()
+    for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+        n = _axes_size(mesh, entry)
+        assert dim % n == 0, (spec, shape, mesh.shape)
+        if entry is not None:
+            names = entry if isinstance(entry, tuple) else (entry,)
+            for a in names:
+                assert a not in seen, f"axis {a} used twice in {spec}"
+                seen.add(a)
+
+
+mesh_st = st.sampled_from([
+    FakeMesh(data=16, model=16),
+    FakeMesh(pod=2, data=16, model=16),
+    FakeMesh(data=4, model=2),
+    FakeMesh(data=1, model=1),
+])
+
+dim_st = st.sampled_from([1, 2, 3, 5, 8, 12, 16, 64, 80, 100, 127, 128,
+                          256, 1024, 2048, 3072, 49155, 151936])
+
+policy_st = st.sampled_from([
+    ShardingPolicy(),
+    ShardingPolicy(head_aware=True, n_heads=12, n_kv_heads=2),
+    ShardingPolicy(fsdp_axis=("data", "model"), tp_axis=None),
+    ShardingPolicy(fsdp_axis=("data", "model"), tp_axis=None,
+                   batch_axes=("pod", "data")),
+    ShardingPolicy(kv_seq_tp=True),
+])
+
+path_st = st.sampled_from([
+    "embed", "lm_head", "vit_proj", "ln_f",
+    "layers/attn/wq", "layers/attn/wk", "layers/attn/wv", "layers/attn/wo",
+    "layers/attn/bq", "layers/mlp/w_gate", "layers/moe/w_gate",
+    "layers/moe/router", "layers/tm/wr", "layers/mamba/in_proj",
+    "encoder/attn/wq", "shared_attn/attn/wk",
+])
+
+
+@settings(max_examples=300, deadline=None)
+@given(path=path_st, dims=st.lists(dim_st, min_size=1, max_size=4),
+       mesh=mesh_st, policy=policy_st)
+def test_param_spec_always_valid(path, dims, mesh, policy):
+    shape = tuple(dims)
+    spec = param_spec(path, shape, mesh, policy)
+    assert_valid(spec, shape, mesh)
+
+
+@settings(max_examples=300, deadline=None)
+@given(name=st.sampled_from(["k", "v", "attn_k", "latent", "rope", "wkv",
+                             "shift_tm", "conv", "ssm", "unknown"]),
+       dims=st.lists(dim_st, min_size=2, max_size=5),
+       mesh=mesh_st, policy=policy_st)
+def test_cache_spec_always_valid(name, dims, mesh, policy):
+    shape = tuple(dims)
+    spec = cache_spec(name, shape, mesh, policy)
+    assert_valid(spec, shape, mesh)
+
+
+@settings(max_examples=150, deadline=None)
+@given(b=dim_st, s=dim_st, mesh=mesh_st, policy=policy_st)
+def test_batch_specs_always_valid(b, s, mesh, policy):
+    shapes = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+              "pos": jax.ShapeDtypeStruct((b,), jnp.int32)}
+    specs = batch_pspecs(shapes, mesh, policy)
+    assert_valid(specs["tokens"], (b, s), mesh)
+    assert_valid(specs["pos"], (b,), mesh)
+
+
+def test_small_leaves_replicate():
+    mesh = FakeMesh(data=16, model=16)
+    for path in ("layers/ln1", "layers/attn/bq", "ln_f"):
+        assert param_spec(path, (80, 4096), mesh) == P()
+
+
+def test_head_aware_blocks_indivisible_heads():
+    mesh = FakeMesh(data=16, model=16)
+    pol = ShardingPolicy(head_aware=True, n_heads=64, n_kv_heads=8)
+    # kv heads (8) don't divide model (16): no TP on the kv projections
+    assert param_spec("layers/attn/wk", (80, 8192, 1024), mesh, pol) == \
+        P(None, "data", None)
+    # q heads (64) do divide: column-parallel wq, row-parallel wo
+    assert param_spec("layers/attn/wq", (80, 8192, 8192), mesh, pol) == \
+        P(None, "data", "model")
+    assert param_spec("layers/attn/wo", (80, 8192, 8192), mesh, pol) == \
+        P(None, "model", "data")
+
+
+def test_kv_seq_tp_prefers_sequence():
+    mesh = FakeMesh(data=16, model=16)
+    pol = ShardingPolicy(kv_seq_tp=True)
+    assert cache_spec("k", (80, 128, 32768, 8, 128), mesh, pol) == \
+        P(None, "data", "model", None, None)
+    # non-KV state leaves unchanged
+    assert cache_spec("wkv", (32, 128, 64, 64, 64), mesh, pol) == \
+        cache_spec("wkv", (32, 128, 64, 64, 64), mesh)
