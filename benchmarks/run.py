@@ -1,7 +1,8 @@
 """Benchmark entry point: one section per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run            # fig5 + table4 (+ roofline if artifacts exist)
+  PYTHONPATH=src python -m benchmarks.run            # fig5 + table4 + serve (+ roofline if artifacts exist)
   PYTHONPATH=src python -m benchmarks.run --section fig5
+  PYTHONPATH=src python -m benchmarks.run --section serve   # decode fast path vs seed engine
 """
 
 from __future__ import annotations
@@ -46,7 +47,7 @@ def roofline_section(art_dir: str = "artifacts/dryrun_final"):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
-                    choices=["all", "fig5", "table4", "roofline"])
+                    choices=["all", "fig5", "table4", "serve", "roofline"])
     args = ap.parse_args()
 
     if args.section in ("all", "fig5"):
@@ -55,6 +56,9 @@ def main():
     if args.section in ("all", "table4"):
         from benchmarks.table4_overhead import main as table4
         table4()
+    if args.section in ("all", "serve"):
+        from benchmarks.serve_decode import main as serve_decode
+        serve_decode([])
     if args.section in ("all", "roofline"):
         roofline_section()
 

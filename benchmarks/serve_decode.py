@@ -1,0 +1,180 @@
+"""Decode fast-path benchmark: seed engine vs fused zero-copy hot loop.
+
+The serving analogue of the paper's Fig. 5: the seed engine is the SW path
+(every token re-materializes the full KV cache because the undonated input
+cannot be written through, dense-masks all of ``max_seq``, samples in a
+separate dispatch, and host-syncs per slot), the fast path is the HW-path
+discipline (state stays buffer-resident via donation, the whole token step
+is one fused dispatch, attention touches only the live prefix).
+
+Reported per engine:
+  tok/s        wall-clock serving throughput (jit-warmed, CPU or TPU)
+  step bytes   algorithmic bytes for one decode step (trip-aware jaxpr
+               walker; isolates dense-masked vs attend_len-bounded reads)
+  copy bytes   cache bytes re-materialized per token: the full pool for the
+               undonated seed step, 0 when XLA aliases the donated buffers
+               (verified from the compiled HLO's input_output_alias)
+
+  PYTHONPATH=src python benchmarks/serve_decode.py              # full
+  PYTHONPATH=src python benchmarks/serve_decode.py --smoke      # CI shapes
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import reduced_config
+from repro.models.lm import Model
+from repro.roofline.jaxpr_cost import trace_cost
+from repro.serve.engine import Request, ServeEngine
+
+
+def _requests(n: int, vocab: int, prompt_lo: int, prompt_hi: int,
+              max_new: int, seed: int = 0) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(
+                        0, vocab, int(rng.integers(prompt_lo, prompt_hi))
+                    ).tolist(),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _serve_once(engine: ServeEngine, reqs: List[Request]) -> Dict:
+    reqs = [dataclasses.replace(r, generated=None) for r in reqs]
+    t0 = time.perf_counter()
+    results = engine.serve(reqs)
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(v) for v in results.values())
+    return {"tokens": n_tok, "seconds": dt, "tok_s": n_tok / dt}
+
+
+def _step_cost(model, params, slots: int, max_seq: int, attend_len) -> float:
+    """Algorithmic bytes proxy for one decode step (jaxpr cost walker).
+
+    Both rows are traced through the scan-form decode step so the column
+    isolates the *algorithmic* traffic difference — dense O(max_seq)
+    attention vs the attend_len-bounded read.  Buffer-level effects
+    (the undonated cache re-materialization, in-place aliasing of the
+    unrolled fused step) are invisible at the jaxpr level — the walker
+    charges static slices XLA fuses away — and are reported separately
+    via copy_bytes and the HLO donation check.
+    """
+    cache = jax.eval_shape(lambda: model.init_cache(slots, max_seq))
+    tok = jax.ShapeDtypeStruct((slots,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((slots,), jnp.int32)
+
+    def step(params, cache, tok, pos):
+        return model.decode_step(params, cache, tok, pos, attend_len)
+
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return trace_cost(step, pshapes, cache, tok, pos)["bytes_total"]
+
+
+def _cache_nbytes(model, slots: int, max_seq: int) -> int:
+    cache = jax.eval_shape(lambda: model.init_cache(slots, max_seq))
+    return int(sum(np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree.leaves(cache)))
+
+
+def _donated(engine: ServeEngine, params, slots: int, max_seq: int) -> bool:
+    """Does the compiled fused step alias the cache buffers in place?"""
+    cache = jax.eval_shape(lambda: engine.model.init_cache(slots, max_seq))
+    arr = jax.ShapeDtypeStruct((slots,), jnp.int32)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    txt = engine._fused_step.lower(
+        jax.eval_shape(engine.model.init, jax.random.PRNGKey(0)),
+        cache, arr, arr, arr, key, engine.attend_block).compile().as_text()
+    return "input_output_alias" in txt
+
+
+def run(smoke: bool = False, trials: int = 3) -> List[Dict]:
+    arch = "qwen2-1.5b"
+    if smoke:
+        slots, max_seq, n_req, max_new, plo, phi = 2, 128, 3, 8, 4, 12
+        trials = 1
+    else:
+        # production-shaped regime: the pool is sized for long sequences,
+        # requests occupy a fraction of it — exactly where dense-masked
+        # O(max_seq) attention and the per-token cache copy hurt the seed
+        slots, max_seq, n_req, max_new, plo, phi = 4, 1024, 8, 64, 32, 96
+    cfg = reduced_config(arch)
+    if not smoke:
+        cfg = dataclasses.replace(cfg, max_seq=max_seq)
+    model = Model(cfg, compute_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+
+    reqs = _requests(n_req, cfg.vocab, plo, phi, max_new)
+    engines = {
+        fused: ServeEngine(model, params, max_seq=max_seq,
+                           batch_slots=slots, temperature=0.0, seed=0,
+                           fused=fused)
+        for fused in (False, True)
+    }
+    best: Dict[bool, Dict] = {}
+    for f, e in engines.items():
+        _serve_once(e, reqs)  # warm all jit caches (same shapes as timed)
+    # interleave trials so machine noise hits both engines alike
+    for _ in range(trials):
+        for f, e in engines.items():
+            s = _serve_once(e, reqs)
+            if f not in best or s["tok_s"] > best[f]["tok_s"]:
+                best[f] = s
+
+    rows = []
+    for fused in (False, True):
+        engine, stats = engines[fused], best[fused]
+        attend = engine._attend_len(phi + max_new) if fused else max_seq
+        step_bytes = _step_cost(model, params, slots, max_seq,
+                                attend if fused else None)
+        copy_bytes = 0 if fused else _cache_nbytes(model, slots, max_seq)
+        rows.append({
+            "engine": "fast-path" if fused else "seed",
+            "tok_s": stats["tok_s"],
+            "tokens": stats["tokens"],
+            "seconds": stats["seconds"],
+            "step_bytes": step_bytes,
+            "copy_bytes_per_tok": copy_bytes,
+            "attend_len": attend,
+            "donated": _donated(engine, params, slots, max_seq)
+            if fused else False,
+        })
+    rows.append({
+        "engine": "SPEEDUP",
+        "tok_s": rows[1]["tok_s"] / rows[0]["tok_s"],
+        "step_bytes": rows[0]["step_bytes"] / max(rows[1]["step_bytes"], 1),
+    })
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI (no perf claims)")
+    args = ap.parse_args(argv)
+    rows = run(smoke=args.smoke)
+    shape = "smoke" if args.smoke else "slots=4 max_seq=1024"
+    print(f"\n== Serve decode: seed engine vs fused fast path ({shape}) ==")
+    print(f"{'engine':10s} {'tok/s':>8s} {'tokens':>7s} {'wall_s':>7s} "
+          f"{'step_MB':>8s} {'copy_MB/tok':>12s} {'attend':>7s} {'donated':>8s}")
+    for r in rows:
+        if r["engine"] == "SPEEDUP":
+            print(f"{'SPEEDUP':10s} {r['tok_s']:7.2f}x {'':7s} {'':7s} "
+                  f"{r['step_bytes']:7.2f}x")
+        else:
+            print(f"{r['engine']:10s} {r['tok_s']:8.1f} {r['tokens']:7d} "
+                  f"{r['seconds']:7.2f} {r['step_bytes'] / 1e6:8.2f} "
+                  f"{r['copy_bytes_per_tok'] / 1e6:12.2f} "
+                  f"{r['attend_len']:7d} {str(r['donated']):>8s}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

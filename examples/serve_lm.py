@@ -1,5 +1,14 @@
 """Serving example: batched generation with the slot engine.
 
+The engine runs its decode fast path by default (``fused=True``): one
+jitted step per token fusing decode + sampling + slot bookkeeping, with the
+KV cache donated so XLA updates it in place (the seed path copied the full
+pool every token), attention bounded to the live sequence prefix via a
+host-tracked bucketed ``attend_len``, and free slots admitted together
+through one bucketed right-padded prefill.  Pass ``fused=False`` to get the
+seed per-token-dispatch loop — ``benchmarks/serve_decode.py`` races the
+two.  See README "The decode fast path".
+
   PYTHONPATH=src python examples/serve_lm.py
 """
 
@@ -20,7 +29,7 @@ CFG = ModelConfig(name="demo-serve", family="dense", n_layers=4,
 model = Model(CFG, compute_dtype=jnp.float32)
 params = model.init(jax.random.PRNGKey(0))
 engine = ServeEngine(model, params, max_seq=128, batch_slots=4,
-                     temperature=0.8, seed=3)
+                     temperature=0.8, seed=3)  # fused fast path (default)
 
 # --- batch generate (equal-length prompts) ---------------------------------
 prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0, CFG.vocab)

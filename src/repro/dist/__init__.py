@@ -1,0 +1,20 @@
+"""Distribution layer: sharding rule engine + gradient-sync collectives.
+
+``repro.dist.sharding`` turns (leaf path, shape, mesh, policy) into a
+PartitionSpec; ``repro.dist.collectives`` builds the data-parallel gradient
+sync used by the trainer on a pod.  Everything here is mesh-agnostic: the
+engine only consults ``mesh.shape`` / ``mesh.axis_names``, so it works with
+both real meshes and test doubles.
+"""
+
+from repro.dist.sharding import (  # noqa: F401
+    DEFAULT_POLICY,
+    ShardingPolicy,
+    batch_pspecs,
+    cache_pspecs,
+    cache_spec,
+    param_pspecs,
+    param_spec,
+    shardings,
+)
+from repro.dist.collectives import make_dp_sync_fn  # noqa: F401

@@ -1,0 +1,72 @@
+"""Data-parallel gradient synchronization strategies.
+
+``make_dp_sync_fn`` returns a jit-able ``grads -> grads`` mean over the
+data-parallel mesh axes.  Two strategies:
+
+  hierarchical — two-stage reduce: mean inside each pod ('data'), then mean
+      across pods ('pod').  On a multi-pod fabric the cross-pod hop is the
+      slow link, so reducing inside the pod first sends 1/pod_size of the
+      bytes across it (the standard hierarchical all-reduce).
+  compressed — int8-quantize (per-leaf absmax scale) before the cross-pod
+      stage, moved as an int8 all-gather (+ one scale scalar per pod) so
+      the slow hop really carries 1 byte/element; each pod's scale rides
+      along, so the only added error is the quantization itself (bounded
+      by scale/2 per element; tests allow 2e-2 relative).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def _quantize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def make_dp_sync_fn(mesh, strategy: str = "hierarchical",
+                    dp_axes: Tuple[str, ...] = ("pod", "data")) -> Callable:
+    """Mean-reduce grads over the mesh's data-parallel axes.
+
+    The returned function is shard_map'ed over the full mesh with
+    replicated specs: each device contributes its (replicated or
+    data-parallel) copy and every device receives the mean.
+    """
+    axes = tuple(a for a in dp_axes if a in mesh.axis_names)
+    if not axes:
+        return lambda grads: grads
+    inner, outer = axes[-1], axes[:-1]
+
+    def sync_leaf(x):
+        if strategy == "compressed" and outer:
+            x = jax.lax.pmean(x, inner)
+            q, scale = _quantize(x)
+            # the slow hop moves the int8 payload (all-gather keeps each
+            # pod's scale usable; a float all-reduce would move 4B/elem)
+            qs = jax.lax.all_gather(q, outer)            # (P, ...) int8
+            ss = jax.lax.all_gather(scale, outer)        # (P,) scalars
+            ss = ss.reshape((ss.shape[0],) + (1,) * q.ndim)
+            return jnp.mean(qs.astype(jnp.float32) * ss, axis=0)
+        if strategy == "compressed":
+            q, scale = _quantize(x)
+            qs = jax.lax.all_gather(q, inner)
+            ss = jax.lax.all_gather(scale, inner)
+            ss = ss.reshape((ss.shape[0],) + (1,) * q.ndim)
+            return jnp.mean(qs.astype(jnp.float32) * ss, axis=0)
+        # hierarchical: reduce the fast intra-pod axis first
+        x = jax.lax.pmean(x, inner)
+        if outer:
+            x = jax.lax.pmean(x, outer)
+        return x
+
+    def sync(grads):
+        return jax.tree.map(sync_leaf, grads)
+
+    return shard_map(sync, mesh=mesh, in_specs=P(), out_specs=P(),
+                     check_rep=False)

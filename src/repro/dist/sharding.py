@@ -1,0 +1,277 @@
+"""Sharding rule engine: leaf path + shape + mesh + policy -> PartitionSpec.
+
+Invariant (enforced by a final sanitize pass, property-tested in
+``tests/test_sharding_properties.py``): every emitted spec is *valid* — each
+dim's assigned axes divide the dim and no mesh axis is used twice.  An
+invalid spec is a compile failure at 512-chip scale, so indivisible
+assignments fall back (documented per rule) rather than erroring.
+
+Default layout (the dry-run baseline):
+  * big matrices  (.., d, f)  -> FSDP on d ('data'), TP on f ('model')
+  * embed (V, d)              -> vocab-TP when V divides, else d over 'model'
+  * lm_head (d, V)            -> FSDP x vocab-TP, else d over 'model'
+  * MoE (L, E, d, f)          -> expert-parallel on E, FSDP on d; indivisible
+                                 expert counts fall back to FSDP x TP on d/f
+  * norms / biases            -> replicated (tiny, broadcast is free)
+  * KV caches (L, B, S, H, D) -> B over dp axes, H over 'model'; H
+                                 indivisible -> shard D; B=1 (long-context)
+                                 -> sequence over the dp axes
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """Which mesh axes play which role.
+
+    fsdp_axis / tp_axis accept a name or a tuple of names (a tuple means the
+    dim is sharded over the product of those axes — ZeRO-3 over the whole
+    pod uses ``fsdp_axis=('data', 'model'), tp_axis=None``).  batch_axes are
+    candidates filtered by mesh membership, so one policy serves both the
+    single-pod and multi-pod meshes.
+    """
+
+    fsdp_axis: Axis = "data"
+    tp_axis: Axis = "model"
+    batch_axes: Tuple[str, ...] = ("pod", "data")
+    head_aware: bool = False      # Megatron attention TP: respect head counts
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    kv_seq_tp: bool = False       # decode: sequence-shard the KV cache on TP
+    pin_activations: bool = False  # with_sharding_constraint the residual
+
+    def dp_axes(self, mesh) -> Tuple[str, ...]:
+        return tuple(a for a in self.batch_axes if a in mesh.axis_names)
+
+
+DEFAULT_POLICY = ShardingPolicy()
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _names(entry: Axis) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, (tuple, list)):
+        return tuple(entry)
+    return (entry,)
+
+
+def _size(mesh, entry: Axis) -> int:
+    return math.prod(mesh.shape[a] for a in _names(entry)) if entry else 1
+
+
+def _present(mesh, entry: Axis) -> Optional[Axis]:
+    """Drop axes the mesh doesn't have; collapse 1-tuples to a bare name."""
+    names = tuple(a for a in _names(entry) if a in mesh.axis_names)
+    if not names:
+        return None
+    return names[0] if len(names) == 1 else names
+
+
+def _sanitize(entries: Sequence[Axis], shape: Tuple[int, ...], mesh,
+              collapse: bool = True) -> P:
+    """Enforce validity: drop non-dividing assignments and axis reuse."""
+    used: set = set()
+    out = []
+    for dim, entry in zip(shape, entries):
+        entry = _present(mesh, entry)
+        names = _names(entry)
+        if entry is not None and (dim % _size(mesh, entry) != 0
+                                  or any(a in used for a in names)):
+            entry = None
+        used.update(_names(entry))
+        out.append(entry)
+    if collapse and all(e is None for e in out):
+        return P()
+    return P(*out)
+
+
+def _fits(mesh, dim: int, entry: Axis) -> bool:
+    entry = _present(mesh, entry)
+    return entry is not None and dim % _size(mesh, entry) == 0
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+_REPLICATED_NAMES = {"bq", "bk", "bv", "ln_f", "enc_ln_f"}
+
+
+def _is_replicated(name: str, shape: Tuple[int, ...]) -> bool:
+    return (len(shape) <= 1 or name.startswith("ln")
+            or name.endswith("norm") or name in _REPLICATED_NAMES)
+
+
+def param_spec(path: str, shape: Tuple[int, ...], mesh,
+               policy: ShardingPolicy = DEFAULT_POLICY) -> P:
+    """PartitionSpec for one parameter leaf (path uses '/' separators)."""
+    name = path.split("/")[-1]
+    nd = len(shape)
+    fsdp, tp = policy.fsdp_axis, policy.tp_axis
+
+    if _is_replicated(name, shape):
+        return P()
+
+    if name == "embed" and nd == 2:
+        v, d = shape
+        if tp is not None and _fits(mesh, v, tp):
+            return _sanitize([tp, fsdp], shape, mesh)
+        if tp is not None and _fits(mesh, d, tp):
+            # odd vocab (e.g. granite 49155): keep TP useful via the d dim
+            return _sanitize([None, tp], shape, mesh)
+        return _sanitize([None, fsdp], shape, mesh)
+
+    if name == "lm_head" and nd == 2:
+        d, v = shape
+        if tp is not None and _fits(mesh, v, tp):
+            return _sanitize([fsdp, tp], shape, mesh)
+        if tp is not None and _fits(mesh, d, tp):
+            return _sanitize([tp, None], shape, mesh)
+        return _sanitize([fsdp, None], shape, mesh)
+
+    if "/moe/" in path and nd == 4:
+        # (L, E, d, f): expert-parallel when the expert count divides TP
+        e = shape[1]
+        if tp is not None and _fits(mesh, e, tp):
+            return _sanitize([None, tp, fsdp, None], shape, mesh)
+        return _sanitize([None, None, fsdp, tp], shape, mesh)
+
+    if nd < 2:
+        return P()
+
+    # generic matrix: trailing (in, out) dims — column-parallel by default
+    lead = [None] * (nd - 2)
+    if policy.head_aware and "attn/" in path:
+        heads = policy.n_kv_heads if name in ("wk", "wv") else policy.n_heads
+        heads_fit = (tp is not None and heads > 0
+                     and heads % _size(mesh, tp) == 0)
+        if name == "wo":
+            # row-parallel: the head-major input dim carries TP
+            if heads_fit:
+                return _sanitize(lead + [tp, fsdp], shape, mesh)
+            return _sanitize(lead + [fsdp, None], shape, mesh)
+        if not heads_fit:
+            return _sanitize(lead + [fsdp, None], shape, mesh)
+    return _sanitize(lead + [fsdp, tp], shape, mesh)
+
+
+def param_pspecs(params, mesh, policy: ShardingPolicy = DEFAULT_POLICY):
+    """Tree of PartitionSpecs matching a params (or ShapeDtypeStruct) tree."""
+    def one(path, leaf):
+        return param_spec(_path_str(path), leaf.shape, mesh, policy)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:  # pragma: no cover - future key types
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# KV / recurrent caches
+# ---------------------------------------------------------------------------
+
+_KV_NAMES = {"k", "v", "attn_k", "attn_v", "cross_k", "cross_v",
+             "latent", "rope"}
+
+
+def cache_spec(name: str, shape: Tuple[int, ...], mesh,
+               policy: ShardingPolicy = DEFAULT_POLICY) -> P:
+    """Decode-cache leaf layout.  KV leaves are (L, B, S, H, D) (or
+    (L, B, S, R) for MLA latents); recurrent state is (L, B, ...)."""
+    nd = len(shape)
+    dp = _present(mesh, policy.dp_axes(mesh))
+    tp = policy.tp_axis
+    name = name.split("/")[-1]
+
+    if name in _KV_NAMES and nd >= 4:
+        b, s = shape[1], shape[2]
+        entries: list = [None] * nd
+        b_ok = dp is not None and b % _size(mesh, dp) == 0
+        if policy.kv_seq_tp and tp is not None and _fits(mesh, s, tp):
+            # sequence-parallel KV: decode reads scale with S, not H
+            entries[1] = dp if b_ok else None
+            entries[2] = tp
+            return _sanitize(entries, shape, mesh)
+        if b_ok:
+            entries[1] = dp
+        elif dp is not None and s % _size(mesh, dp) == 0:
+            # B=1 long-context: the sequence is the only big dim left
+            entries[2] = dp
+        if nd >= 5:
+            h, d = shape[3], shape[4]
+            if tp is not None and _fits(mesh, h, tp):
+                entries[3] = tp
+            elif tp is not None and _fits(mesh, d, tp):
+                entries[4] = tp  # few KV heads (MQA): shard head_dim
+        elif tp is not None and _fits(mesh, shape[3], tp):
+            entries[3] = tp
+        return _sanitize(entries, shape, mesh)
+
+    # recurrent / unknown state: batch-shard dim 1, replicate the rest
+    entries = [None] * nd
+    if nd >= 2:
+        entries[1] = dp
+    return _sanitize(entries, shape, mesh)
+
+
+def cache_pspecs(cache, mesh, policy: ShardingPolicy = DEFAULT_POLICY):
+    def one(path, leaf):
+        return cache_spec(_path_str(path), leaf.shape, mesh, policy)
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+# ---------------------------------------------------------------------------
+# batches
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(shapes: Dict[str, Any], mesh,
+                 policy: ShardingPolicy = DEFAULT_POLICY) -> Dict[str, P]:
+    """Leading-dim (batch) sharding for input stand-ins / arrays."""
+    dp = _present(mesh, policy.dp_axes(mesh))
+    out = {}
+    for name, leaf in shapes.items():
+        shape = leaf.shape
+        entries = [None] * len(shape)
+        if shape and dp is not None and shape[0] % _size(mesh, dp) == 0:
+            entries[0] = dp
+        out[name] = _sanitize(entries, shape, mesh, collapse=False)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# materialization
+# ---------------------------------------------------------------------------
+
+def shardings(spec_tree, mesh):
+    """PartitionSpec tree -> NamedSharding tree (P leaves kept atomic)."""
+    def one(spec):
+        return NamedSharding(mesh, spec if spec is not None else P())
+
+    return jax.tree.map(one, spec_tree,
+                        is_leaf=lambda x: x is None or isinstance(x, P))

@@ -1,0 +1,153 @@
+"""Flash-decode Pallas TPU kernel: single-token GQA attention over a KV cache.
+
+The serving hot loop's attention is the paper's HW-vs-SW story in miniature.
+The SW-path shape (``ref.py`` / the dense jnp fallback) materializes a
+(B, H, Smax) score row against the *entire padded cache* and round-trips it
+through memory.  This kernel keeps the online-softmax running max / running
+sum / output accumulator register-resident in VMEM scratch across the KV
+grid axis — the warp-reduce discipline of ``core.hw_backend`` — and visits
+only cache blocks that contain valid positions:
+
+  grid = (B, Hkv, kv_blocks), kv innermost with "arbitrary" semantics.
+  Per-slot sequence lengths arrive as a scalar-prefetch operand (SMEM), so
+  blocks past ``pos`` are skipped with ``pl.when`` — decode work scales with
+  the *valid* length, not ``max_seq``.
+
+Within a block the row reductions (max / sum over the block_k lane axis) use
+the ``hw_backend.warp_reduce`` butterfly when block_k is a power of two —
+the same log2-step shfl_xor tree the paper's HW path executes in registers.
+
+Layout: q (B, Hkv, G, D) — grouped queries per KV head; k/v (B, Smax, Hkv,
+D); pos (B,) int32 with the cache valid through index ``pos`` inclusive.
+VMEM per step (fp32): bk*(2D) + G*(D+2) + G*bk floats — ~260 KB at
+bk=256, D=128, G=8.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import hw_backend
+from repro.kernels.common import compiler_params
+
+DEFAULT_MASK_VALUE = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _row_reduce(x: jnp.ndarray, width: int, op: str) -> jnp.ndarray:
+    """(G, width) -> (G, 1) via the register butterfly when width is 2^n."""
+    if width & (width - 1) == 0:
+        return hw_backend.warp_reduce(x, width, op)[:, :1]
+    fn = jnp.max if op == "max" else jnp.sum
+    return fn(x, axis=-1, keepdims=True)
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *,
+                   scale: float, block_k: int, kv_steps: int):
+    b = pl.program_id(0)
+    kj = pl.program_id(2)
+    pos = pos_ref[b]
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # Skip cache blocks entirely beyond the valid length: the whole point —
+    # decode traffic tracks the live sequence, not the padded buffer.
+    @pl.when(kj * block_k <= pos)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)           # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)     # (bk, D)
+        g = q.shape[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        k_ids = kj * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (g, block_k), 1)
+        s = jnp.where(k_ids <= pos, s, DEFAULT_MASK_VALUE)
+
+        m_prev = m_scr[...]                           # (G, 1)
+        m_cur = _row_reduce(s, block_k, "max")
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                        # (G, bk)
+        l_scr[...] = alpha * l_scr[...] + _row_reduce(p, block_k, "sum")
+        v = v_ref[0, :, 0, :].astype(jnp.float32)     # (bk, Dv)
+        # zero invalid rows: a partial tail block reads padding (NaN in
+        # interpret mode) and 0 * NaN would poison the contraction
+        row_ids = kj * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_k, 1), 0)
+        v = jnp.where(row_ids <= pos, v, 0.0)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = m_new
+
+    @pl.when(kj == kv_steps - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 pos: jnp.ndarray, *, scale: Optional[float] = None,
+                 block_k: int = 256,
+                 interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q: (B, Hkv, G, D); k/v: (B, Smax, Hkv, Dv); pos: (B,) int32.
+
+    Returns (B, Hkv, G, Dv).  Positions > pos[b] are masked; blocks whose
+    first index exceeds pos[b] are skipped (no memory traffic, no compute).
+    """
+    from repro.kernels.common import default_interpret
+
+    if interpret is None:
+        interpret = default_interpret()
+    b, hkv, g, d = q.shape
+    smax = k.shape[1]
+    dv = v.shape[-1]
+    if scale is None:
+        scale = d ** -0.5
+    block_k = min(block_k, smax)
+    kv_steps = pl.cdiv(smax, block_k)
+
+    kernel = functools.partial(_decode_kernel, scale=scale,
+                               block_k=block_k, kv_steps=kv_steps)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda bi, h, j, pos_ref: (bi, h, 0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, block_k, 1, d),
+                         lambda bi, h, j, pos_ref: (bi, j, h, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, block_k, 1, dv),
+                         lambda bi, h, j, pos_ref: (bi, j, h, 0),
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dv),
+                               lambda bi, h, j, pos_ref: (bi, h, 0, 0),
+                               memory_space=pltpu.VMEM),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dv), q.dtype),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), q, k, v)

@@ -1,0 +1,35 @@
+"""Jitted wrapper for the flash-decode kernel (model-layout adapter).
+
+Models hand attention a (B, 1, Hq, D) single-token query and (B, Smax, Hkv,
+D) caches; the kernel wants grouped queries (B, Hkv, G, D).  The adapter
+reshapes (zero-copy: Hq = Hkv * G is exactly the kv-major head order the
+models already use) and jits with static block/interpret flags.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import flash_decode
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention_op(q: jnp.ndarray, k_cache: jnp.ndarray,
+                        v_cache: jnp.ndarray, pos: jnp.ndarray,
+                        block_k: int = 256,
+                        interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q: (B, 1, Hq, D); caches (B, Smax, Hkv, Dv); pos (B,).
+
+    Returns (B, 1, Hq, Dv)."""
+    b, _, hq, d = q.shape
+    hkv = k_cache.shape[2]
+    dv = v_cache.shape[-1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    o = flash_decode(qg, k_cache, v_cache, pos, block_k=block_k,
+                     interpret=interpret)
+    return o.reshape(b, 1, hq, dv)

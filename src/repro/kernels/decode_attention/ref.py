@@ -1,0 +1,30 @@
+"""Oracle decode attention: dense scores over the full padded cache.
+
+This is the SW-path shape the seed serving engine executed every token:
+materialize (B, Hkv, G, Smax) scores against the whole ``max_seq`` buffer,
+mask, softmax, contract.  Kept as the parity oracle for the flash-decode
+kernel and as the benchmark baseline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         pos: jnp.ndarray) -> jnp.ndarray:
+    """q: (B, Hkv, G, D); k/v: (B, Smax, Hkv, Dv); pos: (B,).
+
+    Returns (B, Hkv, G, Dv); cache valid through index pos[b] inclusive."""
+    smax = k.shape[1]
+    s = jnp.einsum("bhgd,bkhd->bhgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (q.shape[-1] ** -0.5)
+    ki = jnp.arange(smax)
+    valid = ki[None, :] <= pos[:, None]                  # (B, Smax)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import compiler_params
+
 
 def _matmul_kernel(a_ref, b_ref, o_ref, acc_scr, *, k_steps: int):
     kk = pl.program_id(2)
@@ -60,7 +62,7 @@ def matmul(a: jnp.ndarray, b: jnp.ndarray, *, block_m: int = 256,
                                memory_space=pltpu.VMEM),
         out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import compiler_params
+
 
 def _mse_kernel(p_ref, t_ref, o_ref, *, width: int, steps: int):
     i = pl.program_id(0)
@@ -67,7 +69,7 @@ def mse_partial_sum(pred: jnp.ndarray, target: jnp.ndarray, *,
         out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0),
                                memory_space=pltpu.VMEM),
         out_shape=jax.ShapeDtypeStruct((1, 1), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("arbitrary",),
         ),
         interpret=interpret,

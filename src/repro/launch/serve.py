@@ -1,5 +1,8 @@
 """Serving launcher: batched generation with the slot engine (CPU-runnable).
 
+Runs the fused zero-copy decode fast path by default; ``--no-fused``
+selects the seed per-token-dispatch loop for comparison.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
       --requests 6 --prompt-len 16 --max-new 12
 """
@@ -28,6 +31,9 @@ def main():
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-fused", action="store_true",
+                    help="seed per-token loop instead of the fused "
+                         "zero-copy fast path")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
@@ -35,7 +41,8 @@ def main():
     params = model.init(jax.random.PRNGKey(args.seed))
     engine = ServeEngine(model, params, max_seq=args.max_seq,
                          batch_slots=args.slots,
-                         temperature=args.temperature, seed=args.seed)
+                         temperature=args.temperature, seed=args.seed,
+                         fused=not args.no_fused)
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,

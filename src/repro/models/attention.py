@@ -82,12 +82,38 @@ def gqa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, hq, dv)
 
 
+def default_decode_backend() -> str:
+    """'kernel' (fused flash-decode Pallas) on TPU, 'jnp' elsewhere —
+    interpret-mode Pallas is correct but not performance-representative."""
+    return "kernel" if jax.default_backend() == "tpu" else "jnp"
+
+
 def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
-                     v_cache: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+                     v_cache: jnp.ndarray, pos: jnp.ndarray, *,
+                     attend_len: Optional[int] = None,
+                     backend: Optional[str] = None) -> jnp.ndarray:
     """One-token decode: q (B, 1, Hq, D), caches (B, Smax, Hkv, D),
-    pos (B,) current position (cache filled up to and including pos)."""
+    pos (B,) current position (cache filled up to and including pos).
+
+    attend_len: static upper bound on the valid cache length (engine-side
+    bucketing: max(pos) < attend_len).  The dense-masked SW path scores the
+    *entire* padded cache; bounding the read to the live prefix is the
+    decode-side version of the paper's HW-path discipline — work scales
+    with the sequence actually present, not with ``max_seq``.
+    backend: 'kernel' (flash-decode Pallas) | 'jnp' | None (auto).
+    """
     b, _, hq, d = q.shape
     smax, hkv = k_cache.shape[1], k_cache.shape[2]
+    if attend_len is not None and attend_len < smax:
+        k_cache = k_cache[:, :attend_len]
+        v_cache = v_cache[:, :attend_len]
+        smax = attend_len
+    if backend is None:
+        backend = default_decode_backend()
+    if backend == "kernel":
+        from repro.kernels.decode_attention.ops import decode_attention_op
+
+        return decode_attention_op(q, k_cache, v_cache, pos)
     g = hq // hkv
     scale = d ** -0.5
     qg = q.reshape(b, hkv, g, d)
@@ -122,7 +148,8 @@ def init_gqa_params(key, cfg, dtype=jnp.float32):
     return p
 
 
-def gqa_qkv(params, x: jnp.ndarray, cfg, positions: jnp.ndarray):
+def gqa_qkv(params, x: jnp.ndarray, cfg, positions: jnp.ndarray,
+            rope: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None):
     b, s, _ = x.shape
     hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
     q = jnp.einsum("bsd,df->bsf", x, params["wq"].astype(x.dtype))
@@ -135,7 +162,10 @@ def gqa_qkv(params, x: jnp.ndarray, cfg, positions: jnp.ndarray):
     q = q.reshape(b, s, hq, dh)
     k = k.reshape(b, s, hkv, dh)
     v = v.reshape(b, s, hkv, dh)
-    cos, sin = rope_freqs(dh, cfg.rope_theta, positions)
+    # rope tables depend only on positions — decode hot loops hoist them
+    # out of the per-layer body and pass them in
+    cos, sin = rope if rope is not None else rope_freqs(
+        dh, cfg.rope_theta, positions)
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
     return q, k, v
@@ -160,7 +190,8 @@ def gqa_block(params, x: jnp.ndarray, cfg, *, causal=True,
 
 
 def gqa_decode_block(params, x: jnp.ndarray, cfg, cache: dict,
-                     pos: jnp.ndarray):
+                     pos: jnp.ndarray, *, attend_len: Optional[int] = None,
+                     backend: Optional[str] = None):
     """x: (B, 1, d).  cache: {'k': (B,Smax,Hkv,D), 'v': ...}.  pos: (B,)."""
     b = x.shape[0]
     q, k, v = gqa_qkv(params, x, cfg, pos[:, None])
@@ -168,7 +199,8 @@ def gqa_decode_block(params, x: jnp.ndarray, cfg, cache: dict,
         c, u, (p, 0, 0)))(cache["k"], k, pos)
     v_cache = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(
         c, u, (p, 0, 0)))(cache["v"], v, pos)
-    o = decode_attention(q, k_cache, v_cache, pos)
+    o = decode_attention(q, k_cache, v_cache, pos, attend_len=attend_len,
+                         backend=backend)
     out = jnp.einsum("bsf,fd->bsd", o.reshape(b, 1, -1),
                      params["wo"].astype(x.dtype))
     return out, {"k": k_cache, "v": v_cache}
@@ -269,10 +301,11 @@ def mla_block(params, x: jnp.ndarray, cfg, *, causal=True,
 
 
 def mla_decode_block(params, x: jnp.ndarray, cfg, cache: dict,
-                     pos: jnp.ndarray):
+                     pos: jnp.ndarray, *, attend_len: Optional[int] = None):
     """Absorbed-matmul decode: attention runs in the latent space, so the
     cache stores only (latent, k_rope) — the MLA serving trick.  Cache:
-    {'latent': (B, Smax, kr), 'rope': (B, Smax, rd)}."""
+    {'latent': (B, Smax, kr), 'rope': (B, Smax, rd)}.  attend_len bounds
+    the scored prefix (see :func:`decode_attention`)."""
     b = x.shape[0]
     h = cfg.n_heads
     nd, rd, vd = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
@@ -282,21 +315,25 @@ def mla_decode_block(params, x: jnp.ndarray, cfg, cache: dict,
         c, u, (p, 0)))(cache["latent"], latent, pos)
     rope_cache = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(
         c, u, (p, 0)))(cache["rope"], k_rope, pos)
+    lat_read, rope_read = lat_cache, rope_cache
+    if attend_len is not None and attend_len < lat_cache.shape[1]:
+        lat_read = lat_cache[:, :attend_len]
+        rope_read = rope_cache[:, :attend_len]
     kv_up = params["kv_up"].reshape(kr, h, nd + vd)
     w_uk, w_uv = kv_up[..., :nd], kv_up[..., nd:]
     # absorb W_uk into the query:  q' = q_nope @ W_uk^T  -> latent space
     q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk.astype(x.dtype))
     scale = (nd + rd) ** -0.5
     s_lat = jnp.einsum("bhr,bkr->bhk", q_lat[:, 0].astype(jnp.float32),
-                       lat_cache.astype(jnp.float32))
+                       lat_read.astype(jnp.float32))
     s_rope = jnp.einsum("bhr,bkr->bhk", q_rope[:, 0].astype(jnp.float32),
-                        rope_cache.astype(jnp.float32))
+                        rope_read.astype(jnp.float32))
     s = (s_lat + s_rope) * scale
-    smax = lat_cache.shape[1]
+    smax = lat_read.shape[1]
     ki = jnp.arange(smax)
     s = jnp.where((ki[None, :] <= pos[:, None])[:, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    ctx_lat = jnp.einsum("bhk,bkr->bhr", p, lat_cache.astype(jnp.float32))
+    ctx_lat = jnp.einsum("bhk,bkr->bhr", p, lat_read.astype(jnp.float32))
     o = jnp.einsum("bhr,rhv->bhv", ctx_lat,
                    w_uv.astype(jnp.float32)).astype(x.dtype)
     out = jnp.einsum("bf,fd->bd", o.reshape(b, -1),

@@ -71,9 +71,13 @@ class Model:
     def __init__(self, cfg: ModelConfig, wf: WarpFeatureConfig = DEFAULT_WF,
                  chunk_q: Optional[int] = None, remat: bool = True,
                  param_dtype=jnp.float32, compute_dtype=jnp.bfloat16,
-                 act_sharding=None, remat_policy: Optional[str] = None):
+                 act_sharding=None, remat_policy: Optional[str] = None,
+                 decode_backend: Optional[str] = None):
         self.cfg = cfg
         self.wf = wf
+        # decode attention lowering: 'kernel' (flash-decode Pallas) | 'jnp'
+        # | None (auto: kernel on TPU, jnp elsewhere)
+        self.decode_backend = decode_backend
         # chunked attention for long sequences (memory-bounded prefill)
         self.chunk_q = chunk_q
         self.remat = remat
@@ -413,9 +417,40 @@ class Model:
             cache["cross_v"] = jnp.zeros_like(cache["cross_k"])
         return cache
 
+    def _run_decode_layers(self, body, x, layers, cache, unroll: bool):
+        """scan or unrolled layer loop for a decode step.
+
+        The scan form keeps the HLO one-layer-sized, but its stacked cache
+        output is a fresh buffer — XLA re-materializes the whole cache every
+        token even when the input is donated.  The unrolled form chains
+        per-layer ``.at[l].set`` updates on the original stacked leaves, so
+        with a donated cache the updates alias in place (the zero-copy hot
+        loop the serving engine compiles).
+        """
+        if not unroll:
+            return jax.lax.scan(body, x, (layers, cache))
+        new_cache = cache
+        for l in range(self._n_scan_layers):
+            p_l = jax.tree.map(lambda a: a[l], layers)
+            c_l = jax.tree.map(lambda a: a[l], cache)
+            x, out_c = body(x, (p_l, c_l))
+            new_cache = jax.tree.map(
+                lambda full, upd: full.at[l].set(upd.astype(full.dtype)),
+                new_cache, out_c)
+        return x, new_cache
+
     def decode_step(self, params, cache, tokens: jnp.ndarray,
-                    pos: jnp.ndarray):
-        """tokens: (B,) int32; pos: (B,) positions. Returns (logits, cache)."""
+                    pos: jnp.ndarray, attend_len: Optional[int] = None,
+                    unroll: bool = False):
+        """tokens: (B,) int32; pos: (B,) positions. Returns (logits, cache).
+
+        attend_len: static bound on the valid cache prefix (must satisfy
+        max(pos) < attend_len).  The serving engine buckets this to the
+        live sequence length so each decode step scores only the filled
+        part of the cache instead of dense-masking all of ``max_seq``.
+        unroll: unroll the layer loop (see :meth:`_run_decode_layers`);
+        ignored for the recurrent-state families (ssm/hybrid keep scan).
+        """
         cfg = self.cfg
         x = self._embed(params, tokens[:, None])
 
@@ -433,29 +468,36 @@ class Model:
             return logits, new_states
 
         if cfg.family == "hybrid":
-            return self._hybrid_decode(params, cache, x, pos)
+            return self._hybrid_decode(params, cache, x, pos, attend_len)
 
         if cfg.attn_type == "mla":
             def body(h, inp):
                 p, c = inp
                 g = rmsnorm(h, p["ln1"], cfg.norm_eps, self.wf)
-                att, new_c = mla_decode_block(p["attn"], g, cfg, c, pos)
+                att, new_c = mla_decode_block(p["attn"], g, cfg, c, pos,
+                                              attend_len=attend_len)
                 h = h + att
                 g = rmsnorm(h, p["ln2"], cfg.norm_eps, self.wf)
                 h = h + swiglu(g, p["mlp"]["w_gate"], p["mlp"]["w_up"],
                                p["mlp"]["w_down"])
                 return h, new_c
 
-            x, new_cache = jax.lax.scan(
-                body, x, (params["layers"],
-                          {"latent": cache["latent"], "rope": cache["rope"]}))
+            x, new_cache = self._run_decode_layers(
+                body, x, params["layers"],
+                {"latent": cache["latent"], "rope": cache["rope"]}, unroll)
             return self._head(params, x)[:, 0, :cfg.vocab], new_cache
+
+        if unroll and cfg.family in ("dense", "moe", "vlm"):
+            return self._gqa_decode_unrolled(params, cache, x, pos,
+                                             attend_len)
 
         def body(h, inp):
             p, c = inp
             g = rmsnorm(h, p["ln1"], cfg.norm_eps, self.wf)
             att, new_kv = gqa_decode_block(p["attn"], g, cfg,
-                                           {"k": c["k"], "v": c["v"]}, pos)
+                                           {"k": c["k"], "v": c["v"]}, pos,
+                                           attend_len=attend_len,
+                                           backend=self.decode_backend)
             h = h + att
             if cfg.family == "encdec":
                 g = rmsnorm(h, p["ln_cross"], cfg.norm_eps, self.wf)
@@ -474,20 +516,75 @@ class Model:
                 out_c["cross_k"], out_c["cross_v"] = c["cross_k"], c["cross_v"]
             return h, out_c
 
-        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+        x, new_cache = self._run_decode_layers(body, x, params["layers"],
+                                               cache, unroll)
         return self._head(params, x)[:, 0, :cfg.vocab], new_cache
 
+    def _gqa_decode_unrolled(self, params, cache, x, pos,
+                             attend_len: Optional[int]):
+        """Zero-copy decode for the plain GQA-cache families.
+
+        Per layer the fresh K/V row is scattered straight into the stacked
+        (L, B, Smax, H, D) cache leaf — no per-layer (B, Smax, H, D)
+        slice-out / write-back round trip, so with a donated cache the
+        compiled step updates B rows in place and the attention read is the
+        only cache traffic (bounded by attend_len).
+        """
+        from repro.models.attention import decode_attention, gqa_qkv
+        from repro.models.layers import rope_freqs
+
+        cfg = self.cfg
+        b = x.shape[0]
+        ck, cv = cache["k"], cache["v"]
+        rope = rope_freqs(cfg.d_head, cfg.rope_theta, pos[:, None])
+        bidx = jnp.arange(b)
+        for l in range(self._n_scan_layers):
+            p = jax.tree.map(lambda a: a[l], params["layers"])
+            g = rmsnorm(x, p["ln1"], cfg.norm_eps, self.wf)
+            q, k, v = gqa_qkv(p["attn"], g, cfg, pos[:, None], rope=rope)
+            ck = ck.at[l, bidx, pos].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[l, bidx, pos].set(v[:, 0].astype(cv.dtype))
+            o = decode_attention(q, ck[l], cv[l], pos,
+                                 attend_len=attend_len,
+                                 backend=self.decode_backend)
+            x = x + jnp.einsum("bsf,fd->bsd", o.reshape(b, 1, -1),
+                               p["attn"]["wo"].astype(x.dtype))
+            g = rmsnorm(x, p["ln2"], cfg.norm_eps, self.wf)
+            if cfg.family == "moe":
+                x = x + moe_block(
+                    p["moe"], g, cfg,
+                    capacity_factor=max(cfg.infer_capacity_factor, 8.0))
+            else:
+                x = x + swiglu(g, p["mlp"]["w_gate"], p["mlp"]["w_up"],
+                               p["mlp"]["w_down"])
+        logits = self._head(params, x)[:, 0, :cfg.vocab]
+        return logits, {"k": ck, "v": cv}
+
     # --------------------------------------------------------------- prefill
-    def prefill(self, params, batch: Dict[str, jnp.ndarray], max_seq: int):
+    def prefill(self, params, batch: Dict[str, jnp.ndarray], max_seq: int,
+                last_pos: Optional[jnp.ndarray] = None):
         """Process a full prompt; returns (last_logits (B, V), cache).
 
         The cache matches :meth:`init_cache` layout with positions [0, S)
         filled — the serving engine continues decoding from pos = S (for the
         vlm family S includes the frontend positions).
+
+        last_pos: optional (B,) per-row index of the last *real* token.
+        With right-padded prompt batches (bucketed admission) the causal
+        mask makes position ``last_pos[b]`` independent of the padding, so
+        the returned logits are exact; the padded tail of the cache is
+        masked out (and progressively overwritten) by the decode steps.
         """
         cfg = self.cfg
         tokens = batch["tokens"]
         x = self._embed(params, tokens)
+
+        def last_hidden(h):
+            if last_pos is None:
+                return h[:, -1:, :]
+            idx = jnp.broadcast_to(last_pos[:, None, None],
+                                   (h.shape[0], 1, h.shape[2]))
+            return jnp.take_along_axis(h, idx, axis=1)
 
         def pad_seq(a, axis=1):
             n = max_seq - a.shape[axis]
@@ -503,7 +600,7 @@ class Model:
                 return h, st
 
             x, cache = jax.lax.scan(body, x, params["layers"])
-            return self._head(params, x[:, -1:, :])[:, 0, :cfg.vocab], cache
+            return self._head(params, last_hidden(x))[:, 0, :cfg.vocab], cache
 
         if cfg.family == "hybrid":
             k = cfg.hybrid_attn_every
@@ -538,7 +635,7 @@ class Model:
                 "attn_k": ks,
                 "attn_v": vs,
             }
-            return self._head(params, x[:, -1:, :])[:, 0, :cfg.vocab], cache
+            return self._head(params, last_hidden(x))[:, 0, :cfg.vocab], cache
 
         if cfg.attn_type == "mla":
             def body(h, p):
@@ -553,7 +650,7 @@ class Model:
 
             x, (lats, ropes) = jax.lax.scan(body, x, params["layers"])
             cache = {"latent": lats, "rope": ropes}
-            return self._head(params, x[:, -1:, :])[:, 0, :cfg.vocab], cache
+            return self._head(params, last_hidden(x))[:, 0, :cfg.vocab], cache
 
         # gqa family (dense / moe / encdec / vlm)
         enc = None
@@ -591,9 +688,10 @@ class Model:
         cache = {"k": ys[0], "v": ys[1]}
         if cfg.family == "encdec":
             cache["cross_k"], cache["cross_v"] = ys[2], ys[3]
-        return self._head(params, x[:, -1:, :])[:, 0, :cfg.vocab], cache
+        return self._head(params, last_hidden(x))[:, 0, :cfg.vocab], cache
 
-    def _hybrid_decode(self, params, cache, x, pos):
+    def _hybrid_decode(self, params, cache, x, pos,
+                       attend_len: Optional[int] = None):
         cfg = self.cfg
         k = cfg.hybrid_attn_every
         n_groups = cfg.n_layers // k
@@ -608,7 +706,9 @@ class Model:
             gp, st, ck, cv = inp
             g = rmsnorm(h, params["shared_attn"]["ln1"], cfg.norm_eps, self.wf)
             att, new_kv = gqa_decode_block(params["shared_attn"]["attn"], g,
-                                           cfg, {"k": ck, "v": cv}, pos)
+                                           cfg, {"k": ck, "v": cv}, pos,
+                                           attend_len=attend_len,
+                                           backend=self.decode_backend)
             h = h + att
             g = rmsnorm(h, params["shared_attn"]["ln2"], cfg.norm_eps, self.wf)
             h = h + swiglu(g, params["shared_attn"]["mlp"]["w_gate"],

@@ -1,1 +1,1 @@
-from repro.serve.engine import ServeEngine, sample_token  # noqa: F401
+from repro.serve.engine import Request, ServeEngine, sample_token  # noqa: F401

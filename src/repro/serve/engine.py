@@ -6,18 +6,42 @@ slots together (continuous-batching-lite: admission happens at step
 boundaries, finished slots free immediately).  Per-slot position counters
 mean requests of different lengths coexist in one cache.
 
-Both ``prefill`` and ``decode_step`` are jit-compiled once per engine; on a
-pod the same functions are pjit-sharded with ``repro.dist`` cache specs (the
-decode dry-run lowers exactly this step at production shapes).
+Fast path (default, ``fused=True``) — the decode hot loop is one jitted
+step with the HW-path discipline from the paper applied end to end:
+
+  * decode + sample + position/remaining advance + done-mask fuse into a
+    single dispatch per token;
+  * ``donate_argnums`` on the cache lets XLA alias the KV buffers in place
+    — the seed path re-materialized the full (L, B, Smax, H, D) cache every
+    token because an undonated input cannot be written through;
+  * attention reads are bounded to the live prefix: the engine tracks slot
+    positions host-side (no sync) and passes a bucketed static
+    ``attend_len``, so decode scores the sequence actually present instead
+    of dense-masking all of ``max_seq``;
+  * the only host transfer per token is the (tokens, done) pair —
+    ``batch_slots`` ints and bools;
+  * admission prefills up to k free slots in one call: prompts are
+    right-padded to a length bucket and the per-slot last-token logits are
+    gathered exactly (causality makes them padding-independent).
+
+The seed path is preserved under ``fused=False`` as the benchmark baseline
+(``benchmarks/serve_decode.py`` measures one against the other).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+import functools
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+
+def _round_up(x: int, block: int) -> int:
+    """x rounded up to a positive multiple of block (shape bucketing)."""
+    return max(block, -(-x // block) * block)
 
 
 def sample_token(logits: jnp.ndarray, key, temperature: float = 0.0):
@@ -36,29 +60,72 @@ class Request:
     generated: Optional[List[int]] = None
 
 
+# families for which right-padded prefill is exact: cache purely positional
+# (mask-protected) AND no cross-token compute beyond causal attention.
+# Recurrent state (ssm/hybrid) advances through padding; MoE expert
+# capacity / GShard grouping depend on the padded length, so both admit
+# sequentially at batch 1 instead.
+_PADDED_PREFILL_FAMILIES = ("dense",)
+
+
 class ServeEngine:
     def __init__(self, model, params, *, max_seq: int, batch_slots: int,
                  temperature: float = 0.0, seed: int = 0,
-                 cache_shardings=None):
+                 cache_shardings=None, fused: bool = True,
+                 attend_block: int = 64, prompt_block: int = 16):
         self.model = model
         self.params = params
         self.max_seq = max_seq
         self.slots = batch_slots
         self.temperature = temperature
+        self.fused = fused
+        self.attend_block = attend_block
+        self.prompt_block = prompt_block
         self._key = jax.random.PRNGKey(seed)
 
         def prefill_fn(params, batch):
             return model.prefill(params, batch, max_seq)
 
+        def prefill_padded_fn(params, batch, last_pos):
+            return model.prefill(params, batch, max_seq, last_pos)
+
         def decode_fn(params, cache, tokens, pos):
             logits, cache = model.decode_step(params, cache, tokens, pos)
             return logits, cache
 
-        kw = {}
+        def fused_step_fn(params, cache, tok, pos, remaining, key,
+                          attend_len):
+            """One decode token for every slot, single dispatch.
+
+            Returns (cache, next_tok, pos, remaining, done, key); the cache
+            argument is donated — XLA writes the new K/V row through the
+            existing buffers instead of copying the pool.
+            """
+            logits, cache = model.decode_step(params, cache, tok, pos,
+                                              attend_len, unroll=True)
+            if temperature <= 0.0:  # greedy: no key consumed
+                nxt = sample_token(logits, None, 0.0)
+            else:
+                key, sub = jax.random.split(key)
+                nxt = sample_token(logits, sub, temperature)
+            pos = pos + 1
+            remaining = remaining - 1
+            done = (remaining <= 0) | (pos >= max_seq - 1)
+            return cache, nxt, pos, remaining, done, key
+
+        kw: Dict[str, Any] = {}
+        fkw: Dict[str, Any] = {}
         if cache_shardings is not None:
             kw["out_shardings"] = (None, cache_shardings)
+            fkw["out_shardings"] = (cache_shardings, None, None, None,
+                                    None, None)
         self._prefill = jax.jit(prefill_fn)
+        self._prefill_padded = jax.jit(prefill_padded_fn)
         self._decode = jax.jit(decode_fn, **kw)
+        # donate cache/pos/remaining/key; tok is retained by callers
+        # (generate stacks the per-step tokens), so it stays undonated
+        self._fused_step = jax.jit(fused_step_fn, static_argnums=(6,),
+                                   donate_argnums=(1, 3, 4, 5), **fkw)
 
     # ----------------------------------------------------------- primitives
     def prefill(self, batch: Dict[str, jnp.ndarray]):
@@ -67,6 +134,14 @@ class ServeEngine:
 
     def decode_step(self, cache, tokens, pos):
         return self._decode(self.params, cache, tokens, pos)
+
+    def fused_step(self, cache, tok, pos, remaining, key, attend_len: int):
+        return self._fused_step(self.params, cache, tok, pos, remaining,
+                                key, attend_len)
+
+    def _attend_len(self, needed: int) -> int:
+        """Static attention bound: ``needed`` rounded up to the bucket."""
+        return min(self.max_seq, _round_up(needed, self.attend_block))
 
     # ------------------------------------------------------------ generation
     def generate(self, prompts: jnp.ndarray, n_tokens: int,
@@ -84,20 +159,31 @@ class ServeEngine:
         out = []
         tok = sample_token(logits, self._next_key(), self.temperature)
         out.append(tok)
-        for _ in range(n_tokens - 1):
-            logits, cache = self.decode_step(cache, tok, pos)
-            tok = sample_token(logits, self._next_key(), self.temperature)
+        if not self.fused:
+            for _ in range(n_tokens - 1):
+                logits, cache = self.decode_step(cache, tok, pos)
+                tok = sample_token(logits, self._next_key(), self.temperature)
+                out.append(tok)
+                pos = pos + 1
+            return jnp.stack(out, axis=1)
+
+        remaining = jnp.full((b,), n_tokens - 1, jnp.int32)
+        key = self._next_key()
+        for i in range(n_tokens - 1):
+            attend = self._attend_len(s + offset + i + 1)
+            cache, tok, pos, remaining, _done, key = self.fused_step(
+                cache, tok, pos, remaining, key, attend)
             out.append(tok)
-            pos = pos + 1
         return jnp.stack(out, axis=1)
 
     # ------------------------------------------------- continuous batching
     def serve(self, requests: List[Request]) -> Dict[int, List[int]]:
-        """Slot-based scheduler: admit -> prefill slot -> joint decode.
+        """Slot-based scheduler: admit -> prefill slots -> joint decode.
 
-        Prompts may have different lengths; each admitted request is
-        prefilled into its slot (batch-1 prefill), then all live slots
-        decode together.  Returns {uid: generated tokens}.
+        Prompts may have different lengths; admitted requests are prefilled
+        together (bucketed right-padding, one call for k free slots on
+        attention-cache families), then all live slots decode with the
+        fused donated step.  Returns {uid: generated tokens}.
         """
         queue = list(requests)
         live: Dict[int, Request] = {}          # slot -> request
@@ -105,13 +191,36 @@ class ServeEngine:
         pos = jnp.zeros((self.slots,), jnp.int32)
         tok = jnp.zeros((self.slots,), jnp.int32)
         remaining = jnp.zeros((self.slots,), jnp.int32)
+        slot_pos = [0] * self.slots            # host mirror (no device sync)
         results: Dict[int, List[int]] = {}
+        batched = (self.fused
+                   and self.model.cfg.family in _PADDED_PREFILL_FAMILIES)
+
+        def finish_if_exhausted(req, slot):
+            # a 1-token request is complete after the prefill sample; a
+            # decode step for it would emit a token past its budget
+            if req.max_new_tokens <= 1:
+                results[req.uid] = req.generated
+                del live[slot]
 
         def admit():
             nonlocal cache, pos, tok, remaining
-            for slot in range(self.slots):
-                if slot in live or not queue:
-                    continue
+            free = [s for s in range(self.slots)
+                    if s not in live and queue]
+            if not free:
+                return
+            if batched:
+                taken = [queue.pop(0) for _ in free[:len(queue)]]
+                slots = free[:len(taken)]
+                self._admit_batched(taken, slots, live, slot_pos)
+                cache, pos, tok, remaining = self._admit_write(
+                    cache, pos, tok, remaining, taken, slots)
+                for req, slot in zip(taken, slots):
+                    finish_if_exhausted(req, slot)
+                return
+            for slot in free:
+                if not queue:
+                    break
                 req = queue.pop(0)
                 req.generated = []
                 live[slot] = req
@@ -122,25 +231,78 @@ class ServeEngine:
                 first = sample_token(logits, self._next_key(),
                                      self.temperature)[0]
                 req.generated.append(int(first))
+                slot_pos[slot] = len(req.prompt)
                 pos = pos.at[slot].set(len(req.prompt))
                 tok = tok.at[slot].set(first)
                 remaining = remaining.at[slot].set(req.max_new_tokens - 1)
+                finish_if_exhausted(req, slot)
 
-        admit()
-        while live:
-            logits, cache = self.decode_step(cache, tok, pos)
-            nxt = sample_token(logits, self._next_key(), self.temperature)
-            pos = pos + 1
-            remaining = remaining - 1
-            tok = nxt
+        key = self._next_key()
+        while queue or live:
+            admit()
+            if not live:
+                # every admitted request completed at admission (1-token
+                # budgets); keep draining the queue
+                continue
+            if self.fused:
+                needed = max(slot_pos[s] for s in live) + 1
+                attend = self._attend_len(needed)
+                cache, tok, pos, remaining, done, key = self.fused_step(
+                    cache, tok, pos, remaining, key, attend)
+                # the one host transfer per token: slot-count ints + bools
+                nxt_h, done_h = jax.device_get((tok, done))
+            else:
+                logits, cache = self.decode_step(cache, tok, pos)
+                nxt = sample_token(logits, self._next_key(),
+                                   self.temperature)
+                pos = pos + 1
+                remaining = remaining - 1
+                tok = nxt
+                nxt_h = np.asarray(nxt)
+                rem_h = np.asarray(remaining)
+                pos_h = np.asarray(pos)
+                done_h = (rem_h <= 0) | (pos_h >= self.max_seq - 1)
             for slot in list(live):
                 req = live[slot]
-                req.generated.append(int(nxt[slot]))
-                if int(remaining[slot]) <= 0 or pos[slot] >= self.max_seq - 1:
+                req.generated.append(int(nxt_h[slot]))
+                slot_pos[slot] += 1
+                if bool(done_h[slot]):
                     results[req.uid] = req.generated
                     del live[slot]
-            admit()
         return results
+
+    # ------------------------------------------------------------ admission
+    def _admit_batched(self, reqs: List[Request], slots: List[int],
+                       live: Dict[int, Request], slot_pos: List[int]):
+        """Register k requests; the device writes happen in _admit_write."""
+        for req, slot in zip(reqs, slots):
+            req.generated = []
+            live[slot] = req
+            slot_pos[slot] = len(req.prompt)
+
+    def _admit_write(self, cache, pos, tok, remaining,
+                     reqs: List[Request], slots: List[int]):
+        """One prefill for k slots: bucketed right-padding + exact per-slot
+        last-token logits (last_pos gather inside the model)."""
+        lens = [len(r.prompt) for r in reqs]
+        bucket = min(self.max_seq, _round_up(max(lens), self.prompt_block))
+        toks = np.zeros((len(reqs), bucket), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, :lens[i]] = r.prompt
+        last_pos = jnp.asarray([l - 1 for l in lens], jnp.int32)
+        logits, pcache = self._prefill_padded(
+            self.params, {"tokens": jnp.asarray(toks)}, last_pos)
+        first = sample_token(logits, self._next_key(), self.temperature)
+        first_h = jax.device_get(first)
+        slot_idx = jnp.asarray(slots, jnp.int32)
+        cache = _write_slots(cache, pcache, slot_idx)
+        pos = pos.at[slot_idx].set(jnp.asarray(lens, jnp.int32))
+        tok = tok.at[slot_idx].set(first)
+        remaining = remaining.at[slot_idx].set(
+            jnp.asarray([r.max_new_tokens - 1 for r in reqs], jnp.int32))
+        for req, f in zip(reqs, first_h):
+            req.generated.append(int(f))
+        return cache, pos, tok, remaining
 
     def _next_key(self):
         self._key, sub = jax.random.split(self._key)
@@ -155,5 +317,19 @@ def _write_slot(cache, pcache, slot: int):
     def one(pool, single):
         return jax.lax.dynamic_update_slice_in_dim(
             pool, single.astype(pool.dtype), slot, axis=1)
+
+    return jax.tree.map(one, cache, pcache)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _write_slots(cache, pcache, slot_idx: jnp.ndarray):
+    """Scatter a k-row prefilled cache into k pool slots (donated pool).
+
+    slot_idx is traced, not static: free-slot combinations vary while
+    serving, and a compile per combination would litter the jit cache —
+    one executable per (k, shapes) handles them all.
+    """
+    def one(pool, batch):
+        return pool.at[:, slot_idx].set(batch.astype(pool.dtype))
 
     return jax.tree.map(one, cache, pcache)

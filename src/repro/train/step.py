@@ -102,6 +102,11 @@ def make_loss_fn(model, *, vocab_chunks: int = 8, cast_bf16: bool = False):
             # and the FSDP all-gathers move f32 (2x bytes)
             params = jax.lax.optimization_barrier(params)
         x = model.backbone(params, batch)
+        # final-norm before the head: the serving path (model.forward /
+        # prefill / decode_step) applies ln_f, so training without it
+        # produces a head that serving feeds mis-scaled inputs
+        from repro.models.layers import rmsnorm
+        x = rmsnorm(x, params["ln_f"], cfg.norm_eps, model.wf)
         tokens = batch["tokens"]
         targets = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
         mask = jnp.ones_like(tokens, jnp.float32).at[:, -1].set(0.0)

@@ -1,0 +1,203 @@
+"""Decode fast path: flash-decode kernel parity, fused-engine equivalence,
+and the zero-copy (buffer donation) regression guard."""
+
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import reduced_config
+from repro.kernels.decode_attention.ops import decode_attention_op
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.models.lm import Model
+from repro.serve.engine import Request, ServeEngine
+
+
+def rnd(shape, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs dense oracle (interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,hq,hkv,smax,d,block_k", [
+    (2, 4, 2, 128, 64, 64),      # GQA 2:1
+    (1, 8, 1, 256, 64, 128),     # MQA
+    (2, 4, 4, 96, 128, 32),      # MHA, uneven tail block
+    (1, 8, 2, 33, 32, 16),       # tiny, ragged
+])
+def test_flash_decode_vs_ref(b, hq, hkv, smax, d, block_k):
+    g = hq // hkv
+    q = rnd((b, 1, hq, d), seed=1)
+    k = rnd((b, smax, hkv, d), seed=2)
+    v = rnd((b, smax, hkv, d), seed=3)
+    pos = jax.random.randint(jax.random.PRNGKey(4), (b,), 0, smax)
+    got = decode_attention_op(q, k, v, pos, block_k=block_k, interpret=True)
+    want = decode_attention_ref(q.reshape(b, hkv, g, d), k, v,
+                                pos).reshape(b, 1, hq, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_decode_pos_edges():
+    """pos = 0 (single valid position) and pos = smax-1 (full cache)."""
+    b, hq, hkv, smax, d = 2, 4, 2, 64, 32
+    q, k, v = rnd((b, 1, hq, d), 1), rnd((b, smax, hkv, d), 2), \
+        rnd((b, smax, hkv, d), 3)
+    for pos in (jnp.zeros((b,), jnp.int32),
+                jnp.full((b,), smax - 1, jnp.int32)):
+        got = decode_attention_op(q, k, v, pos, block_k=32, interpret=True)
+        want = decode_attention_ref(q.reshape(b, hkv, 2, d), k, v,
+                                    pos).reshape(b, 1, hq, d)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_flash_decode_ignores_positions_beyond_pos():
+    """Garbage beyond pos must not leak into the output (the masking the
+    engine relies on for right-padded admission)."""
+    b, hq, hkv, smax, d = 1, 2, 2, 64, 32
+    q, k, v = rnd((b, 1, hq, d), 1), rnd((b, smax, hkv, d), 2), \
+        rnd((b, smax, hkv, d), 3)
+    pos = jnp.array([20], jnp.int32)
+    base = decode_attention_op(q, k, v, pos, block_k=16, interpret=True)
+    k2 = k.at[:, 21:].set(1e6)
+    v2 = v.at[:, 21:].set(jnp.nan)
+    got = decode_attention_op(q, k2, v2, pos, block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(base),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# model-level: attend_len bounded decode == full dense-masked decode
+# ---------------------------------------------------------------------------
+
+def test_decode_step_attend_len_matches_full():
+    cfg = reduced_config("qwen2-1.5b")
+    model = Model(cfg, compute_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    b, s, max_seq = 2, 6, 64
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0, cfg.vocab)
+    _, cache = model.prefill(params, {"tokens": tokens}, max_seq)
+    pos = jnp.full((b,), s, jnp.int32)
+    tok = tokens[:, -1]
+    full, c_full = model.decode_step(params, cache, tok, pos)
+    for attend in (16, 32):
+        bounded, c_b = model.decode_step(params, cache, tok, pos, attend)
+        np.testing.assert_allclose(np.asarray(bounded), np.asarray(full),
+                                   rtol=1e-5, atol=1e-5)
+    unrolled, c_u = model.decode_step(params, cache, tok, pos, 16,
+                                      unroll=True)
+    np.testing.assert_allclose(np.asarray(unrolled), np.asarray(full),
+                               rtol=1e-5, atol=1e-5)
+    for a, b_ in zip(jax.tree.leaves(c_full), jax.tree.leaves(c_u)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# engine: fused fast path == seed path, token for token (greedy)
+# ---------------------------------------------------------------------------
+
+def _engines(max_seq=48, slots=2):
+    cfg = reduced_config("qwen2-1.5b")
+    model = Model(cfg, compute_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(1))
+    mk = lambda fused: ServeEngine(model, params, max_seq=max_seq,
+                                   batch_slots=slots, temperature=0.0,
+                                   seed=0, fused=fused)
+    return cfg, mk(True), mk(False)
+
+
+def test_fused_generate_matches_seed_token_for_token():
+    cfg, fast, seed = _engines(max_seq=40)
+    prompts = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0, cfg.vocab)
+    np.testing.assert_array_equal(np.asarray(fast.generate(prompts, 10)),
+                                  np.asarray(seed.generate(prompts, 10)))
+
+
+def test_fused_serve_matches_seed_token_for_token():
+    cfg, fast, seed = _engines(max_seq=48, slots=2)
+    rng = np.random.default_rng(3)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        int(rng.integers(3, 12))).tolist(),
+                    max_new_tokens=int(rng.integers(2, 7)))
+            for i in range(6)]
+    out_fast = fast.serve(copy.deepcopy(reqs))
+    out_seed = seed.serve(copy.deepcopy(reqs))
+    assert out_fast == out_seed
+
+
+def test_fused_serve_batched_admission_exact_lengths():
+    """Mixed-length prompts through the bucketed padded prefill still honor
+    max_new_tokens exactly for every request."""
+    cfg, fast, _ = _engines(max_seq=64, slots=3)
+    rng = np.random.default_rng(7)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        int(rng.integers(2, 20))).tolist(),
+                    max_new_tokens=int(rng.integers(1, 8)))
+            for i in range(7)]
+    # 1-token budget: complete at admission, no decode step may leak a token
+    reqs.append(Request(uid=7, prompt=[1, 2, 3], max_new_tokens=1))
+    want = {r.uid: r.max_new_tokens for r in reqs}
+    results = fast.serve(reqs)
+    assert set(results) == set(want)
+    for uid, toks in results.items():
+        assert len(toks) == want[uid]
+
+
+@pytest.mark.parametrize("fused", [True, False])
+def test_serve_drains_queue_of_one_token_requests(fused):
+    """All-1-token queues complete at admission; the loop must keep
+    draining the queue even though no slot ever goes live."""
+    cfg = reduced_config("qwen2-1.5b")
+    model = Model(cfg, compute_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(1))
+    eng = ServeEngine(model, params, max_seq=32, batch_slots=2,
+                      temperature=0.0, seed=0, fused=fused)
+    reqs = [Request(uid=i, prompt=[1 + i, 2, 3], max_new_tokens=1)
+            for i in range(5)]
+    results = eng.serve(reqs)
+    assert set(results) == set(range(5))
+    assert all(len(v) == 1 for v in results.values())
+
+
+# ---------------------------------------------------------------------------
+# zero-copy regression: the compiled fused step donates the cache buffers
+# ---------------------------------------------------------------------------
+
+def test_fused_step_cache_buffers_donated():
+    cfg, fast, _ = _engines(max_seq=48, slots=2)
+    model = fast.model
+    cache = jax.eval_shape(lambda: model.init_cache(2, 48))
+    arr = jax.ShapeDtypeStruct((2,), jnp.int32)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(1))
+    compiled = fast._fused_step.lower(pshapes, cache, arr, arr, arr, key,
+                                      fast.attend_block).compile()
+    hlo = compiled.as_text()
+    # XLA records donation as input_output_alias on the entry computation;
+    # without it every decode step re-materializes the full KV pool
+    assert "input_output_alias" in hlo
+    n_cache_leaves = len(jax.tree.leaves(cache))
+    assert hlo.count("may-alias") >= n_cache_leaves, (
+        hlo[:hlo.index("ENTRY")])
+
+
+def test_fused_step_consumes_cache_behaviorally():
+    """Donation is real: the input cache buffer is dead after the call."""
+    cfg, fast, _ = _engines(max_seq=48, slots=2)
+    model = fast.model
+    cache = model.init_cache(2, 48)
+    tok = jnp.zeros((2,), jnp.int32)
+    pos = jnp.full((2,), 4, jnp.int32)
+    rem = jnp.full((2,), 3, jnp.int32)
+    out = fast.fused_step(cache, tok, pos, rem, jax.random.PRNGKey(0),
+                          fast.attend_block)
+    jax.block_until_ready(out[0])
+    assert all(leaf.is_deleted() for leaf in jax.tree.leaves(cache))

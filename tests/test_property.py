@@ -10,6 +10,9 @@ popcount == any-count, reduce == segment fold, scan last == reduce).
 
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import repro.core.primitives as P

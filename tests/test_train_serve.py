@@ -80,16 +80,26 @@ def test_grad_accumulation_equivalence():
 
 
 def test_loss_decreases_tiny():
+    """Train 25 tiny steps, then compare the loss on a *fixed* batch under
+    the initial vs trained params.  (The per-step history compares losses
+    of different random batches, whose spread at this batch size is larger
+    than 25 steps of progress — a coin flip, not a learning signal.)"""
     model = Model(TINY, compute_dtype=jnp.float32)
     data = SyntheticPipeline(DataConfig(vocab=TINY.vocab, seq_len=32,
                                         global_batch=4, seed=1))
     opt = AdamWConfig(lr=2e-3, warmup_steps=2, total_steps=30)
     tr = Trainer(model, data, opt,
                  TrainerConfig(total_steps=25, vocab_chunks=2))
-    _state, hist = tr.run(jax.random.PRNGKey(0))
+    state, hist = tr.run(jax.random.PRNGKey(0))
     losses = [m["loss"] for _, m in hist]
-    assert losses[-1] < losses[0], (losses[0], losses[-1])
     assert np.isfinite(losses).all()
+
+    loss_fn = jax.jit(make_loss_fn(model, vocab_chunks=2))
+    init_state = init_train_state(model, jax.random.PRNGKey(0))
+    fixed = data.batch_at(0)
+    before = float(loss_fn(init_state.params, fixed))
+    after = float(loss_fn(state.params, fixed))
+    assert after < before - 0.05, (before, after)
 
 
 def test_checkpoint_restart_exact(tmp_path):
