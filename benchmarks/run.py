@@ -1,8 +1,9 @@
 """Benchmark entry point: one section per paper table/figure.
 
-  PYTHONPATH=src python -m benchmarks.run            # fig5 + table4 + serve (+ roofline if artifacts exist)
+  PYTHONPATH=src python -m benchmarks.run            # fig5 + table4 + serve + train (+ roofline if artifacts exist)
   PYTHONPATH=src python -m benchmarks.run --section fig5
   PYTHONPATH=src python -m benchmarks.run --section serve   # decode fast path vs seed engine
+  PYTHONPATH=src python -m benchmarks.run --section train --smoke  # flash kernel vs chunked jnp
 """
 
 from __future__ import annotations
@@ -47,8 +48,12 @@ def roofline_section(art_dir: str = "artifacts/dryrun_final"):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
-                    choices=["all", "fig5", "table4", "serve", "roofline"])
+                    choices=["all", "fig5", "table4", "serve", "train",
+                             "roofline"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI shapes for the serve/train sections")
     args = ap.parse_args()
+    smoke = ["--smoke"] if args.smoke else []
 
     if args.section in ("all", "fig5"):
         from benchmarks.fig5_microbench import main as fig5
@@ -58,7 +63,10 @@ def main():
         table4()
     if args.section in ("all", "serve"):
         from benchmarks.serve_decode import main as serve_decode
-        serve_decode([])
+        serve_decode(smoke)
+    if args.section in ("all", "train"):
+        from benchmarks.train_prefill import main as train_prefill
+        train_prefill(smoke)
     if args.section in ("all", "roofline"):
         roofline_section()
 

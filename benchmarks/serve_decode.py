@@ -23,6 +23,8 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import json
+import os
 import time
 from typing import Dict, List
 
@@ -158,6 +160,8 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CI (no perf claims)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the result rows as JSON")
     args = ap.parse_args(argv)
     rows = run(smoke=args.smoke)
     shape = "smoke" if args.smoke else "slots=4 max_seq=1024"
@@ -173,6 +177,11 @@ def main(argv=None):
                   f"{r['seconds']:7.2f} {r['step_bytes'] / 1e6:8.2f} "
                   f"{r['copy_bytes_per_tok'] / 1e6:12.2f} "
                   f"{r['attend_len']:7d} {str(r['donated']):>8s}")
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {args.json}")
     return rows
 
 

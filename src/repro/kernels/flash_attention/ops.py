@@ -1,12 +1,116 @@
-"""Jitted wrapper for the flash attention kernel (with GQA head expansion)."""
+"""Differentiable flash attention op: custom_vjp + GQA/padding wrapper.
+
+``flash_mha`` is the production entry point (``models/attention.py``
+dispatches to it for training and prefill): (B, S, H, D) layout, grouped
+KV heads, arbitrary sequence lengths (padded up to block multiples and
+masked via a per-batch valid length), and a ``jax.custom_vjp`` that routes
+the backward pass through the dq and dk/dv Pallas kernels using the saved
+``lse`` residual plus the ``delta = rowsum(dO * O)`` recomputation trick.
+"""
 
 import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_bwd,
+    flash_attention_fwd,
+)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1, 2, 3, 4))
+def _flash(causal, scale, block_q, block_k, interpret, q, k, v, kv_len):
+    """Core differentiable op on head-flattened (bh, s, d) arrays."""
+    o, _ = flash_attention_fwd(q, k, v, kv_len, causal=causal, scale=scale,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+    return o
+
+
+def _flash_fwd(causal, scale, block_q, block_k, interpret, q, k, v, kv_len):
+    o, lse = flash_attention_fwd(q, k, v, kv_len, causal=causal, scale=scale,
+                                 block_q=block_q, block_k=block_k,
+                                 interpret=interpret)
+    return o, (q, k, v, kv_len, o, lse)
+
+
+def _flash_bwd(causal, scale, block_q, block_k, interpret, res, g):
+    q, k, v, kv_len, o, lse = res
+    delta = jnp.sum(g.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+    dq, dk, dv = flash_attention_bwd(
+        q, k, v, g, lse, delta, kv_len, causal=causal, scale=scale,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    # integer arg -> float0 tangent
+    d_len = np.zeros(kv_len.shape, jax.dtypes.float0)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), d_len
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _round_up(n: int, b: int) -> int:
+    return -(-n // b) * b
+
+
+def _pad_rows(x: jnp.ndarray, target: int) -> jnp.ndarray:
+    n = target - x.shape[1]
+    if n <= 0:
+        return x
+    return jnp.pad(x, ((0, 0), (0, n), (0, 0)))
+
+
+def flash_mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+              kv_valid_len: Optional[jnp.ndarray] = None,
+              causal: bool = True, scale: Optional[float] = None,
+              block_q: int = 128, block_k: int = 128,
+              interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q: (B, Sq, Hq, D); k: (B, Skv, Hkv, D); v: (B, Skv, Hkv, Dv).
+
+    Hq % Hkv == 0.  KV heads are physically expanded to query heads so the
+    group-sum in the KV gradient falls out of ``jnp.repeat``'s transpose;
+    that costs group-factor extra K/V streaming versus decode_attention's
+    index-map head grouping, which is gradient-free — grouping the
+    backward natively needs cross-group dk/dv accumulation in the grid
+    (a dedicated follow-up kernel, not a BlockSpec tweak).  kv_valid_len:
+    optional (B,) int — positions >= it are masked out (right-padded prefill
+    batches, cross-attention over padded encoder outputs).  Differentiable
+    in q, k, v.  Returns (B, Sq, Hq, Dv).
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    if causal and sq != skv:
+        raise ValueError(f"causal flash requires sq == skv, got {sq}/{skv}")
+    if scale is None:
+        scale = d ** -0.5
+    group = hq // hkv
+    if group > 1:
+        k = jnp.repeat(k, group, axis=2)
+        v = jnp.repeat(v, group, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hq, skv, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hq, skv, dv)
+
+    bq = min(block_q, sq)
+    bk = min(block_k, skv)
+    sq_p = _round_up(sq, bq)
+    skv_p = _round_up(skv, bk)
+    qf = _pad_rows(qf, sq_p)
+    kf = _pad_rows(kf, skv_p)
+    vf = _pad_rows(vf, skv_p)
+    if kv_valid_len is None:
+        kv_len = jnp.full((b,), skv, jnp.int32)
+    else:
+        kv_len = jnp.minimum(kv_valid_len.astype(jnp.int32), skv)
+    kv_len = jnp.repeat(kv_len, hq)  # (b*hq,), batch-major like qf
+
+    o = _flash(causal, scale, bq, bk, interpret, qf, kf, vf, kv_len)
+    if sq_p > sq:
+        o = o[:, :sq]
+    return o.reshape(b, hq, sq, dv).transpose(0, 2, 1, 3)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
@@ -17,17 +121,5 @@ def mha_op(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     """q: (b, sq, hq, d); k/v: (b, skv, hkv, d) with hq % hkv == 0.
 
     Returns (b, sq, hq, d)."""
-    b, sq, hq, d = q.shape
-    hkv = k.shape[2]
-    group = hq // hkv
-    skv = k.shape[1]
-    # expand kv heads to q heads (GQA), flatten (b, h) into the grid batch
-    if group > 1:
-        k = jnp.repeat(k, group, axis=2)
-        v = jnp.repeat(v, group, axis=2)
-    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
-    kf = k.transpose(0, 2, 1, 3).reshape(b * hq, skv, d)
-    vf = v.transpose(0, 2, 1, 3).reshape(b * hq, skv, d)
-    o = flash_attention(qf, kf, vf, causal=causal, block_q=block_q,
-                        block_k=block_k, interpret=interpret)
-    return o.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)
+    return flash_mha(q, k, v, causal=causal, block_q=block_q,
+                     block_k=block_k, interpret=interpret)

@@ -1,4 +1,12 @@
-"""Jitted wrapper for the fused RMSNorm kernel."""
+"""Jitted wrapper for the fused RMSNorm kernel, differentiable via
+``jax.custom_vjp`` (Pallas kernels have no automatic transpose rule, and
+training rides this op when the 'pallas' reduction backend is selected).
+
+The backward pass is a closed-form jnp expression — it is a single fused
+row reduction, so XLA already keeps it register-resident; a dedicated
+backward kernel would buy nothing here (contrast flash attention, whose
+backward must rebuild the score tile blockwise).
+"""
 
 import functools
 from typing import Optional
@@ -9,7 +17,33 @@ import jax.numpy as jnp
 from repro.kernels.rmsnorm.rmsnorm import rmsnorm as _rmsnorm
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def _rmsnorm_vjp(x: jnp.ndarray, w: jnp.ndarray, eps: float,
+                 interpret: Optional[bool]) -> jnp.ndarray:
+    return _rmsnorm(x, w, eps, interpret=interpret)
+
+
+def _fwd(x, w, eps, interpret):
+    return _rmsnorm(x, w, eps, interpret=interpret), (x, w)
+
+
+def _bwd(eps, interpret, res, g):
+    x, w = res
+    xf = x.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    u = xf * r                                     # normalized rows
+    gw = gf * wf
+    dx = r * (gw - u * jnp.mean(gw * u, axis=-1, keepdims=True))
+    dw = jnp.sum((gf * u).reshape(-1, x.shape[-1]), axis=0)
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+_rmsnorm_vjp.defvjp(_fwd, _bwd)
+
+
 @functools.partial(jax.jit, static_argnames=("eps", "interpret"))
 def rmsnorm_op(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6,
                interpret: Optional[bool] = None) -> jnp.ndarray:
-    return _rmsnorm(x, w, eps, interpret=interpret)
+    return _rmsnorm_vjp(x, w, eps, interpret)

@@ -34,10 +34,16 @@ def main():
     ap.add_argument("--no-fused", action="store_true",
                     help="seed per-token loop instead of the fused "
                          "zero-copy fast path")
+    ap.add_argument("--attn-backend", default="auto",
+                    choices=["auto", "kernel", "jnp"],
+                    help="prefill/admission attention lowering (auto: "
+                         "flash Pallas kernel on TPU, jnp elsewhere)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
-    model = Model(cfg, compute_dtype=jnp.float32)
+    model = Model(cfg, compute_dtype=jnp.float32,
+                  attn_backend=None if args.attn_backend == "auto"
+                  else args.attn_backend)
     params = model.init(jax.random.PRNGKey(args.seed))
     engine = ServeEngine(model, params, max_seq=args.max_seq,
                          batch_slots=args.slots,

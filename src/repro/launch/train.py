@@ -34,14 +34,24 @@ def main():
     ap.add_argument("--accum", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=20)
-    ap.add_argument("--warp-backend", default="hw", choices=["hw", "sw",
-                                                             "pallas"])
+    ap.add_argument("--warp-backend", default="auto",
+                    choices=["auto", "hw", "sw", "pallas"],
+                    help="rmsnorm reduction lowering (auto: pallas on "
+                         "TPU, hw elsewhere)")
+    ap.add_argument("--attn-backend", default="auto",
+                    choices=["auto", "kernel", "jnp"],
+                    help="training attention lowering (auto: flash "
+                         "Pallas kernel on TPU, chunked jnp elsewhere)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
-    wf = WarpFeatureConfig(reduction_backend=args.warp_backend)
-    model = Model(cfg, wf=wf, compute_dtype=jnp.float32)
+    wf = WarpFeatureConfig(
+        reduction_backend=None if args.warp_backend == "auto"
+        else args.warp_backend)
+    model = Model(cfg, wf=wf, compute_dtype=jnp.float32,
+                  attn_backend=None if args.attn_backend == "auto"
+                  else args.attn_backend)
     data = SyntheticPipeline(DataConfig(
         vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch,
         seed=args.seed, n_frontend_tokens=cfg.n_frontend_tokens,

@@ -4,8 +4,12 @@ The flash-style chunked form is the HW-path story at the XLA level: the
 online-softmax running max/sum are register-resident lane reductions (the
 warp-reduce pattern), and chunking bounds the score tile exactly like the
 Pallas kernel's BlockSpec does.  ``repro.kernels.flash_attention`` is the
-explicit-kernel version; this module is the SPMD-friendly jnp lowering used
-inside the big models (safe to pjit/shard, compiles on CPU).
+explicit-kernel version (forward + backward, causal block-skip), and
+:func:`gqa_attention` dispatches to it via ``backend='kernel'`` — the
+default on TPU — so training and prefill ride the fused kernel end to
+end; the chunked jnp lowering stays as the SW baseline and CPU fallback
+(safe to pjit/shard, compiles anywhere).  Decode has the same split via
+:func:`decode_attention` / ``repro.kernels.decode_attention``.
 """
 
 from __future__ import annotations
@@ -28,18 +32,49 @@ def _scores_mask(sq: int, skv: int, q_offset, causal: bool):
     return qi >= ki
 
 
+def default_attention_backend() -> str:
+    """'kernel' (flash Pallas fwd+bwd) on TPU, 'jnp' elsewhere —
+    interpret-mode Pallas is correct but not performance-representative."""
+    return "kernel" if jax.default_backend() == "tpu" else "jnp"
+
+
+def _flash_ok(q, k, causal: bool, q_offset: int) -> bool:
+    """Can the flash kernel express this call?  q_offset must be zero (the
+    kernel's causal mask is anchored at position 0) and causal attention
+    must be square; single-token queries stay on the decode/jnp paths."""
+    sq, skv = q.shape[1], k.shape[1]
+    if q_offset != 0 or sq <= 1:
+        return False
+    if causal and sq != skv:
+        return False
+    return True
+
+
 def gqa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                   causal: bool = True, q_offset: int = 0,
                   kv_valid_len: Optional[jnp.ndarray] = None,
                   chunk_q: Optional[int] = None,
-                  pv_bf16: bool = False) -> jnp.ndarray:
+                  pv_bf16: bool = False,
+                  backend: Optional[str] = None) -> jnp.ndarray:
     """q: (B, Sq, Hq, D); k/v: (B, Skv, Hkv, D), Hq % Hkv == 0.
 
+    backend: 'kernel' (flash-attention Pallas, differentiable, causal
+    block-skip) | 'jnp' (chunked softmax — the SW baseline and CPU
+    fallback) | None (auto: kernel on TPU, jnp elsewhere).  The kernel
+    path ignores chunk_q/pv_bf16 (its score tile is already VMEM-bounded
+    and fp32-accumulated) and falls back to jnp for shapes it cannot
+    express (q_offset != 0, non-square causal, single-token queries).
     chunk_q: when set and Sq > chunk_q, scan over query chunks with online
     softmax — activation memory O(chunk_q * Skv) instead of O(Sq * Skv).
     pv_bf16: compute the probability x value contraction in bf16 (softmax
     max/sum stay fp32) — halves the dominant score-tensor traffic.
     """
+    if backend is None:
+        backend = default_attention_backend()
+    if backend == "kernel" and _flash_ok(q, k, causal, q_offset):
+        from repro.kernels.flash_attention.ops import flash_mha
+
+        return flash_mha(q, k, v, kv_valid_len=kv_valid_len, causal=causal)
     b, sq, hq, d = q.shape
     skv, hkv = k.shape[1], k.shape[2]
     dv = v.shape[-1]  # MLA: value head dim may differ from qk head dim
@@ -172,21 +207,24 @@ def gqa_qkv(params, x: jnp.ndarray, cfg, positions: jnp.ndarray,
 
 
 def gqa_block_kv(params, x: jnp.ndarray, cfg, *, causal=True,
-                 chunk_q: Optional[int] = None):
+                 chunk_q: Optional[int] = None,
+                 backend: Optional[str] = None):
     """Like :func:`gqa_block` but also returns (k, v) for prefill caching."""
     b, s, _ = x.shape
     positions = jnp.arange(s)
     q, k, v = gqa_qkv(params, x, cfg, positions)
     o = gqa_attention(q, k, v, causal=causal, chunk_q=chunk_q,
-                      pv_bf16=cfg.pv_bf16)
+                      pv_bf16=cfg.pv_bf16, backend=backend)
     out = jnp.einsum("bsf,fd->bsd", o.reshape(b, s, -1),
                      params["wo"].astype(x.dtype))
     return out, (k, v)
 
 
 def gqa_block(params, x: jnp.ndarray, cfg, *, causal=True,
-              chunk_q: Optional[int] = None) -> jnp.ndarray:
-    return gqa_block_kv(params, x, cfg, causal=causal, chunk_q=chunk_q)[0]
+              chunk_q: Optional[int] = None,
+              backend: Optional[str] = None) -> jnp.ndarray:
+    return gqa_block_kv(params, x, cfg, causal=causal, chunk_q=chunk_q,
+                        backend=backend)[0]
 
 
 def gqa_decode_block(params, x: jnp.ndarray, cfg, cache: dict,
@@ -211,13 +249,13 @@ def gqa_decode_block(params, x: jnp.ndarray, cfg, cache: dict,
 # ---------------------------------------------------------------------------
 
 def cross_block(params, x: jnp.ndarray, enc_kv: Tuple[jnp.ndarray, jnp.ndarray],
-                cfg) -> jnp.ndarray:
+                cfg, *, backend: Optional[str] = None) -> jnp.ndarray:
     b, s, _ = x.shape
     hq, dh = cfg.n_heads, cfg.d_head
     q = jnp.einsum("bsd,df->bsf", x, params["wq"].astype(x.dtype))
     q = q.reshape(b, s, hq, dh)
     k, v = enc_kv
-    o = gqa_attention(q, k, v, causal=False)
+    o = gqa_attention(q, k, v, causal=False, backend=backend)
     return jnp.einsum("bsf,fd->bsd", o.reshape(b, s, -1),
                       params["wo"].astype(x.dtype))
 
@@ -274,7 +312,8 @@ def _mla_qkv(params, x, cfg, positions):
 
 
 def mla_block_kv(params, x: jnp.ndarray, cfg, *, causal=True,
-                 chunk_q: Optional[int] = None):
+                 chunk_q: Optional[int] = None,
+                 backend: Optional[str] = None):
     """Like :func:`mla_block` but also returns (latent, k_rope) for prefill."""
     b, s, _ = x.shape
     h = cfg.n_heads
@@ -287,17 +326,20 @@ def mla_block_kv(params, x: jnp.ndarray, cfg, *, causal=True,
     q = jnp.concatenate([q_nope, q_rope], axis=-1)
     k = jnp.concatenate(
         [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s, h, rd))], axis=-1)
+    # MLA rides the shared dispatch: the kernel supports Dv != D directly
     o = gqa_attention(q, k, v, causal=causal, chunk_q=chunk_q,
-                      pv_bf16=cfg.pv_bf16)
+                      pv_bf16=cfg.pv_bf16, backend=backend)
     out = jnp.einsum("bsf,fd->bsd", o.reshape(b, s, -1),
                      params["wo"].astype(x.dtype))
     return out, (latent, k_rope)
 
 
 def mla_block(params, x: jnp.ndarray, cfg, *, causal=True,
-              chunk_q: Optional[int] = None) -> jnp.ndarray:
+              chunk_q: Optional[int] = None,
+              backend: Optional[str] = None) -> jnp.ndarray:
     """Training/prefill: decompress the latent into per-head K/V (naive form)."""
-    return mla_block_kv(params, x, cfg, causal=causal, chunk_q=chunk_q)[0]
+    return mla_block_kv(params, x, cfg, causal=causal, chunk_q=chunk_q,
+                        backend=backend)[0]
 
 
 def mla_decode_block(params, x: jnp.ndarray, cfg, cache: dict,

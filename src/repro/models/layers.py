@@ -20,14 +20,26 @@ from repro.core import primitives as P
 
 @dataclasses.dataclass(frozen=True)
 class WarpFeatureConfig:
-    """Deployment knob: the paper's HW-vs-SW choice, per site."""
+    """Deployment knob: the paper's HW-vs-SW choice, per site.
 
-    reduction_backend: str = "hw"   # 'hw' | 'sw' | 'pallas'
+    reduction_backend None auto-selects like the attention dispatch in
+    ``models/attention.py``: the fused Pallas kernel on TPU, the
+    vectorized register-level XLA form elsewhere.
+    """
+
+    reduction_backend: Optional[str] = None  # None (auto) | 'hw' | 'sw'
+    #                                        # | 'hw_warp' | 'pallas'
     gating_backend: str = "hw"      # for MoE expert selection
     warp_size: int = 128            # TPU lane-group width
 
 
 DEFAULT_WF = WarpFeatureConfig()
+
+
+def _resolve_reduction_backend(backend: Optional[str]) -> str:
+    if backend is None:
+        return "pallas" if jax.default_backend() == "tpu" else "hw"
+    return backend
 
 
 def _rmsnorm_warp(x: jnp.ndarray, w: jnp.ndarray, eps: float,
@@ -53,13 +65,14 @@ def _rmsnorm_warp(x: jnp.ndarray, w: jnp.ndarray, eps: float,
 
 def rmsnorm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6,
             wf: WarpFeatureConfig = DEFAULT_WF) -> jnp.ndarray:
-    if wf.reduction_backend == "pallas":
+    backend = _resolve_reduction_backend(wf.reduction_backend)
+    if backend == "pallas":
         from repro.kernels.rmsnorm.ops import rmsnorm_op
 
         return rmsnorm_op(x, w, eps)
-    if wf.reduction_backend == "sw":
+    if backend == "sw":
         return _rmsnorm_warp(x, w, eps, "sw", wf.warp_size)
-    if wf.reduction_backend == "hw_warp":
+    if backend == "hw_warp":
         # explicit lane-group (vx_*-instruction) form of the HW path
         return _rmsnorm_warp(x, w, eps, "hw", wf.warp_size)
     # 'hw': the vectorized register-level form (XLA lowers the lane reduce)

@@ -72,12 +72,17 @@ class Model:
                  chunk_q: Optional[int] = None, remat: bool = True,
                  param_dtype=jnp.float32, compute_dtype=jnp.bfloat16,
                  act_sharding=None, remat_policy: Optional[str] = None,
-                 decode_backend: Optional[str] = None):
+                 decode_backend: Optional[str] = None,
+                 attn_backend: Optional[str] = None):
         self.cfg = cfg
         self.wf = wf
         # decode attention lowering: 'kernel' (flash-decode Pallas) | 'jnp'
         # | None (auto: kernel on TPU, jnp elsewhere)
         self.decode_backend = decode_backend
+        # training/prefill attention lowering: 'kernel' (differentiable
+        # flash Pallas, causal block-skip) | 'jnp' (chunked softmax) |
+        # None (auto: kernel on TPU, jnp elsewhere)
+        self.attn_backend = attn_backend
         # chunked attention for long sequences (memory-bounded prefill)
         self.chunk_q = chunk_q
         self.remat = remat
@@ -191,10 +196,10 @@ class Model:
         h = rmsnorm(x, p["ln1"], cfg.norm_eps, wf)
         if cfg.attn_type == "mla":
             att = mla_block(p["attn"], h, cfg, causal=causal,
-                            chunk_q=self.chunk_q)
+                            chunk_q=self.chunk_q, backend=self.attn_backend)
         else:
             att = gqa_block(p["attn"], h, cfg, causal=causal,
-                            chunk_q=self.chunk_q)
+                            chunk_q=self.chunk_q, backend=self.attn_backend)
         att = checkpoint_name(att, "attn_out")
         x = x + att
         h = rmsnorm(x, p["ln2"], cfg.norm_eps, wf)
@@ -232,7 +237,7 @@ class Model:
         cfg, wf = self.cfg, self.wf
         h = rmsnorm(x, p["ln1"], cfg.norm_eps, wf)
         x = x + gqa_block(p["attn"], h, cfg, causal=causal,
-                          chunk_q=self.chunk_q)
+                          chunk_q=self.chunk_q, backend=self.attn_backend)
         h = rmsnorm(x, p["ln2"], cfg.norm_eps, wf)
         return x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
                           p["mlp"]["w_down"])
@@ -344,7 +349,7 @@ class Model:
         cfg, wf = self.cfg, self.wf
         h = rmsnorm(x, p["ln1"], cfg.norm_eps, wf)
         x = x + gqa_block(p["attn"], h, cfg, causal=causal,
-                          chunk_q=self.chunk_q)
+                          chunk_q=self.chunk_q, backend=self.attn_backend)
         h = rmsnorm(x, p["ln2"], cfg.norm_eps, wf)
         return x + swiglu(h, p["mlp"]["w_gate"], p["mlp"]["w_up"],
                           p["mlp"]["w_down"])
@@ -355,10 +360,11 @@ class Model:
         def blk(p, h):
             g = rmsnorm(h, p["ln1"], cfg.norm_eps, wf)
             h = h + gqa_block(p["attn"], g, cfg, causal=True,
-                              chunk_q=self.chunk_q)
+                              chunk_q=self.chunk_q, backend=self.attn_backend)
             g = rmsnorm(h, p["ln_cross"], cfg.norm_eps, wf)
             kv = encode_cross_kv(p["cross"], enc, cfg)
-            h = h + cross_block(p["cross"], g, kv, cfg)
+            h = h + cross_block(p["cross"], g, kv, cfg,
+                                backend=self.attn_backend)
             g = rmsnorm(h, p["ln2"], cfg.norm_eps, wf)
             return h + swiglu(g, p["mlp"]["w_gate"], p["mlp"]["w_up"],
                               p["mlp"]["w_down"])
@@ -613,7 +619,8 @@ class Model:
                 sp = params["shared_attn"]
                 g = rmsnorm(h, sp["ln1"], cfg.norm_eps, self.wf)
                 att, (kk, vv) = gqa_block_kv(sp["attn"], g, cfg, causal=True,
-                                             chunk_q=self.chunk_q)
+                                             chunk_q=self.chunk_q,
+                                             backend=self.attn_backend)
                 h = h + att
                 g = rmsnorm(h, sp["ln2"], cfg.norm_eps, self.wf)
                 h = h + swiglu(g, sp["mlp"]["w_gate"], sp["mlp"]["w_up"],
@@ -641,7 +648,8 @@ class Model:
             def body(h, p):
                 g = rmsnorm(h, p["ln1"], cfg.norm_eps, self.wf)
                 att, (lat, kr) = mla_block_kv(p["attn"], g, cfg, causal=True,
-                                              chunk_q=self.chunk_q)
+                                              chunk_q=self.chunk_q,
+                                              backend=self.attn_backend)
                 h = h + att
                 g = rmsnorm(h, p["ln2"], cfg.norm_eps, self.wf)
                 h = h + swiglu(g, p["mlp"]["w_gate"], p["mlp"]["w_up"],
@@ -666,13 +674,15 @@ class Model:
         def body(h, p):
             g = rmsnorm(h, p["ln1"], cfg.norm_eps, self.wf)
             att, (kk, vv) = gqa_block_kv(p["attn"], g, cfg, causal=True,
-                                         chunk_q=self.chunk_q)
+                                         chunk_q=self.chunk_q,
+                                         backend=self.attn_backend)
             h = h + att
             ys = [pad_seq(kk), pad_seq(vv)]
             if cfg.family == "encdec":
                 g = rmsnorm(h, p["ln_cross"], cfg.norm_eps, self.wf)
                 ck, cv = encode_cross_kv(p["cross"], enc, cfg)
-                h = h + cross_block(p["cross"], g, (ck, cv), cfg)
+                h = h + cross_block(p["cross"], g, (ck, cv), cfg,
+                                    backend=self.attn_backend)
                 ys += [ck, cv]
             g = rmsnorm(h, p["ln2"], cfg.norm_eps, self.wf)
             if cfg.family == "moe":

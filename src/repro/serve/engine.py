@@ -22,7 +22,11 @@ step with the HW-path discipline from the paper applied end to end:
     ``batch_slots`` ints and bools;
   * admission prefills up to k free slots in one call: prompts are
     right-padded to a length bucket and the per-slot last-token logits are
-    gathered exactly (causality makes them padding-independent).
+    gathered exactly (causality makes them padding-independent).  On TPU
+    the prefill attention itself rides the flash Pallas kernel (the
+    model's ``attn_backend`` dispatch in ``models/attention.py``), so
+    admission work scales with the causal lower triangle instead of the
+    full padded score matrix.
 
 The seed path is preserved under ``fused=False`` as the benchmark baseline
 (``benchmarks/serve_decode.py`` measures one against the other).

@@ -166,6 +166,45 @@ def test_flash_attention_blocks_divide_unevenly_guard():
                                rtol=2e-4, atol=2e-4)
 
 
+def test_flash_attention_arbitrary_length_padding():
+    """Lengths that don't divide the block are padded + masked internally."""
+    from repro.kernels.flash_attention.ops import flash_mha
+
+    q = rnd((1, 100, 2, 64), seed=7)
+    k = rnd((1, 100, 2, 64), seed=8)
+    v = rnd((1, 100, 2, 64), seed=9)
+    got = flash_mha(q, k, v, causal=True, block_q=32, block_k=32,
+                    interpret=True)
+    want = jnp.stack([
+        attention_ref(q[:, :, i], k[:, :, i], v[:, :, i], causal=True)
+        for i in range(2)], axis=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_kv_valid_len(causal):
+    """Per-batch valid-length masking (right-padded prefill batches)."""
+    from repro.kernels.flash_attention.ops import flash_mha
+
+    q = rnd((2, 64, 2, 32), seed=4)
+    k = rnd((2, 64, 2, 32), seed=5)
+    v = rnd((2, 64, 2, 32), seed=6)
+    kvl = jnp.asarray([37, 64], jnp.int32)
+    got = flash_mha(q, k, v, causal=causal, kv_valid_len=kvl,
+                    block_q=32, block_k=32, interpret=True)
+    for bi, l in enumerate([37, 64]):
+        want = jnp.stack([
+            attention_ref(q[bi:bi + 1, :, i], k[bi:bi + 1, :l, i],
+                          v[bi:bi + 1, :l, i], causal=causal)
+            for i in range(2)], axis=2)
+        # causal rows past the valid length attend the full valid prefix,
+        # so every row is well-defined and comparable against the ref
+        np.testing.assert_allclose(np.asarray(got[bi:bi + 1]),
+                                   np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+
 # ---------------------------------------------------------------------------
 # matmul
 # ---------------------------------------------------------------------------
