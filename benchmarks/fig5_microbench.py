@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import math
 import time
-from typing import Callable, Dict, List, Tuple
+from typing import Dict, List
 
 import jax
 import jax.numpy as jnp

@@ -52,8 +52,15 @@ def main():
                              "roofline"])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI shapes for the serve/train sections")
+    ap.add_argument("--json-dir", default=None, metavar="DIR",
+                    help="also write each section's rows to DIR/<name>.json")
     args = ap.parse_args()
     smoke = ["--smoke"] if args.smoke else []
+
+    def jdir(name):
+        if args.json_dir is None:
+            return []
+        return ["--json", os.path.join(args.json_dir, name + ".json")]
 
     if args.section in ("all", "fig5"):
         from benchmarks.fig5_microbench import main as fig5
@@ -62,11 +69,13 @@ def main():
         from benchmarks.table4_overhead import main as table4
         table4()
     if args.section in ("all", "serve"):
+        # covers both cache layouts: seed-vs-fused (dense) and the
+        # dense-vs-paged capacity section run in one invocation
         from benchmarks.serve_decode import main as serve_decode
-        serve_decode(smoke)
+        serve_decode(smoke + jdir("serve_decode"))
     if args.section in ("all", "train"):
         from benchmarks.train_prefill import main as train_prefill
-        train_prefill(smoke)
+        train_prefill(smoke + jdir("train_prefill"))
     if args.section in ("all", "roofline"):
         roofline_section()
 

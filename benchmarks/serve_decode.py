@@ -58,18 +58,21 @@ def _serve_once(engine: ServeEngine, reqs: List[Request]) -> Dict:
     return {"tokens": n_tok, "seconds": dt, "tok_s": n_tok / dt}
 
 
-def _step_cost(model, params, slots: int, max_seq: int, attend_len) -> float:
+def _step_cost(model, slots: int, max_seq: int, attend_len,
+               cache_kwargs=None) -> float:
     """Algorithmic bytes proxy for one decode step (jaxpr cost walker).
 
-    Both rows are traced through the scan-form decode step so the column
+    All rows are traced through the same decode step so the column
     isolates the *algorithmic* traffic difference — dense O(max_seq)
-    attention vs the attend_len-bounded read.  Buffer-level effects
-    (the undonated cache re-materialization, in-place aliasing of the
-    unrolled fused step) are invisible at the jaxpr level — the walker
-    charges static slices XLA fuses away — and are reported separately
-    via copy_bytes and the HLO donation check.
+    attention vs the attend_len-bounded read vs the paged block gather
+    (pass ``cache_kwargs=dict(layout='paged', ...)``).  Buffer-level
+    effects (the undonated cache re-materialization, in-place aliasing of
+    the unrolled fused step) are invisible at the jaxpr level — the
+    walker charges static slices XLA fuses away — and are reported
+    separately via copy_bytes and the HLO donation check.
     """
-    cache = jax.eval_shape(lambda: model.init_cache(slots, max_seq))
+    cache = jax.eval_shape(lambda: model.init_cache(slots, max_seq,
+                                                    **(cache_kwargs or {})))
     tok = jax.ShapeDtypeStruct((slots,), jnp.int32)
     pos = jax.ShapeDtypeStruct((slots,), jnp.int32)
 
@@ -80,20 +83,23 @@ def _step_cost(model, params, slots: int, max_seq: int, attend_len) -> float:
     return trace_cost(step, pshapes, cache, tok, pos)["bytes_total"]
 
 
-def _cache_nbytes(model, slots: int, max_seq: int) -> int:
-    cache = jax.eval_shape(lambda: model.init_cache(slots, max_seq))
+def _pool_nbytes(cache_shapes) -> int:
     return int(sum(np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
-                   for l in jax.tree.leaves(cache)))
+                   for l in jax.tree.leaves(cache_shapes)))
+
+
+def _cache_nbytes(model, slots: int, max_seq: int) -> int:
+    return _pool_nbytes(jax.eval_shape(lambda: model.init_cache(slots,
+                                                                max_seq)))
 
 
 def _donated(engine: ServeEngine, params, slots: int, max_seq: int) -> bool:
     """Does the compiled fused step alias the cache buffers in place?"""
     cache = jax.eval_shape(lambda: engine.model.init_cache(slots, max_seq))
     arr = jax.ShapeDtypeStruct((slots,), jnp.int32)
-    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
     txt = engine._fused_step.lower(
         jax.eval_shape(engine.model.init, jax.random.PRNGKey(0)),
-        cache, arr, arr, arr, key, engine.attend_block).compile().as_text()
+        cache, arr, arr, arr, arr, engine.attend_block).compile().as_text()
     return "input_output_alias" in txt
 
 
@@ -134,7 +140,7 @@ def run(smoke: bool = False, trials: int = 3) -> List[Dict]:
     for fused in (False, True):
         engine, stats = engines[fused], best[fused]
         attend = engine._attend_len(phi + max_new) if fused else max_seq
-        step_bytes = _step_cost(model, params, slots, max_seq,
+        step_bytes = _step_cost(model, slots, max_seq,
                                 attend if fused else None)
         copy_bytes = 0 if fused else _cache_nbytes(model, slots, max_seq)
         rows.append({
@@ -156,6 +162,100 @@ def run(smoke: bool = False, trials: int = 3) -> List[Dict]:
     return rows
 
 
+def run_layouts(smoke: bool = False, trials: int = 3) -> List[Dict]:
+    """Paged vs dense on a request set whose summed KV footprint exceeds
+    the dense pool's ``slots x max_seq`` capacity ~2x.
+
+    Dense drains it by slot reuse while reserving ``max_seq`` per slot;
+    the paged engine serves the same set from a pool a fraction of that
+    size (on-demand pages + preempt-and-requeue), at comparable tok/s —
+    the memory-bound-serving claim in one table.
+    """
+    arch = "qwen2-1.5b"
+    if smoke:
+        slots, max_seq, n_req, max_new, plo, phi = 2, 128, 8, 41, 16, 32
+        page_size, num_pages = 16, 11          # 160-token pool vs 256 dense
+        trials = 1
+    else:
+        # pool sized so all 4 slots can reach their worst case (4 x 7
+        # pages: prompt 96 + 319 decode writes = 415 positions): the
+        # capacity win is the smaller pool at full concurrency — a
+        # tighter pool trades tok/s for preemptions instead
+        slots, max_seq, n_req, max_new, plo, phi = 4, 512, 12, 320, 32, 96
+        page_size, num_pages = 64, 29          # 1792-token pool vs 2048 dense
+    cfg = reduced_config(arch)
+    if not smoke:
+        cfg = dataclasses.replace(cfg, max_seq=max_seq)
+    model = Model(cfg, compute_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = _requests(n_req, cfg.vocab, plo, phi, max_new, seed=1)
+    footprint = sum(min(len(r.prompt) + r.max_new_tokens - 1, max_seq)
+                    for r in reqs)
+    engines = {
+        "dense": ServeEngine(model, params, max_seq=max_seq,
+                             batch_slots=slots, temperature=0.0, seed=0),
+        "paged": ServeEngine(model, params, max_seq=max_seq,
+                             batch_slots=slots, temperature=0.0, seed=0,
+                             cache_layout="paged", page_size=page_size,
+                             num_pages=num_pages),
+    }
+    best: Dict[str, Dict] = {}
+    outputs: Dict[str, Dict] = {}
+    for name, e in engines.items():
+        outputs[name] = e.serve([dataclasses.replace(r, generated=None)
+                                 for r in reqs])  # warm jit caches
+    for _ in range(trials):
+        for name, e in engines.items():
+            s = _serve_once(e, reqs)
+            if name not in best or s["tok_s"] > best[name]["tok_s"]:
+                best[name] = s
+    identical = outputs["dense"] == outputs["paged"]
+    attend = engines["dense"]._attend_len(phi + max_new)
+    rows = []
+    for name, e in engines.items():
+        paged = name == "paged"
+        cache_shapes = jax.eval_shape(lambda: model.init_cache(
+            slots, max_seq, layout="paged", page_size=page_size,
+            num_pages=num_pages) if paged
+            else model.init_cache(slots, max_seq))
+        pool_tokens = ((num_pages - 1) * page_size if paged
+                       else slots * max_seq)
+        # the SW jnp.take block gather is charged at the gathered-page
+        # traffic, the kernel path at block-table-replayed transfers —
+        # either way the paged indirection is measurable vs the dense read
+        step_bytes = _step_cost(
+            model, slots, max_seq, attend,
+            cache_kwargs=dict(layout="paged", page_size=page_size,
+                              num_pages=num_pages) if paged else None)
+        row = {
+            "section": "layouts",
+            "shape": f"slots={slots} max_seq={max_seq} page={page_size}",
+            "engine": name,
+            "tok_s": best[name]["tok_s"],
+            "tokens": best[name]["tokens"],
+            "seconds": best[name]["seconds"],
+            "pool_tokens": pool_tokens,
+            "pool_mb": _pool_nbytes(cache_shapes) / 1e6,
+            "footprint_over_capacity": footprint / (slots * max_seq),
+            "step_bytes": step_bytes,
+            "completed": len(outputs[name]),
+            "greedy_identical": identical,
+        }
+        if paged:
+            p = e.last_pool_stats
+            row.update(preemptions=e.preemptions,
+                       peak_util=p.peak_utilization)
+        rows.append(row)
+    d, p = rows[0], rows[1]
+    rows.append({
+        "section": "layouts", "engine": "PAGED/DENSE",
+        "tok_s": p["tok_s"] / d["tok_s"],
+        "pool_mb": p["pool_mb"] / d["pool_mb"],
+        "step_bytes": p["step_bytes"] / max(d["step_bytes"], 1),
+    })
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -164,6 +264,8 @@ def main(argv=None):
                     help="also write the result rows as JSON")
     args = ap.parse_args(argv)
     rows = run(smoke=args.smoke)
+    for r in rows:
+        r.setdefault("section", "seed_vs_fused")
     shape = "smoke" if args.smoke else "slots=4 max_seq=1024"
     print(f"\n== Serve decode: seed engine vs fused fast path ({shape}) ==")
     print(f"{'engine':10s} {'tok/s':>8s} {'tokens':>7s} {'wall_s':>7s} "
@@ -177,6 +279,26 @@ def main(argv=None):
                   f"{r['seconds']:7.2f} {r['step_bytes'] / 1e6:8.2f} "
                   f"{r['copy_bytes_per_tok'] / 1e6:12.2f} "
                   f"{r['attend_len']:7d} {str(r['donated']):>8s}")
+
+    lrows = run_layouts(smoke=args.smoke)
+    print(f"\n== Cache layouts: dense slot pool vs paged block pool "
+          f"({lrows[0]['shape']}; request KV footprint "
+          f"{lrows[0]['footprint_over_capacity']:.1f}x dense capacity) ==")
+    print(f"{'layout':12s} {'tok/s':>8s} {'tokens':>7s} {'pool_MB':>8s} "
+          f"{'pool_tok':>9s} {'step_MB':>8s} {'done':>5s} {'preempt':>8s} "
+          f"{'peak_util':>10s} {'greedy==':>9s}")
+    for r in lrows:
+        if r["engine"] == "PAGED/DENSE":
+            print(f"{'PAGED/DENSE':12s} {r['tok_s']:7.2f}x {'':7s} "
+                  f"{r['pool_mb']:7.2f}x {'':9s} {r['step_bytes']:7.2f}x")
+        else:
+            print(f"{r['engine']:12s} {r['tok_s']:8.1f} {r['tokens']:7d} "
+                  f"{r['pool_mb']:8.2f} {r['pool_tokens']:9d} "
+                  f"{r['step_bytes'] / 1e6:8.2f} {r['completed']:5d} "
+                  f"{r.get('preemptions', 0):8d} "
+                  f"{r.get('peak_util', 0.0):10.2f} "
+                  f"{str(r['greedy_identical']):>9s}")
+    rows = rows + lrows
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         with open(args.json, "w") as f:

@@ -71,7 +71,7 @@ print(f"  r (tile.any(x>2), groupId==0 lanes): HW==SW: "
       f"{jnp.array_equal(hw['r'], sw['r'])}; r[:8]={hw['r'][:8]}")
 
 # --- 4. Pallas kernels (TPU target, interpret-mode validated) --------------
-from repro.kernels.warp_ops.ops import shfl_op, vote_op
+from repro.kernels.warp_ops.ops import shfl_op
 from repro.kernels.warp_ops.ref import shfl_ref
 
 y = shfl_op(x, "bfly", 1, interpret=True)

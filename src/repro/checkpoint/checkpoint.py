@@ -14,7 +14,6 @@ per-shard structure so the swap to multi-host writing is local to
 
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 import os
 import shutil

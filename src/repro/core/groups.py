@@ -16,9 +16,8 @@ is the distributed translation of merge-sync-split.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import List
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

@@ -15,10 +15,6 @@ shuffles keep the lane's own value (CUDA ``__shfl_*_sync`` semantics).
 
 from __future__ import annotations
 
-from functools import partial
-from typing import Optional
-
-import jax
 import jax.numpy as jnp
 
 

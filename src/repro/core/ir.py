@@ -17,9 +17,8 @@ Functions must be pure jnp expressions so one definition runs on both paths.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
-import jax.numpy as jnp
 
 from repro.core.warp import TileGroup, WarpConfig
 

@@ -33,7 +33,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -51,7 +50,7 @@ from repro.core.ir import (
     ThreadProgram,
     TilePartition,
 )
-from repro.core.warp import TileGroup, WarpConfig
+from repro.core.warp import TileGroup
 
 # ---------------------------------------------------------------------------
 # Pass 1+2: flatten control structure into predicated statements

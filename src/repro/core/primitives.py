@@ -19,7 +19,7 @@ import jax.numpy as jnp
 
 from repro.core import hw_backend as _hw
 from repro.core import sw_backend as _sw
-from repro.core.warp import TileGroup, WarpConfig, segment_view, unsegment_view
+from repro.core.warp import TileGroup, segment_view, unsegment_view
 
 _BACKENDS = {"hw": _hw, "sw": _sw}
 _DEFAULT_BACKEND = "hw"

@@ -151,3 +151,89 @@ def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         ),
         interpret=interpret,
     )(pos.astype(jnp.int32), q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# paged variant: KV lives in a shared block pool, gathered via block tables
+# ---------------------------------------------------------------------------
+
+def _paged_decode_kernel(pos_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                         m_scr, l_scr, acc_scr, *,
+                         scale: float, page_size: int, kv_steps: int):
+    """Same online-softmax body as the dense kernel — the *only* paged
+    difference is where the KV block came from (the index maps below walk
+    the scalar-prefetched block table), which is exactly the paper's
+    HW-contiguous vs SW-indirection split."""
+    del bt_ref  # consumed by the index maps, not the body
+    _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr,
+                   scale=scale, block_k=page_size, kv_steps=kv_steps)
+
+
+def paged_flash_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
+                       v_pages: jnp.ndarray, block_tables: jnp.ndarray,
+                       pos: jnp.ndarray, *, scale: Optional[float] = None,
+                       interpret: Optional[bool] = None) -> jnp.ndarray:
+    """q: (B, Hkv, G, D); k_pages/v_pages: (P, page_size, Hkv, Dv);
+    block_tables: (B, NB) int32 physical page per logical block; pos: (B,)
+    int32 with positions <= pos[b] valid.  Returns (B, Hkv, G, Dv).
+
+    The kv grid axis walks *logical* blocks; each step's page is fetched
+    through ``block_tables`` inside the BlockSpec index map, with the
+    block-table row arriving as a scalar-prefetch operand (SMEM) so the
+    gather address is known before the DMA issues.  Blocks past the live
+    prefix clamp their index to the last valid block — the Pallas pipeline
+    only streams a block when its index *changes*, so dead blocks cost no
+    memory traffic (and ``pl.when`` skips their compute).
+    """
+    from repro.kernels.common import default_interpret
+
+    if interpret is None:
+        interpret = default_interpret()
+    b, hkv, g, d = q.shape
+    page_size = k_pages.shape[1]
+    dv = v_pages.shape[-1]
+    nb = block_tables.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+
+    kernel = functools.partial(_paged_decode_kernel, scale=scale,
+                               page_size=page_size, kv_steps=nb)
+
+    def kv_map(bi, h, j, pos_ref, bt_ref):
+        # clamp at the last live block: no fresh fetch past the prefix
+        jc = jnp.minimum(j, pos_ref[bi] // page_size)
+        return (bt_ref[bi, jc], 0, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, hkv, nb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d),
+                         lambda bi, h, j, pos_ref, bt_ref: (bi, h, 0, 0),
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, page_size, 1, d), kv_map,
+                         memory_space=pltpu.VMEM),
+            pl.BlockSpec((1, page_size, 1, dv), kv_map,
+                         memory_space=pltpu.VMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, dv),
+                               lambda bi, h, j, pos_ref, bt_ref:
+                               (bi, h, 0, 0),
+                               memory_space=pltpu.VMEM),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dv), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, dv), q.dtype),
+        compiler_params=compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(pos.astype(jnp.int32), block_tables.astype(jnp.int32), q,
+      k_pages, v_pages)

@@ -14,7 +14,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.decode_attention import flash_decode
+from repro.kernels.decode_attention.decode_attention import (
+    flash_decode,
+    paged_flash_decode,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
@@ -32,4 +35,25 @@ def decode_attention_op(q: jnp.ndarray, k_cache: jnp.ndarray,
     qg = q.reshape(b, hkv, g, d)
     o = flash_decode(qg, k_cache, v_cache, pos, block_k=block_k,
                      interpret=interpret)
+    return o.reshape(b, 1, hq, dv)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_op(q: jnp.ndarray, k_pages: jnp.ndarray,
+                              v_pages: jnp.ndarray,
+                              block_tables: jnp.ndarray, pos: jnp.ndarray,
+                              interpret: Optional[bool] = None
+                              ) -> jnp.ndarray:
+    """q: (B, 1, Hq, D); pages (P, page_size, Hkv, Dv); block_tables
+    (B, NB) physical page per logical block; pos (B,).
+
+    Returns (B, 1, Hq, Dv).  The kv block size is the page size — one
+    page per grid step, gathered through the scalar-prefetched table."""
+    b, _, hq, d = q.shape
+    hkv = k_pages.shape[2]
+    dv = v_pages.shape[-1]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    o = paged_flash_decode(qg, k_pages, v_pages, block_tables, pos,
+                           interpret=interpret)
     return o.reshape(b, 1, hq, dv)

@@ -28,3 +28,21 @@ def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
     return o.astype(q.dtype)
+
+
+def paged_decode_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                               v_pages: jnp.ndarray,
+                               block_tables: jnp.ndarray,
+                               pos: jnp.ndarray) -> jnp.ndarray:
+    """Paged oracle: gather every logical block through the table into a
+    dense (B, NB*page_size, H, D) view, then run the dense oracle.  This
+    *is* the paper-analogue SW path — the indirection is a materialized
+    ``jnp.take`` instead of a prefetched address."""
+    b, nb = block_tables.shape
+    p_, ps, h, d = k_pages.shape
+    dv = v_pages.shape[-1]
+    k = jnp.take(k_pages, block_tables.reshape(-1), axis=0)
+    v = jnp.take(v_pages, block_tables.reshape(-1), axis=0)
+    k = k.reshape(b, nb * ps, h, d)
+    v = v.reshape(b, nb * ps, h, dv)
+    return decode_attention_ref(q, k, v, pos)

@@ -1,10 +1,15 @@
-"""Serving launcher: batched generation with the slot engine (CPU-runnable).
+"""Serving launcher: continuous-batching engine with either cache layout.
 
 Runs the fused zero-copy decode fast path by default; ``--no-fused``
-selects the seed per-token-dispatch loop for comparison.
+selects the seed per-token-dispatch loop for comparison, and
+``--cache-layout paged`` swaps the dense slot pool for the paged block
+pool (``--page-size`` / ``--num-pages`` size it; the default pool
+matches dense capacity, a smaller one exercises preempt-and-requeue).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
       --requests 6 --prompt-len 16 --max-new 12
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
+      --cache-layout paged --page-size 16 --num-pages 24
 """
 
 from __future__ import annotations
@@ -38,6 +43,22 @@ def main():
                     choices=["auto", "kernel", "jnp"],
                     help="prefill/admission attention lowering (auto: "
                          "flash Pallas kernel on TPU, jnp elsewhere)")
+    ap.add_argument("--cache-layout", default="dense",
+                    choices=["dense", "paged"],
+                    help="KV cache layout: dense slot pool (HW-contiguous "
+                         "reads) or paged block pool (SW block-table "
+                         "indirection, memory-bound admission)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (paged layout)")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="pool pages incl. the trash page (default: "
+                         "dense-capacity parity)")
+    ap.add_argument("--attend-block", type=int, default=64,
+                    help="attention-length bucket: decode scores the live "
+                         "prefix rounded up to this many positions")
+    ap.add_argument("--prompt-block", type=int, default=16,
+                    help="admission bucket: prompts right-pad to a "
+                         "multiple of this for the batched prefill")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
@@ -48,7 +69,12 @@ def main():
     engine = ServeEngine(model, params, max_seq=args.max_seq,
                          batch_slots=args.slots,
                          temperature=args.temperature, seed=args.seed,
-                         fused=not args.no_fused)
+                         fused=not args.no_fused,
+                         attend_block=args.attend_block,
+                         prompt_block=args.prompt_block,
+                         cache_layout=args.cache_layout,
+                         page_size=args.page_size,
+                         num_pages=args.num_pages)
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,
@@ -60,10 +86,23 @@ def main():
     results = engine.serve(reqs)
     dt = time.perf_counter() - t0
     n_tok = sum(len(v) for v in results.values())
+    print(f"{'req':>4s} {'tokens':>7s} {'admit->first(ms)':>17s} "
+          f"{'tok/s':>8s} {'preempts':>9s}")
+    for uid in sorted(results):
+        s = engine.last_stats[uid]
+        print(f"{uid:4d} {len(results[uid]):7d} "
+              f"{1e3 * s['admit_to_first_s']:17.1f} {s['tok_s']:8.1f} "
+              f"{int(s['preemptions']):9d}")
+    print(f"\n{n_tok} tokens in {dt:.2f}s = {n_tok / dt:.1f} tok/s "
+          f"({args.slots} slots, {args.cache_layout} cache, {cfg.name})")
+    if engine.last_pool_stats is not None:
+        p = engine.last_pool_stats
+        print(f"pool: {p.num_pages} pages x {p.page_size} tok, peak "
+              f"{p.peak_used_pages} pages ({100 * p.peak_utilization:.0f}%"
+              f" util), {p.allocs} allocs / {p.frees} frees, "
+              f"{engine.preemptions} preemptions")
     for uid in sorted(results):
         print(f"req {uid}: {results[uid]}")
-    print(f"{n_tok} tokens in {dt:.2f}s = {n_tok / dt:.1f} tok/s "
-          f"({args.slots} slots, {cfg.name})")
 
 
 if __name__ == "__main__":

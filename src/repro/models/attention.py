@@ -161,6 +161,55 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
     return o.reshape(b, 1, hq, d).astype(q.dtype)
 
 
+def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           v_pages: jnp.ndarray,
+                           block_tables: jnp.ndarray, pos: jnp.ndarray, *,
+                           attend_len: Optional[int] = None,
+                           backend: Optional[str] = None) -> jnp.ndarray:
+    """One-token decode against a *paged* cache: q (B, 1, Hq, D), page
+    pools (P, page_size, Hkv, D), block_tables (B, NB) mapping logical
+    block j -> physical page, pos (B,) (positions <= pos valid).
+
+    This is the layout half of the paper's HW-vs-SW axis: the dense
+    :func:`decode_attention` reads a contiguous prefix (the HW path —
+    addresses are affine in position), while the paged read must resolve
+    every block through the table.  Two lowerings:
+
+      'kernel'  paged flash-decode Pallas kernel — the table rides the
+                scalar-prefetch channel, so the indirection costs an SMEM
+                lookup per block, not a materialized gather;
+      'jnp'     ``jnp.take`` block gather into a dense view, then the
+                dense SW softmax — the CPU fallback *and* the
+                paper-analogue SW emulation cost (the gather round-trips
+                the gathered pages through memory).
+
+    attend_len: static bound on the valid prefix; only the first
+    ceil(attend_len / page_size) table columns are visited.
+    """
+    page_size = k_pages.shape[1]
+    nb = block_tables.shape[1]
+    if attend_len is not None:
+        nb = min(nb, -(-attend_len // page_size))
+        block_tables = block_tables[:, :nb]
+    if backend is None:
+        backend = default_decode_backend()
+    if backend == "kernel":
+        from repro.kernels.decode_attention.ops import (
+            paged_decode_attention_op,
+        )
+
+        return paged_decode_attention_op(q, k_pages, v_pages, block_tables,
+                                         pos)
+    b = q.shape[0]
+    hkv, d = k_pages.shape[2], k_pages.shape[3]
+    dv = v_pages.shape[-1]
+    k = jnp.take(k_pages, block_tables.reshape(-1), axis=0)
+    v = jnp.take(v_pages, block_tables.reshape(-1), axis=0)
+    k = k.reshape(b, nb * page_size, hkv, d)
+    v = v.reshape(b, nb * page_size, hkv, dv)
+    return decode_attention(q, k, v, pos, backend="jnp")
+
+
 # ---------------------------------------------------------------------------
 # GQA block: projections + rope + cache plumbing
 # ---------------------------------------------------------------------------

@@ -13,8 +13,7 @@ memory during training.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -379,12 +378,49 @@ class Model:
         return x
 
     # --------------------------------------------------------------- decode
-    def init_cache(self, batch_size: int, max_seq: int,
-                   dtype=None) -> Dict[str, Any]:
+    # families whose decode cache is a plain stacked (L, B, S, Hkv, D) K/V
+    # pair — the ones the paged block-pool layout can host.  Recurrent
+    # state (ssm/hybrid) is positionless; MLA caches latents; encdec adds
+    # cross-attention leaves.  They stay dense.
+    PAGED_FAMILIES = ("dense", "moe", "vlm")
+
+    def supports_paged(self) -> bool:
+        return (self.cfg.family in self.PAGED_FAMILIES
+                and self.cfg.attn_type != "mla")
+
+    def init_cache(self, batch_size: int, max_seq: int, dtype=None, *,
+                   layout: str = "dense", page_size: int = 16,
+                   num_pages: Optional[int] = None) -> Dict[str, Any]:
+        """Decode cache in the requested ``CacheLayout``.
+
+        'dense': the classic (L, B, max_seq, H, D) pool — every slot
+        reserves max_seq positions.  'paged': a shared block pool
+        {"k_pages"/"v_pages": (L, num_pages, page_size, H, D)} plus
+        per-slot block tables (B, ceil(max_seq/page_size)) initialized to
+        the trash page; the serving engine's allocator populates them.
+        """
         cfg = self.cfg
         dtype = dtype or self.compute_dtype
         L = self._n_scan_layers
         b = batch_size
+        if layout == "paged":
+            if not self.supports_paged():
+                raise ValueError(
+                    f"paged cache layout supports families "
+                    f"{self.PAGED_FAMILIES} (non-MLA); got "
+                    f"{cfg.family}/{cfg.attn_type}")
+            from repro.serve.kv_cache import TRASH_PAGE, cdiv, init_page_pool
+
+            if num_pages is None:
+                # capacity parity with dense: one page set per slot-block
+                num_pages = b * cdiv(max_seq, page_size) + 1
+            cache = init_page_pool(L, num_pages, page_size, cfg.n_kv_heads,
+                                   cfg.d_head, dtype)
+            cache["block_tables"] = jnp.full(
+                (b, cdiv(max_seq, page_size)), TRASH_PAGE, jnp.int32)
+            return cache
+        if layout != "dense":
+            raise ValueError(f"unknown cache layout {layout!r}")
         if cfg.family == "ssm":
             d = cfg.d_model
             h = d // cfg.rwkv_head_size
@@ -456,8 +492,18 @@ class Model:
         part of the cache instead of dense-masking all of ``max_seq``.
         unroll: unroll the layer loop (see :meth:`_run_decode_layers`);
         ignored for the recurrent-state families (ssm/hybrid keep scan).
+
+        A cache produced by ``init_cache(layout='paged')`` (detected by
+        its ``k_pages`` leaf) routes to the paged step: same math, but
+        K/V rows are written through the block tables into the shared
+        page pool and attention gathers pages (always layer-unrolled —
+        the tables are shared across layers, so a scan carry would force
+        a (L, ...) copy of them).
         """
         cfg = self.cfg
+        if "k_pages" in cache:
+            x = self._embed(params, tokens[:, None])
+            return self._gqa_decode_paged(params, cache, x, pos, attend_len)
         x = self._embed(params, tokens[:, None])
 
         if cfg.family == "ssm":
@@ -526,33 +572,26 @@ class Model:
                                                cache, unroll)
         return self._head(params, x)[:, 0, :cfg.vocab], new_cache
 
-    def _gqa_decode_unrolled(self, params, cache, x, pos,
-                             attend_len: Optional[int]):
-        """Zero-copy decode for the plain GQA-cache families.
+    def _gqa_decode_loop(self, params, x, pos, write_attend):
+        """Shared unrolled decode layer body for the plain GQA families.
 
-        Per layer the fresh K/V row is scattered straight into the stacked
-        (L, B, Smax, H, D) cache leaf — no per-layer (B, Smax, H, D)
-        slice-out / write-back round trip, so with a donated cache the
-        compiled step updates B rows in place and the attention read is the
-        only cache traffic (bounded by attend_len).
+        ``write_attend(l, q, k, v)`` owns the *only* layout-specific part:
+        where the fresh K/V row lands and how the cache is read back
+        (dense affine address vs paged block-table indirection).  Keeping
+        one loop keeps the dense and paged paths bit-identical by
+        construction — a change to the layer math cannot diverge them.
         """
-        from repro.models.attention import decode_attention, gqa_qkv
+        from repro.models.attention import gqa_qkv
         from repro.models.layers import rope_freqs
 
         cfg = self.cfg
         b = x.shape[0]
-        ck, cv = cache["k"], cache["v"]
         rope = rope_freqs(cfg.d_head, cfg.rope_theta, pos[:, None])
-        bidx = jnp.arange(b)
         for l in range(self._n_scan_layers):
             p = jax.tree.map(lambda a: a[l], params["layers"])
             g = rmsnorm(x, p["ln1"], cfg.norm_eps, self.wf)
             q, k, v = gqa_qkv(p["attn"], g, cfg, pos[:, None], rope=rope)
-            ck = ck.at[l, bidx, pos].set(k[:, 0].astype(ck.dtype))
-            cv = cv.at[l, bidx, pos].set(v[:, 0].astype(cv.dtype))
-            o = decode_attention(q, ck[l], cv[l], pos,
-                                 attend_len=attend_len,
-                                 backend=self.decode_backend)
+            o = write_attend(l, q, k, v)
             x = x + jnp.einsum("bsf,fd->bsd", o.reshape(b, 1, -1),
                                p["attn"]["wo"].astype(x.dtype))
             g = rmsnorm(x, p["ln2"], cfg.norm_eps, self.wf)
@@ -563,8 +602,63 @@ class Model:
             else:
                 x = x + swiglu(g, p["mlp"]["w_gate"], p["mlp"]["w_up"],
                                p["mlp"]["w_down"])
-        logits = self._head(params, x)[:, 0, :cfg.vocab]
+        return self._head(params, x)[:, 0, :cfg.vocab]
+
+    def _gqa_decode_unrolled(self, params, cache, x, pos,
+                             attend_len: Optional[int]):
+        """Zero-copy decode for the plain GQA-cache families.
+
+        Per layer the fresh K/V row is scattered straight into the stacked
+        (L, B, Smax, H, D) cache leaf — no per-layer (B, Smax, H, D)
+        slice-out / write-back round trip, so with a donated cache the
+        compiled step updates B rows in place and the attention read is the
+        only cache traffic (bounded by attend_len).
+        """
+        from repro.models.attention import decode_attention
+
+        ck, cv = cache["k"], cache["v"]
+        bidx = jnp.arange(x.shape[0])
+
+        def write_attend(l, q, k, v):
+            nonlocal ck, cv
+            ck = ck.at[l, bidx, pos].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[l, bidx, pos].set(v[:, 0].astype(cv.dtype))
+            return decode_attention(q, ck[l], cv[l], pos,
+                                    attend_len=attend_len,
+                                    backend=self.decode_backend)
+
+        logits = self._gqa_decode_loop(params, x, pos, write_attend)
         return logits, {"k": ck, "v": cv}
+
+    def _gqa_decode_paged(self, params, cache, x, pos,
+                          attend_len: Optional[int]):
+        """Zero-copy decode through the paged block pool.
+
+        Per layer the fresh K/V row lands at ``(page, offset)`` resolved
+        through the slot's block table — a scatter at a *table-dependent*
+        address instead of the dense layout's affine ``(slot, pos)``; with
+        a donated pool the compiled step still updates B rows in place.
+        Dead slots' table rows point at the trash page, so their writes
+        are harmless by construction.
+        """
+        from repro.models.attention import paged_decode_attention
+
+        kp, vp, bt = cache["k_pages"], cache["v_pages"], cache["block_tables"]
+        page_size = kp.shape[2]
+        bidx = jnp.arange(x.shape[0])
+        page = bt[bidx, jnp.minimum(pos // page_size, bt.shape[1] - 1)]
+        off = pos % page_size
+
+        def write_attend(l, q, k, v):
+            nonlocal kp, vp
+            kp = kp.at[l, page, off].set(k[:, 0].astype(kp.dtype))
+            vp = vp.at[l, page, off].set(v[:, 0].astype(vp.dtype))
+            return paged_decode_attention(q, kp[l], vp[l], bt, pos,
+                                          attend_len=attend_len,
+                                          backend=self.decode_backend)
+
+        logits = self._gqa_decode_loop(params, x, pos, write_attend)
+        return logits, {"k_pages": kp, "v_pages": vp, "block_tables": bt}
 
     # --------------------------------------------------------------- prefill
     def prefill(self, params, batch: Dict[str, jnp.ndarray], max_seq: int,

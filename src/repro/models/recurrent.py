@@ -9,8 +9,6 @@ output head still use the warp-feature path.
 
 from __future__ import annotations
 
-from typing import Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -8,7 +8,7 @@ sharding so per-chip optimizer memory scales down with the data axis).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

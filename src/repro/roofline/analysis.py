@@ -17,7 +17,6 @@ collective-permute 1 — the standard bandwidth-optimal schedules on a torus.
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
 from typing import Dict, List, Optional
 

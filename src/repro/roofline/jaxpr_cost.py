@@ -27,7 +27,8 @@ per-chip roofline terms.
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+import functools
+from typing import Dict, Tuple
 
 import jax
 import numpy as np
@@ -90,9 +91,15 @@ _POINTER_UPDATE = {"scatter", "scatter-add", "scatter_add",
 # cap on grid points we are willing to walk when replaying Pallas block
 # index maps; beyond it fall back to coarse operand+result accounting
 _PALLAS_MAX_STEPS = 1 << 16
-# stand-in for scalar-prefetch operands (valid lengths, positions) when
-# replaying index maps at trace time: large enough that length clamps stay
-# inactive, i.e. the conservative full-length traffic
+# stand-in for scalar-prefetch operands (valid lengths, positions, block
+# tables) when replaying index maps at trace time.  Values are
+# ``_PALLAS_SCALAR_FILL + arange``: every element is large enough that
+# length clamps stay inactive (conservative full-length traffic) AND
+# distinct, so an index map that *gathers* through a scalar operand — the
+# paged decode kernel's block table — yields a different block index at
+# every grid step and is charged one block transfer per table entry
+# visited.  A constant fill would alias all table lookups to one page and
+# report the paged gather as a single fetch.
 _PALLAS_SCALAR_FILL = 1 << 30
 
 
@@ -108,12 +115,15 @@ def _pallas_block_traffic(eqn) -> float:
     if steps > _PALLAS_MAX_STEPS:
         raise ValueError("grid too large to replay")
     n_idx = int(getattr(gm, "num_index_operands", 0))
-    scalar_args = [
-        np.full(v.aval.shape, _PALLAS_SCALAR_FILL,
-                np.dtype(v.aval.dtype) if np.issubdtype(
-                    np.dtype(v.aval.dtype), np.integer) else np.int32)
-        for v in eqn.invars[:n_idx]
-    ]
+    scalar_args = []
+    for v in eqn.invars[:n_idx]:
+        dt = (np.dtype(v.aval.dtype)
+              if np.issubdtype(np.dtype(v.aval.dtype), np.integer)
+              else np.dtype(np.int32))
+        size = int(np.prod(v.aval.shape)) if v.aval.shape else 1
+        arr = (_PALLAS_SCALAR_FILL
+               + np.arange(size, dtype=np.int64)).astype(dt)
+        scalar_args.append(arr.reshape(v.aval.shape))
     # row-major grid walk, last axis innermost — the TPU iteration order
     points = [()]
     for g in grid:
@@ -126,17 +136,41 @@ def _pallas_block_traffic(eqn) -> float:
         block_bytes = float(np.prod(block_shape)
                             * np.dtype(shape_dtype.dtype).itemsize)
         im = bm.index_map_jaxpr
+        run = _index_map_runner(im)
         prev = None
         fetches = 0
         for pt in points:
-            idx = tuple(
-                int(np.asarray(x)) for x in jax.core.eval_jaxpr(
-                    im.jaxpr, im.consts, *pt, *scalar_args))
+            idx = tuple(int(np.asarray(x))
+                        for x in run(*pt, *scalar_args))
             if idx != prev:
                 fetches += 1
                 prev = idx
         total += fetches * block_bytes
     return total
+
+
+def _index_map_runner(im):
+    """Evaluator for a BlockSpec index-map jaxpr.
+
+    Scalar-prefetch operands appear as *Ref* invars (the SMEM view the
+    TPU pipeline reads), so ``eval_jaxpr`` on plain arrays trips over the
+    ``get`` primitive.  Discharging the state effects first rewrites refs
+    into pure indexing, after which the map evaluates on numpy fills —
+    this is what lets the replay follow ``pos``-clamped *and*
+    block-table-gathered index maps instead of falling back to coarse
+    operand accounting."""
+    n_out = len(im.jaxpr.outvars)
+    try:
+        from jax._src.state.discharge import discharge_state
+
+        d_jaxpr, d_consts = discharge_state(im.jaxpr, im.consts)
+
+        def run(*args):
+            return jax.core.eval_jaxpr(d_jaxpr, d_consts, *args)[:n_out]
+
+        return run
+    except ImportError:
+        return functools.partial(jax.core.eval_jaxpr, im.jaxpr, im.consts)
 
 
 def _pallas_cost(eqn) -> Tuple[float, float]:

@@ -1,1 +1,7 @@
 from repro.serve.engine import Request, ServeEngine, sample_token  # noqa: F401
+from repro.serve.kv_cache import (  # noqa: F401
+    CACHE_LAYOUTS,
+    PageAllocator,
+    PagedCacheManager,
+    PagedStats,
+)

@@ -1,46 +1,62 @@
-"""Batched serving engine: prefill + KV-cache decode with slot management.
+"""Serving engine: continuous-batching scheduler over a dense or paged cache.
 
-The engine keeps a fixed pool of batch slots (the static shape pjit needs).
-Requests are admitted into free slots; every decode step advances all live
-slots together (continuous-batching-lite: admission happens at step
-boundaries, finished slots free immediately).  Per-slot position counters
-mean requests of different lengths coexist in one cache.
+The engine keeps a fixed pool of batch slots (the static shape pjit needs)
+and a waiting queue of requests.  Admission happens at step boundaries;
+every decode step advances all live slots together; finished slots free
+immediately.  Two cache layouts sit behind one scheduler:
 
-Fast path (default, ``fused=True``) — the decode hot loop is one jitted
-step with the HW-path discipline from the paper applied end to end:
+  dense   one (L, slots, max_seq, H, D) pool; admission is gated on a
+          free *slot* — each slot reserves ``max_seq`` positions whether
+          it uses them or not (slot-bound capacity, the HW-contiguous
+          read path).
+  paged   a shared (L, num_pages, page_size, H, D) block pool
+          (``repro.serve.kv_cache``); admission is gated on free *pages*,
+          pages are allocated on demand at step boundaries as sequences
+          grow, and when the pool exhausts the newest live request is
+          preempted and requeued (recompute-style: its generated tokens
+          are folded into its prompt, so greedy outputs are unchanged).
+          Capacity is memory-bound — the pool holds the tokens that
+          exist, not ``slots x max_seq``.
 
-  * decode + sample + position/remaining advance + done-mask fuse into a
-    single dispatch per token;
-  * ``donate_argnums`` on the cache lets XLA alias the KV buffers in place
-    — the seed path re-materialized the full (L, B, Smax, H, D) cache every
-    token because an undonated input cannot be written through;
-  * attention reads are bounded to the live prefix: the engine tracks slot
-    positions host-side (no sync) and passes a bucketed static
-    ``attend_len``, so decode scores the sequence actually present instead
-    of dense-masking all of ``max_seq``;
-  * the only host transfer per token is the (tokens, done) pair —
-    ``batch_slots`` ints and bools;
-  * admission prefills up to k free slots in one call: prompts are
-    right-padded to a length bucket and the per-slot last-token logits are
-    gathered exactly (causality makes them padding-independent).  On TPU
-    the prefill attention itself rides the flash Pallas kernel (the
-    model's ``attn_backend`` dispatch in ``models/attention.py``), so
-    admission work scales with the causal lower triangle instead of the
-    full padded score matrix.
+Fast path (default, ``fused=True``) — one jitted dispatch per token with
+the HW-path discipline from the paper applied end to end: decode + sample
++ position/remaining advance + done-mask fuse into a single dispatch;
+``donate_argnums`` on the cache lets XLA alias the KV buffers in place;
+attention reads are bounded to the live prefix via a bucketed static
+``attend_len``; the only host transfer per token is the (tokens, done)
+pair.  The paged step additionally reads its block tables, uploaded only
+when the allocator changed them — never per token.
 
-The seed path is preserved under ``fused=False`` as the benchmark baseline
-(``benchmarks/serve_decode.py`` measures one against the other).
+Sampling is reproducible under continuous batching: the key for the
+token at absolute position P of request ``uid`` is
+``fold_in(fold_in(PRNGKey(seed), uid), P)`` — derived from *what* is
+being sampled, not from how many keys the engine consumed before, so
+outputs are independent of admission order, slot assignment, and
+preemption.
+
+The seed per-token-dispatch loop is preserved under ``fused=False`` as
+the benchmark baseline (``benchmarks/serve_decode.py``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
+from collections import deque
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serve.kv_cache import (
+    CACHE_LAYOUTS,
+    PagedCacheManager,
+    blocks_for,
+    cdiv,
+    scatter_prefill,
+)
 
 
 def _round_up(x: int, block: int) -> int:
@@ -76,7 +92,12 @@ class ServeEngine:
     def __init__(self, model, params, *, max_seq: int, batch_slots: int,
                  temperature: float = 0.0, seed: int = 0,
                  cache_shardings=None, fused: bool = True,
-                 attend_block: int = 64, prompt_block: int = 16):
+                 attend_block: int = 64, prompt_block: int = 16,
+                 cache_layout: str = "dense", page_size: int = 16,
+                 num_pages: Optional[int] = None):
+        if cache_layout not in CACHE_LAYOUTS:
+            raise ValueError(f"cache_layout must be one of {CACHE_LAYOUTS}; "
+                             f"got {cache_layout!r}")
         self.model = model
         self.params = params
         self.max_seq = max_seq
@@ -85,7 +106,47 @@ class ServeEngine:
         self.fused = fused
         self.attend_block = attend_block
         self.prompt_block = prompt_block
-        self._key = jax.random.PRNGKey(seed)
+        self.cache_layout = cache_layout
+        self.page_size = page_size
+        if num_pages is None:
+            # capacity parity with the dense pool (+1 for the trash page)
+            num_pages = batch_slots * cdiv(max_seq, page_size) + 1
+        self.num_pages = num_pages
+        if cache_layout == "paged":
+            if not model.supports_paged():
+                raise ValueError(
+                    "paged cache layout needs a plain stacked K/V cache "
+                    f"(families {model.PAGED_FAMILIES}, non-MLA); "
+                    f"got {model.cfg.family}/{model.cfg.attn_type}")
+            if not fused:
+                raise ValueError("cache_layout='paged' requires fused=True "
+                                 "(the seed loop is the dense baseline)")
+            if cache_shardings is not None:
+                raise ValueError(
+                    "cache_shardings describes the dense (L, B, S, H, D) "
+                    "pool and cannot shard the paged page pool; sharded "
+                    "paged caches are a ROADMAP item")
+        # observability, refreshed by every serve() call
+        self.last_stats: Dict[int, Dict[str, float]] = {}
+        self.last_pool_stats = None
+        self.preemptions = 0
+
+        # sampling keys derive from (uid, position) — see module docstring
+        sample_base = jax.random.PRNGKey(seed)
+        temperature_ = temperature
+
+        def sample_at(logits, token_pos, uids):
+            """Per-row reproducible sampling: row i's key is
+            fold(fold(base, uids[i]), token_pos[i])."""
+            if temperature_ <= 0.0:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            keys = jax.vmap(lambda u, p: jax.random.fold_in(
+                jax.random.fold_in(sample_base, u), p))(uids, token_pos)
+            return jax.vmap(lambda kk, lg: jax.random.categorical(
+                kk, lg.astype(jnp.float32) / temperature_))(
+                    keys, logits).astype(jnp.int32)
+
+        self._sample_at = sample_at
 
         def prefill_fn(params, batch):
             return model.prefill(params, batch, max_seq)
@@ -93,43 +154,63 @@ class ServeEngine:
         def prefill_padded_fn(params, batch, last_pos):
             return model.prefill(params, batch, max_seq, last_pos)
 
+        def prefill_bucket_fn(params, batch, last_pos):
+            # paged admission: the cache is scattered into pages, so pad
+            # only to the prompt bucket instead of all of max_seq
+            return model.prefill(params, batch, batch["tokens"].shape[1],
+                                 last_pos)
+
         def decode_fn(params, cache, tokens, pos):
             logits, cache = model.decode_step(params, cache, tokens, pos)
             return logits, cache
 
-        def fused_step_fn(params, cache, tok, pos, remaining, key,
+        def fused_step_fn(params, cache, tok, pos, remaining, uids,
                           attend_len):
             """One decode token for every slot, single dispatch.
 
-            Returns (cache, next_tok, pos, remaining, done, key); the cache
+            Returns (cache, next_tok, pos, remaining, done); the cache
             argument is donated — XLA writes the new K/V row through the
-            existing buffers instead of copying the pool.
+            existing buffers instead of copying the pool.  The sampled
+            token sits at position pos+1, hence its key position.
             """
             logits, cache = model.decode_step(params, cache, tok, pos,
                                               attend_len, unroll=True)
-            if temperature <= 0.0:  # greedy: no key consumed
-                nxt = sample_token(logits, None, 0.0)
-            else:
-                key, sub = jax.random.split(key)
-                nxt = sample_token(logits, sub, temperature)
+            nxt = sample_at(logits, pos + 1, uids)
             pos = pos + 1
             remaining = remaining - 1
             done = (remaining <= 0) | (pos >= max_seq - 1)
-            return cache, nxt, pos, remaining, done, key
+            return cache, nxt, pos, remaining, done
+
+        def paged_step_fn(params, pool, block_tables, tok, pos, remaining,
+                          uids, attend_len):
+            """Paged twin of fused_step_fn: the page pool is donated, the
+            block tables are a read-only input (uploaded at allocator
+            boundaries, reused across steps)."""
+            cache = dict(pool, block_tables=block_tables)
+            logits, cache = model.decode_step(params, cache, tok, pos,
+                                              attend_len)
+            pool = {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]}
+            nxt = sample_at(logits, pos + 1, uids)
+            pos = pos + 1
+            remaining = remaining - 1
+            done = (remaining <= 0) | (pos >= max_seq - 1)
+            return pool, nxt, pos, remaining, done
 
         kw: Dict[str, Any] = {}
         fkw: Dict[str, Any] = {}
         if cache_shardings is not None:
             kw["out_shardings"] = (None, cache_shardings)
-            fkw["out_shardings"] = (cache_shardings, None, None, None,
-                                    None, None)
+            fkw["out_shardings"] = (cache_shardings, None, None, None, None)
         self._prefill = jax.jit(prefill_fn)
         self._prefill_padded = jax.jit(prefill_padded_fn)
+        self._prefill_bucket = jax.jit(prefill_bucket_fn)
         self._decode = jax.jit(decode_fn, **kw)
-        # donate cache/pos/remaining/key; tok is retained by callers
+        # donate cache/pos/remaining; tok is retained by callers
         # (generate stacks the per-step tokens), so it stays undonated
         self._fused_step = jax.jit(fused_step_fn, static_argnums=(6,),
-                                   donate_argnums=(1, 3, 4, 5), **fkw)
+                                   donate_argnums=(1, 3, 4), **fkw)
+        self._paged_step = jax.jit(paged_step_fn, static_argnums=(7,),
+                                   donate_argnums=(1, 4, 5))
 
     # ----------------------------------------------------------- primitives
     def prefill(self, batch: Dict[str, jnp.ndarray]):
@@ -139,9 +220,9 @@ class ServeEngine:
     def decode_step(self, cache, tokens, pos):
         return self._decode(self.params, cache, tokens, pos)
 
-    def fused_step(self, cache, tok, pos, remaining, key, attend_len: int):
+    def fused_step(self, cache, tok, pos, remaining, uids, attend_len: int):
         return self._fused_step(self.params, cache, tok, pos, remaining,
-                                key, attend_len)
+                                uids, attend_len)
 
     def _attend_len(self, needed: int) -> int:
         """Static attention bound: ``needed`` rounded up to the bucket."""
@@ -150,7 +231,11 @@ class ServeEngine:
     # ------------------------------------------------------------ generation
     def generate(self, prompts: jnp.ndarray, n_tokens: int,
                  frontend_embeds: Optional[jnp.ndarray] = None) -> jnp.ndarray:
-        """prompts: (B, S) equal-length batch.  Returns (B, n_tokens)."""
+        """prompts: (B, S) equal-length batch.  Returns (B, n_tokens).
+
+        Always runs on the dense layout (one fixed batch, no scheduling —
+        paging buys nothing here).  Row i samples with uid=i keys.
+        """
         b, s = prompts.shape
         batch = {"tokens": prompts}
         offset = 0
@@ -160,157 +245,295 @@ class ServeEngine:
                 offset = frontend_embeds.shape[1]
         logits, cache = self.prefill(batch)
         pos = jnp.full((b,), s + offset, jnp.int32)
+        uids = jnp.arange(b, dtype=jnp.int32)
         out = []
-        tok = sample_token(logits, self._next_key(), self.temperature)
+        tok = self._sample_at(logits, pos, uids)
         out.append(tok)
         if not self.fused:
             for _ in range(n_tokens - 1):
                 logits, cache = self.decode_step(cache, tok, pos)
-                tok = sample_token(logits, self._next_key(), self.temperature)
+                tok = self._sample_at(logits, pos + 1, uids)
                 out.append(tok)
                 pos = pos + 1
             return jnp.stack(out, axis=1)
 
         remaining = jnp.full((b,), n_tokens - 1, jnp.int32)
-        key = self._next_key()
         for i in range(n_tokens - 1):
             attend = self._attend_len(s + offset + i + 1)
-            cache, tok, pos, remaining, _done, key = self.fused_step(
-                cache, tok, pos, remaining, key, attend)
+            cache, tok, pos, remaining, _done = self.fused_step(
+                cache, tok, pos, remaining, uids, attend)
             out.append(tok)
         return jnp.stack(out, axis=1)
 
     # ------------------------------------------------- continuous batching
     def serve(self, requests: List[Request]) -> Dict[int, List[int]]:
-        """Slot-based scheduler: admit -> prefill slots -> joint decode.
+        """Scheduler: waiting queue -> admission -> joint decode.
 
-        Prompts may have different lengths; admitted requests are prefilled
-        together (bucketed right-padding, one call for k free slots on
-        attention-cache families), then all live slots decode with the
-        fused donated step.  Returns {uid: generated tokens}.
+        Admission is gated on a free slot (dense) or a free slot *and*
+        enough free pages for the prompt (paged); paged sequences grow
+        page-by-page at step boundaries and preempt-and-requeue when the
+        pool exhausts.  Returns {uid: generated tokens}; per-request
+        latency lands in ``self.last_stats`` and pool accounting in
+        ``self.last_pool_stats``.
         """
-        queue = list(requests)
-        live: Dict[int, Request] = {}          # slot -> request
-        cache = self.model.init_cache(self.slots, self.max_seq)
-        pos = jnp.zeros((self.slots,), jnp.int32)
-        tok = jnp.zeros((self.slots,), jnp.int32)
-        remaining = jnp.zeros((self.slots,), jnp.int32)
-        slot_pos = [0] * self.slots            # host mirror (no device sync)
-        results: Dict[int, List[int]] = {}
-        batched = (self.fused
-                   and self.model.cfg.family in _PADDED_PREFILL_FAMILIES)
+        st = _SchedState(
+            queue=deque(requests),
+            mgr=PagedCacheManager(self.num_pages, self.page_size, self.slots,
+                                  self.max_seq)
+            if self.cache_layout == "paged" else None,
+            t0=time.perf_counter(),
+        )
+        if st.mgr is not None:
+            # fail fast, before any device work: a request that can never
+            # fit the pool must not abort a half-served batch later (or,
+            # worse, spin in the admission gate forever)
+            for req in requests:
+                if len(req.prompt) >= self.max_seq:
+                    raise ValueError(
+                        f"request {req.uid}: prompt of {len(req.prompt)} "
+                        f"tokens leaves no decode room in max_seq="
+                        f"{self.max_seq}")
+                if not st.mgr.fits_worst_case(len(req.prompt),
+                                              req.max_new_tokens,
+                                              self.max_seq):
+                    raise ValueError(
+                        f"request {req.uid} can never fit: needs "
+                        f"{blocks_for(min(len(req.prompt) + req.max_new_tokens - 1, self.max_seq), self.page_size)}"
+                        f" pages, pool has {st.mgr.allocator.usable}")
+        if st.mgr is not None:
+            st.pool = self.model.init_cache(
+                self.slots, self.max_seq, layout="paged",
+                page_size=self.page_size, num_pages=self.num_pages)
+            st.pool.pop("block_tables")  # the manager owns the mapping
+            st.bt_dev = st.mgr.device_tables()
+        else:
+            st.cache = self.model.init_cache(self.slots, self.max_seq)
+        st.pos = jnp.zeros((self.slots,), jnp.int32)
+        st.tok = jnp.zeros((self.slots,), jnp.int32)
+        st.remaining = jnp.zeros((self.slots,), jnp.int32)
+        st.uids = jnp.zeros((self.slots,), jnp.int32)
+        st.slot_pos = [0] * self.slots        # host mirror (no device sync)
+        self.last_stats = st.stats
+        self.preemptions = 0
 
-        def finish_if_exhausted(req, slot):
-            # a 1-token request is complete after the prefill sample; a
-            # decode step for it would emit a token past its budget
-            if req.max_new_tokens <= 1:
-                results[req.uid] = req.generated
-                del live[slot]
-
-        def admit():
-            nonlocal cache, pos, tok, remaining
-            free = [s for s in range(self.slots)
-                    if s not in live and queue]
-            if not free:
-                return
-            if batched:
-                taken = [queue.pop(0) for _ in free[:len(queue)]]
-                slots = free[:len(taken)]
-                self._admit_batched(taken, slots, live, slot_pos)
-                cache, pos, tok, remaining = self._admit_write(
-                    cache, pos, tok, remaining, taken, slots)
-                for req, slot in zip(taken, slots):
-                    finish_if_exhausted(req, slot)
-                return
-            for slot in free:
-                if not queue:
-                    break
-                req = queue.pop(0)
-                req.generated = []
-                live[slot] = req
-                prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
-                logits, pcache = self._prefill(self.params,
-                                               {"tokens": prompt})
-                cache = _write_slot(cache, pcache, slot)
-                first = sample_token(logits, self._next_key(),
-                                     self.temperature)[0]
-                req.generated.append(int(first))
-                slot_pos[slot] = len(req.prompt)
-                pos = pos.at[slot].set(len(req.prompt))
-                tok = tok.at[slot].set(first)
-                remaining = remaining.at[slot].set(req.max_new_tokens - 1)
-                finish_if_exhausted(req, slot)
-
-        key = self._next_key()
-        while queue or live:
-            admit()
-            if not live:
+        while st.queue or st.live:
+            self._admit(st)
+            if not st.live:
                 # every admitted request completed at admission (1-token
                 # budgets); keep draining the queue
                 continue
-            if self.fused:
-                needed = max(slot_pos[s] for s in live) + 1
-                attend = self._attend_len(needed)
-                cache, tok, pos, remaining, done, key = self.fused_step(
-                    cache, tok, pos, remaining, key, attend)
-                # the one host transfer per token: slot-count ints + bools
-                nxt_h, done_h = jax.device_get((tok, done))
-            else:
-                logits, cache = self.decode_step(cache, tok, pos)
-                nxt = sample_token(logits, self._next_key(),
-                                   self.temperature)
-                pos = pos + 1
-                remaining = remaining - 1
-                tok = nxt
-                nxt_h = np.asarray(nxt)
-                rem_h = np.asarray(remaining)
-                pos_h = np.asarray(pos)
-                done_h = (rem_h <= 0) | (pos_h >= self.max_seq - 1)
-            for slot in list(live):
-                req = live[slot]
-                req.generated.append(int(nxt_h[slot]))
-                slot_pos[slot] += 1
-                if bool(done_h[slot]):
-                    results[req.uid] = req.generated
-                    del live[slot]
-        return results
+            if st.mgr is not None:
+                self._grow_or_preempt(st)
+                if not st.live:
+                    continue
+            self._step(st)
+        if st.mgr is not None:
+            self.last_pool_stats = st.mgr.stats()
+        return st.results
+
+    # --------------------------------------------------------------- steps
+    def _step(self, st: "_SchedState"):
+        needed = max(st.slot_pos[s] for s in st.live) + 1
+        attend = self._attend_len(needed)
+        if self.fused and st.mgr is not None:
+            if st.mgr.dirty:
+                st.bt_dev = st.mgr.device_tables()
+            st.pool, st.tok, st.pos, st.remaining, done = self._paged_step(
+                self.params, st.pool, st.bt_dev, st.tok, st.pos,
+                st.remaining, st.uids, attend)
+            nxt_h, done_h = jax.device_get((st.tok, done))
+        elif self.fused:
+            st.cache, st.tok, st.pos, st.remaining, done = self._fused_step(
+                self.params, st.cache, st.tok, st.pos, st.remaining,
+                st.uids, attend)
+            # the one host transfer per token: slot-count ints + bools
+            nxt_h, done_h = jax.device_get((st.tok, done))
+        else:
+            logits, st.cache = self.decode_step(st.cache, st.tok, st.pos)
+            nxt = self._sample_at(logits, st.pos + 1, st.uids)
+            st.pos = st.pos + 1
+            st.remaining = st.remaining - 1
+            st.tok = nxt
+            nxt_h = np.asarray(nxt)
+            rem_h = np.asarray(st.remaining)
+            pos_h = np.asarray(st.pos)
+            done_h = (rem_h <= 0) | (pos_h >= self.max_seq - 1)
+        now = time.perf_counter() - st.t0
+        for slot in list(st.live):
+            req = st.live[slot]
+            req.generated.append(int(nxt_h[slot]))
+            st.slot_pos[slot] += 1
+            if bool(done_h[slot]):
+                self._finish(st, slot, now)
+
+    def _finish(self, st: "_SchedState", slot: int, now: float):
+        req = st.live.pop(slot)
+        st.results[req.uid] = req.generated
+        if st.mgr is not None:
+            st.mgr.release(slot)
+        s = st.stats[req.uid]
+        s["finished_s"] = now
+        s["tokens"] = len(req.generated)
+        wall = max(now - s["admitted_s"], 1e-9)
+        s["tok_s"] = len(req.generated) / wall
 
     # ------------------------------------------------------------ admission
-    def _admit_batched(self, reqs: List[Request], slots: List[int],
-                       live: Dict[int, Request], slot_pos: List[int]):
-        """Register k requests; the device writes happen in _admit_write."""
-        for req, slot in zip(reqs, slots):
-            req.generated = []
-            live[slot] = req
-            slot_pos[slot] = len(req.prompt)
+    def _admit(self, st: "_SchedState"):
+        """Admit queued requests into free slots, FIFO.  Dense gating: a
+        free slot.  Paged gating: a free slot and enough free pages for
+        the prompt (head-of-line blocking keeps admission deterministic).
+        """
+        taken: List[tuple] = []
+        for slot in range(self.slots):
+            if slot in st.live or not st.queue:
+                continue
+            req = st.queue[0]
+            if st.mgr is not None:
+                # watermark: keep one growth page per already-live (and
+                # just-taken) slot so admission never hands out the pages
+                # an older sequence needs at the next boundary
+                if not st.mgr.can_admit(len(req.prompt),
+                                        headroom=len(st.live) + len(taken)):
+                    break
+                st.mgr.admit(slot, len(req.prompt))
+            st.queue.popleft()
+            taken.append((slot, req))
+        if not taken:
+            return
+        t_admit = time.perf_counter() - st.t0
+        for slot, req in taken:
+            # only a preemption-resume (this serve) keeps its generated
+            # prefix; re-serving the same Request objects starts fresh
+            if id(req) not in st.resumed:
+                req.generated = []
+            st.live[slot] = req
+            st.admit_seq[slot] = st.next_seq
+            st.next_seq += 1
+            st.slot_pos[slot] = len(req.prompt)
+            st.stats.setdefault(req.uid, {
+                "admitted_s": t_admit, "preemptions": 0})
+        batched = (self.fused and
+                   self.model.cfg.family in _PADDED_PREFILL_FAMILIES)
+        if batched:
+            groups = [taken]
+        else:
+            groups = [[t] for t in taken]
+        for group in groups:
+            self._prefill_group(st, group)
+        now = time.perf_counter() - st.t0
+        for slot, req in taken:
+            s = st.stats[req.uid]
+            s.setdefault("first_token_s", now)
+            s["admit_to_first_s"] = s["first_token_s"] - s["admitted_s"]
+            # a request whose budget is exhausted by the admission sample
+            # completes immediately; a decode step would overrun it
+            if req.max_new_tokens - len(req.generated) <= 0:
+                self._finish(st, slot, now)
 
-    def _admit_write(self, cache, pos, tok, remaining,
-                     reqs: List[Request], slots: List[int]):
-        """One prefill for k slots: bucketed right-padding + exact per-slot
-        last-token logits (last_pos gather inside the model)."""
+    def _prefill_group(self, st: "_SchedState", group: List[tuple]):
+        """One prefill for k admitted (slot, request) pairs: bucketed
+        right-padding + exact per-slot last-token logits (last_pos gather
+        inside the model), then the layout-specific cache write."""
+        slots = [s for s, _ in group]
+        reqs = [r for _, r in group]
         lens = [len(r.prompt) for r in reqs]
-        bucket = min(self.max_seq, _round_up(max(lens), self.prompt_block))
+        if self.model.cfg.family in _PADDED_PREFILL_FAMILIES:
+            bucket = min(self.max_seq,
+                         _round_up(max(lens), self.prompt_block))
+        else:
+            # right-padding perturbs recurrent state / MoE capacity;
+            # these families admit one request at its exact length
+            bucket = max(lens)
         toks = np.zeros((len(reqs), bucket), np.int32)
         for i, r in enumerate(reqs):
             toks[i, :lens[i]] = r.prompt
         last_pos = jnp.asarray([l - 1 for l in lens], jnp.int32)
-        logits, pcache = self._prefill_padded(
-            self.params, {"tokens": jnp.asarray(toks)}, last_pos)
-        first = sample_token(logits, self._next_key(), self.temperature)
+        if st.mgr is not None:
+            logits, pcache = self._prefill_bucket(
+                self.params, {"tokens": jnp.asarray(toks)}, last_pos)
+            n_blocks = cdiv(bucket, self.page_size)
+            page_idx = np.stack([st.mgr.prefill_page_idx(s, n_blocks)
+                                 for s in slots])
+            st.pool = scatter_prefill(
+                st.pool, {"k": pcache["k"], "v": pcache["v"]},
+                jnp.asarray(page_idx))
+        else:
+            logits, pcache = self._prefill_padded(
+                self.params, {"tokens": jnp.asarray(toks)}, last_pos)
+            slot_idx = jnp.asarray(slots, jnp.int32)
+            if len(group) == 1:
+                st.cache = _write_slot(st.cache, pcache, slots[0])
+            else:
+                st.cache = _write_slots(st.cache, pcache, slot_idx)
+        # the token sampled from prefill logits sits at position len(prompt)
+        first = self._sample_at(logits, jnp.asarray(lens, jnp.int32),
+                                jnp.asarray([r.uid for r in reqs], jnp.int32))
         first_h = jax.device_get(first)
         slot_idx = jnp.asarray(slots, jnp.int32)
-        cache = _write_slots(cache, pcache, slot_idx)
-        pos = pos.at[slot_idx].set(jnp.asarray(lens, jnp.int32))
-        tok = tok.at[slot_idx].set(first)
-        remaining = remaining.at[slot_idx].set(
-            jnp.asarray([r.max_new_tokens - 1 for r in reqs], jnp.int32))
+        st.pos = st.pos.at[slot_idx].set(jnp.asarray(lens, jnp.int32))
+        st.tok = st.tok.at[slot_idx].set(first)
+        st.remaining = st.remaining.at[slot_idx].set(jnp.asarray(
+            [r.max_new_tokens - len(r.generated) - 1 for r in reqs],
+            jnp.int32))
+        st.uids = st.uids.at[slot_idx].set(jnp.asarray(
+            [r.uid for r in reqs], jnp.int32))
         for req, f in zip(reqs, first_h):
             req.generated.append(int(f))
-        return cache, pos, tok, remaining
 
-    def _next_key(self):
-        self._key, sub = jax.random.split(self._key)
-        return sub
+    # ----------------------------------------------------------- preemption
+    def _grow_or_preempt(self, st: "_SchedState"):
+        """Step boundary: every live slot's next write position must be
+        mapped.  Grow on demand; when the pool exhausts, preempt the
+        newest live request (LIFO — the oldest always makes progress) and
+        requeue it at the queue front with its generated tokens folded
+        into its prompt."""
+        for slot in sorted(st.live, key=lambda s: st.admit_seq[s]):
+            if slot not in st.live:
+                continue  # preempted while serving an older slot
+            while slot in st.live:
+                blk = st.slot_pos[slot] // self.page_size
+                if st.mgr.ensure_block(slot, blk):
+                    break
+                victim = max(st.live, key=lambda s: st.admit_seq[s])
+                self._preempt(st, victim)
+
+    def _preempt(self, st: "_SchedState", slot: int):
+        req = st.live.pop(slot)
+        st.mgr.release(slot)
+        # recompute-style resume: re-prefilling prompt+generated recreates
+        # the exact cache the slot held, so greedy output is unchanged and
+        # (uid, position) sampling keys line up with the un-preempted run.
+        # The caller's Request is not mutated — the resume rides a copy
+        # (sharing the generated list, which is the accumulating output).
+        resume = dataclasses.replace(
+            req, prompt=list(req.prompt) + req.generated)
+        st.resumed.add(id(resume))
+        st.queue.appendleft(resume)
+        st.stats[req.uid]["preemptions"] += 1
+        self.preemptions += 1
+
+
+@dataclasses.dataclass
+class _SchedState:
+    """Mutable per-serve() scheduler state (host-side bookkeeping)."""
+    queue: deque
+    mgr: Optional[PagedCacheManager]
+    t0: float
+    live: Dict[int, Request] = dataclasses.field(default_factory=dict)
+    results: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
+    stats: Dict[int, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
+    admit_seq: Dict[int, int] = dataclasses.field(default_factory=dict)
+    next_seq: int = 0
+    resumed: set = dataclasses.field(default_factory=set)
+    slot_pos: List[int] = dataclasses.field(default_factory=list)
+    cache: Any = None          # dense layout
+    pool: Any = None           # paged layout: {"k_pages", "v_pages"}
+    bt_dev: Any = None         # paged layout: uploaded block tables
+    pos: Any = None
+    tok: Any = None
+    remaining: Any = None
+    uids: Any = None
 
 
 def _write_slot(cache, pcache, slot: int):

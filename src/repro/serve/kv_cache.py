@@ -1,0 +1,282 @@
+"""Paged KV cache: block pool, host-side page allocator, block tables.
+
+The serving cache layout is the paper's HW-vs-SW axis applied to memory:
+
+  dense   one (L, slots, max_seq, H, D) pool — every slot reserves
+          ``max_seq`` positions up front.  Reads are contiguous prefix
+          slices (the register-resident HW path), but capacity is
+          *slot*-bound: admitting a request costs ``max_seq`` tokens of
+          HBM no matter how short it is.
+  paged   one (L, num_pages, page_size, H, D) block pool shared by all
+          slots.  A host-side free-list allocator hands out pages on
+          demand; per-slot *block tables* map logical block j -> physical
+          page.  Reads go through the table — the paper's SW
+          memory-indirection path — so capacity is *memory*-bound:
+          the pool holds exactly the tokens that exist.
+
+Layout contract (paged):
+  cache = {"k_pages": (L, P, page_size, Hkv, D),
+           "v_pages": (L, P, page_size, Hkv, D),
+           "block_tables": (slots, max_blocks) int32}
+  block_tables[s, j] is the page holding slot s positions
+  [j*page_size, (j+1)*page_size); unmapped entries point at page 0.
+
+Page 0 is the TRASH page: it is never allocated, and every dead or
+unmapped block-table entry points at it.  Finished/preempted slots keep
+"decoding" garbage inside the fused step (the engine ignores their
+outputs, exactly as in the dense layout) — their cache writes land in the
+trash page instead of corrupting pages that were freed and reused by live
+slots.
+
+The allocator itself is deliberately host-side and synchronous: pages
+move at *step boundaries* (admission, growth, preemption, completion),
+never inside the jitted token step, so the hot loop stays one dispatch
+per token with the block tables uploaded only when they change.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CACHE_LAYOUTS = ("dense", "paged")
+
+# page index every dead / unmapped block-table entry points at; the
+# allocator never hands it out
+TRASH_PAGE = 0
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def blocks_for(n_tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``n_tokens`` positions."""
+    return cdiv(max(n_tokens, 0), page_size)
+
+
+class PageAllocator:
+    """Free-list allocator over pages [1, num_pages) — page 0 is trash.
+
+    alloc(n) is all-or-nothing (a request's blocks are granted together or
+    not at all, so a failed admission never leaks partial allocations) and
+    LIFO: freed pages are reused most-recently-freed first, which keeps the
+    working set of hot pages small.  All accounting is exact — the unit
+    tests treat ``used + free == usable`` as an invariant.
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("num_pages must be >= 2 (page 0 is the trash "
+                             f"page); got {num_pages}")
+        self.num_pages = num_pages
+        # LIFO free list; initialized so page 1 is handed out first
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self._used: set = set()
+        self.alloc_count = 0      # pages ever handed out
+        self.free_count = 0       # pages ever returned
+        self.peak_used = 0
+
+    @property
+    def usable(self) -> int:
+        return self.num_pages - 1
+
+    @property
+    def free(self) -> int:
+        return len(self._free)
+
+    @property
+    def used(self) -> int:
+        return len(self._used)
+
+    def utilization(self) -> float:
+        return self.used / self.usable
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n pages, or None if fewer than n are free (nothing allocated)."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._used.update(pages)
+        self.alloc_count += n
+        self.peak_used = max(self.peak_used, self.used)
+        return pages
+
+    def release(self, pages: List[int]):
+        for p in pages:
+            if p not in self._used:
+                raise ValueError(f"double free / foreign page {p}")
+            self._used.remove(p)
+            self._free.append(p)
+        self.free_count += len(pages)
+
+
+@dataclasses.dataclass
+class PagedStats:
+    """Utilization accounting snapshot (see :meth:`PagedCacheManager.stats`)."""
+    num_pages: int
+    page_size: int
+    used_pages: int
+    free_pages: int
+    peak_used_pages: int
+    utilization: float
+    peak_utilization: float
+    allocs: int
+    frees: int
+
+
+class PagedCacheManager:
+    """Host mirror of the paged cache: allocator + per-slot block tables.
+
+    Device state (the page pool and the uploaded block-table array) is
+    owned by the engine; this class owns the *mapping* and hands the
+    engine a fresh ``(slots, max_blocks)`` int32 table whenever it
+    changes (``dirty`` flag → one small H2D per change, not per token).
+    """
+
+    def __init__(self, num_pages: int, page_size: int, slots: int,
+                 max_seq: int):
+        self.page_size = page_size
+        self.max_blocks = cdiv(max_seq, page_size)
+        self.allocator = PageAllocator(num_pages)
+        self.tables = np.full((slots, self.max_blocks), TRASH_PAGE, np.int32)
+        self.owned: List[List[int]] = [[] for _ in range(slots)]
+        self.dirty = True
+
+    # ------------------------------------------------------------- queries
+    def can_admit(self, prompt_len: int, headroom: int = 0) -> bool:
+        """Enough free pages for a prompt, keeping ``headroom`` pages in
+        reserve.  The engine passes one growth page per live slot: a
+        request admitted into the very last pages would be prefilled and
+        then immediately preempted by an older slot crossing a page
+        boundary at the same step — a guaranteed-wasted forward pass."""
+        return (self.allocator.free
+                >= blocks_for(prompt_len, self.page_size) + headroom)
+
+    def fits_worst_case(self, prompt_len: int, max_new: int,
+                        max_seq: int) -> bool:
+        """Can this request *ever* complete alone in the pool?  Positions
+        written: the prompt plus one per decode step (the last sampled
+        token is never written), capped by max_seq."""
+        longest = min(prompt_len + max(max_new - 1, 0), max_seq)
+        return blocks_for(longest, self.page_size) <= self.allocator.usable
+
+    # ----------------------------------------------------------- mutation
+    def admit(self, slot: int, prompt_len: int) -> Optional[List[int]]:
+        """Map blocks for a prompt; None (nothing changed) if pages lack."""
+        n = blocks_for(prompt_len, self.page_size)
+        pages = self.allocator.alloc(n)
+        if pages is None:
+            return None
+        assert not self.owned[slot], f"slot {slot} already mapped"
+        for j, p in enumerate(pages):
+            self.tables[slot, j] = p
+        self.owned[slot] = list(pages)
+        self.dirty = True
+        return pages
+
+    def ensure_block(self, slot: int, block: int) -> bool:
+        """Map logical block ``block`` for ``slot`` (on-demand growth at a
+        step boundary).  True if already mapped or newly allocated."""
+        if block >= self.max_blocks:
+            return True  # position cap: decode stops at max_seq anyway
+        if self.tables[slot, block] != TRASH_PAGE:
+            return True
+        pages = self.allocator.alloc(1)
+        if pages is None:
+            return False
+        self.tables[slot, block] = pages[0]
+        self.owned[slot].append(pages[0])
+        self.dirty = True
+        return True
+
+    def release(self, slot: int):
+        """Free every page a slot owns and point its table at trash."""
+        if self.owned[slot]:
+            self.allocator.release(self.owned[slot])
+            self.owned[slot] = []
+            self.tables[slot, :] = TRASH_PAGE
+            self.dirty = True
+
+    def device_tables(self) -> jnp.ndarray:
+        self.dirty = False
+        return jnp.asarray(self.tables)
+
+    def prefill_page_idx(self, slot: int, n_blocks: int) -> np.ndarray:
+        """(n_blocks,) page indices for a slot's first blocks, trash-padded
+        past what the slot owns (scatter targets for padded prefill)."""
+        idx = np.full((n_blocks,), TRASH_PAGE, np.int32)
+        m = min(n_blocks, len(self.owned[slot]))
+        idx[:m] = self.tables[slot, :m]
+        return idx
+
+    def stats(self) -> PagedStats:
+        a = self.allocator
+        return PagedStats(
+            num_pages=a.num_pages, page_size=self.page_size,
+            used_pages=a.used, free_pages=a.free,
+            peak_used_pages=a.peak_used,
+            utilization=a.utilization(),
+            peak_utilization=a.peak_used / a.usable,
+            allocs=a.alloc_count, frees=a.free_count)
+
+
+# ---------------------------------------------------------------------------
+# device-side pool helpers
+# ---------------------------------------------------------------------------
+
+def init_page_pool(n_layers: int, num_pages: int, page_size: int,
+                   n_kv_heads: int, d_head: int, dtype) -> Dict[str, Any]:
+    """The shared block pool: (L, P, page_size, Hkv, D) per K and V."""
+    shape = (n_layers, num_pages, page_size, n_kv_heads, d_head)
+    return {"k_pages": jnp.zeros(shape, dtype),
+            "v_pages": jnp.zeros(shape, dtype)}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def scatter_prefill(pages: Dict[str, jnp.ndarray],
+                    pcache: Dict[str, jnp.ndarray],
+                    page_idx: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Write a dense prefilled cache through the block tables into the pool.
+
+    pages: {"k_pages"/"v_pages": (L, P, ps, H, D)} — donated, updated in
+    place.  pcache: {"k"/"v": (L, B, S, H, D)} from :meth:`Model.prefill`.
+    page_idx: (B, ceil(S/ps)) int32 physical page per (row, logical block);
+    rows' tails past their prompt point at the trash page, so the scatter
+    is one fused gather-free ``.at[].set`` per leaf (duplicate trash
+    indices may collide — by construction only padding lands there).
+    """
+    ps = pages["k_pages"].shape[2]
+    out = dict(pages)
+    flat_idx = page_idx.reshape(-1)
+    for name, src_name in (("k_pages", "k"), ("v_pages", "v")):
+        pool = pages[name]
+        src = pcache[src_name]
+        l, b, s, h, d = src.shape
+        pad = cdiv(s, ps) * ps - s
+        if pad:
+            src = jnp.pad(src, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        nb = src.shape[2] // ps
+        src = src.reshape(l, b * nb, ps, h, d)
+        out[name] = pool.at[:, flat_idx].set(src.astype(pool.dtype))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("page_size",))
+def gather_slot(pages: Dict[str, jnp.ndarray], table_row: jnp.ndarray,
+                page_size: int) -> Dict[str, jnp.ndarray]:
+    """Debug/test helper: reassemble one slot's dense (L, NB*ps, H, D)
+    K/V view from the pool through its block-table row."""
+    out = {}
+    for name, dense in (("k_pages", "k"), ("v_pages", "v")):
+        g = jnp.take(pages[name], table_row, axis=1)  # (L, NB, ps, H, D)
+        l, nb, ps, h, d = g.shape
+        out[dense] = g.reshape(l, nb * ps, h, d)
+    return out

@@ -9,7 +9,6 @@ computes per-chunk logits inside a ``jax.checkpoint`` so live memory is one
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

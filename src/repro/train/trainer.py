@@ -16,10 +16,9 @@ from __future__ import annotations
 import dataclasses
 import statistics
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint.checkpoint import (
     AsyncCheckpointer,

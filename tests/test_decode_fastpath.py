@@ -176,9 +176,8 @@ def test_fused_step_cache_buffers_donated():
     model = fast.model
     cache = jax.eval_shape(lambda: model.init_cache(2, 48))
     arr = jax.ShapeDtypeStruct((2,), jnp.int32)
-    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
     pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(1))
-    compiled = fast._fused_step.lower(pshapes, cache, arr, arr, arr, key,
+    compiled = fast._fused_step.lower(pshapes, cache, arr, arr, arr, arr,
                                       fast.attend_block).compile()
     hlo = compiled.as_text()
     # XLA records donation as input_output_alias on the entry computation;
@@ -197,7 +196,7 @@ def test_fused_step_consumes_cache_behaviorally():
     tok = jnp.zeros((2,), jnp.int32)
     pos = jnp.full((2,), 4, jnp.int32)
     rem = jnp.full((2,), 3, jnp.int32)
-    out = fast.fused_step(cache, tok, pos, rem, jax.random.PRNGKey(0),
-                          fast.attend_block)
+    uids = jnp.arange(2, dtype=jnp.int32)
+    out = fast.fused_step(cache, tok, pos, rem, uids, fast.attend_block)
     jax.block_until_ready(out[0])
     assert all(leaf.is_deleted() for leaf in jax.tree.leaves(cache))

@@ -7,9 +7,8 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.dist.sharding import (
     batch_pspecs,
@@ -17,7 +16,6 @@ from repro.dist.sharding import (
     param_spec,
 )
 from repro.roofline.analysis import (
-    model_flops,
     parse_hlo_collectives,
     parse_hlo_collectives_trip_aware,
     roofline_report,

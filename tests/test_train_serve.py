@@ -1,15 +1,12 @@
 """Train/serve layer tests: loss math, accumulation, checkpoint restart,
 and prefill/decode consistency against the training-time forward pass."""
 
-import os
-import shutil
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.registry import list_archs, reduced_config
+from repro.configs.registry import reduced_config
 from repro.data.pipeline import DataConfig, SyntheticPipeline
 from repro.models.config import ModelConfig
 from repro.models.lm import Model
