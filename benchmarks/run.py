@@ -49,7 +49,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--section", default="all",
                     choices=["all", "fig5", "table4", "serve", "train",
-                             "roofline"])
+                             "spec", "roofline"])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI shapes for the serve/train sections")
     ap.add_argument("--json-dir", default=None, metavar="DIR",
@@ -73,6 +73,11 @@ def main():
         # dense-vs-paged capacity section run in one invocation
         from benchmarks.serve_decode import main as serve_decode
         serve_decode(smoke + jdir("serve_decode"))
+    if args.section in ("all", "spec"):
+        # speculative decoding: accepted-tokens/s vs k, both verify
+        # backends, greedy-parity gate (non-zero exit on divergence)
+        from benchmarks.spec_decode import main as spec_decode
+        spec_decode(smoke + jdir("spec_decode"))
     if args.section in ("all", "train"):
         from benchmarks.train_prefill import main as train_prefill
         train_prefill(smoke + jdir("train_prefill"))

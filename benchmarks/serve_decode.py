@@ -36,6 +36,7 @@ from repro.configs.registry import reduced_config
 from repro.models.lm import Model
 from repro.roofline.jaxpr_cost import trace_cost
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.kv_cache import cdiv
 
 
 def _requests(n: int, vocab: int, prompt_lo: int, prompt_hi: int,
@@ -256,6 +257,78 @@ def run_layouts(smoke: bool = False, trials: int = 3) -> List[Dict]:
     return rows
 
 
+def run_page_sweep(smoke: bool = False, trials: int = 3) -> List[Dict]:
+    """``page_size`` sweep: paged-vs-dense indirection overhead per size.
+
+    The ROADMAP's TPU-validation item needs the paged kernel swept over
+    page_size in {64, 128, 256} (sublane/lane alignment) against the dense
+    kernel, recording the indirection-overhead ratio the paper predicts
+    for the SW memory-indirection path.  This section produces exactly
+    that table — wall tok/s plus the bytes-proxy ratio — and runs in
+    interpret mode on CPU for the CI smoke (numbers there gauge the
+    *algorithmic* traffic, not TPU wall-clock).
+    """
+    arch = "qwen2-1.5b"
+    if smoke:
+        slots, max_seq, n_req, max_new, plo, phi = 2, 256, 4, 12, 16, 33
+        trials = 1
+    else:
+        slots, max_seq, n_req, max_new, plo, phi = 4, 1024, 8, 64, 32, 96
+    page_sizes = (64, 128, 256)
+    cfg = reduced_config(arch)
+    cfg = dataclasses.replace(cfg, max_seq=max_seq)
+    model = Model(cfg, compute_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = _requests(n_req, cfg.vocab, plo, phi, max_new, seed=2)
+
+    dense_eng = ServeEngine(model, params, max_seq=max_seq,
+                            batch_slots=slots)
+    dense_out = dense_eng.serve([dataclasses.replace(r, generated=None)
+                                 for r in reqs])
+    dense_best = None
+    for _ in range(trials):
+        s = _serve_once(dense_eng, reqs)
+        if dense_best is None or s["tok_s"] > dense_best["tok_s"]:
+            dense_best = s
+    attend = dense_eng._attend_len(phi + max_new)
+    dense_bytes = _step_cost(model, slots, max_seq, attend)
+
+    rows = []
+    for ps in page_sizes:
+        num_pages = slots * cdiv(max_seq, ps) + 1
+        eng = ServeEngine(model, params, max_seq=max_seq,
+                          batch_slots=slots, cache_layout="paged",
+                          page_size=ps, num_pages=num_pages)
+        out = eng.serve([dataclasses.replace(r, generated=None)
+                         for r in reqs])
+        best = None
+        for _ in range(trials):
+            s = _serve_once(eng, reqs)
+            if best is None or s["tok_s"] > best["tok_s"]:
+                best = s
+        step_bytes = _step_cost(
+            model, slots, max_seq, attend,
+            cache_kwargs=dict(layout="paged", page_size=ps,
+                              num_pages=num_pages))
+        rows.append({
+            "section": "page_sweep",
+            "page_size": ps,
+            "num_pages": num_pages,
+            "tok_s": best["tok_s"],
+            "tok_s_vs_dense": best["tok_s"] / dense_best["tok_s"],
+            "step_bytes": step_bytes,
+            "indirection_ratio": step_bytes / max(dense_bytes, 1),
+            "greedy_identical": out == dense_out,
+        })
+    rows.append({
+        "section": "page_sweep", "page_size": 0,
+        "tok_s": dense_best["tok_s"], "tok_s_vs_dense": 1.0,
+        "step_bytes": dense_bytes, "indirection_ratio": 1.0,
+        "greedy_identical": True,
+    })
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -298,7 +371,18 @@ def main(argv=None):
                   f"{r.get('preemptions', 0):8d} "
                   f"{r.get('peak_util', 0.0):10.2f} "
                   f"{str(r['greedy_identical']):>9s}")
-    rows = rows + lrows
+    srows = run_page_sweep(smoke=args.smoke)
+    print("\n== Page-size sweep: indirection overhead vs dense "
+          "(page_size 0 = dense baseline) ==")
+    print(f"{'page_size':>9s} {'tok/s':>8s} {'vs dense':>9s} "
+          f"{'step_MB':>8s} {'indirection':>12s} {'greedy==':>9s}")
+    for r in srows:
+        print(f"{r['page_size']:9d} {r['tok_s']:8.1f} "
+              f"{r['tok_s_vs_dense']:8.2f}x {r['step_bytes'] / 1e6:8.2f} "
+              f"{r['indirection_ratio']:11.2f}x "
+              f"{str(r['greedy_identical']):>9s}")
+
+    rows = rows + lrows + srows
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         with open(args.json, "w") as f:

@@ -1,0 +1,186 @@
+"""Speculative decoding benchmark: accepted-tokens/s vs window size k.
+
+The serving-side version of the paper's HW-vs-SW dispatch-overhead story:
+one fused propose+verify dispatch commits up to k tokens (HW path) against
+k single-token dispatches (the k=1 baseline), with the verify kernel's
+fused Pallas lowering measured against the chunked-jnp SW baseline.
+
+Reported per (k, verify backend):
+  accepted tok/s   wall-clock committed-token throughput over the engine
+  accept/step      mean tokens committed per window (1..k)
+  step MB          jaxpr bytes proxy for one verify dispatch (the paged
+                   block traffic is index-map-replayed, so the table walk
+                   is charged per visited entry)
+  MB/accepted      step bytes / accept-per-step — the k-for-1 dispatch
+                   amortization the subsystem exists to buy
+
+The run FAILS (exit 1) if greedy speculative output differs from
+non-speculative decode anywhere — CI uses this as the parity gate.
+
+Draft: a 1-layer self-speculative prefix of the target.  The smoke model's
+layer stack is damped (x0.05) so the truncated draft agrees with the
+target — with random-init weights draft/target agreement is ~1/vocab and
+every acceptance rate would be meaninglessly ~1.0; real rates need trained
+weights, but the damped proxy exercises the identical code path at a
+realistic acceptance level.
+
+  PYTHONPATH=src python benchmarks/spec_decode.py          # full shapes
+  PYTHONPATH=src python benchmarks/spec_decode.py --smoke  # CI shapes
+"""
+
+from __future__ import annotations
+
+import argparse
+import copy
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import reduced_config
+from repro.models.lm import Model
+from repro.roofline.jaxpr_cost import trace_cost
+from repro.serve.engine import Request, ServeEngine
+
+
+def _requests(n: int, vocab: int, prompt_len: int, max_new: int,
+              seed: int = 0) -> List[Request]:
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, vocab, prompt_len).tolist(),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _serve_timed(engine: ServeEngine, reqs: List[Request], trials: int):
+    outputs = engine.serve(copy.deepcopy(reqs))   # warm jit caches
+    best = None
+    for _ in range(trials):
+        t0 = time.perf_counter()
+        engine.serve(copy.deepcopy(reqs))
+        dt = time.perf_counter() - t0
+        if best is None or dt < best:
+            best = dt
+    n_tok = sum(len(v) for v in outputs.values())
+    return outputs, n_tok, best
+
+
+def _verify_step_bytes(model, slots, max_seq, page_size, num_pages,
+                       k, attend, backend) -> float:
+    """Bytes proxy for one fused verify dispatch (jaxpr cost walker; the
+    paged gathers are charged at index-map-replayed block traffic)."""
+    cache = jax.eval_shape(lambda: model.init_cache(
+        slots, max_seq, layout="paged", page_size=page_size,
+        num_pages=num_pages))
+    tok = jax.ShapeDtypeStruct((slots, k), jnp.int32)
+    pos = jax.ShapeDtypeStruct((slots,), jnp.int32)
+
+    def step(params, cache, tok, pos):
+        return model.decode_verify_step(params, cache, tok, pos, attend,
+                                        backend)
+
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    return trace_cost(step, pshapes, cache, tok, pos)["bytes_total"]
+
+
+def run(smoke: bool = False, trials: int = 3) -> List[Dict]:
+    arch = "qwen2-1.5b"
+    if smoke:
+        slots, max_seq, n_req, prompt_len, max_new = 2, 64, 4, 8, 16
+        page_size, ks, trials = 8, (1, 2, 4), 1
+    else:
+        slots, max_seq, n_req, prompt_len, max_new = 4, 256, 8, 24, 64
+        page_size, ks = 16, (1, 2, 4, 8)
+    cfg = reduced_config(arch)
+    cfg = dataclasses.replace(cfg, max_seq=max_seq)
+    model = Model(cfg, compute_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    # damp the layer stack so the 1-layer self-draft tracks the target
+    # (see module docstring — random-init acceptance is meaningless)
+    params = dict(params, layers=jax.tree.map(lambda a: a * 0.05,
+                                              params["layers"]))
+    reqs = _requests(n_req, cfg.vocab, prompt_len, max_new)
+
+    # greedy oracle: the dense non-speculative fast path
+    oracle_eng = ServeEngine(model, params, max_seq=max_seq,
+                             batch_slots=slots)
+    oracle = oracle_eng.serve(copy.deepcopy(reqs))
+
+    rows: List[Dict] = []
+    base_tok_s = None
+    parity = True
+    for k in ks:
+        for backend in (("jnp",) if k == 1 else ("kernel", "jnp")):
+            kw = dict(cache_layout="paged", page_size=page_size)
+            if k > 1:
+                kw.update(spec_k=k, draft="self:1", verify_backend=backend)
+            eng = ServeEngine(model, params, max_seq=max_seq,
+                              batch_slots=slots, **kw)
+            outputs, n_tok, dt = _serve_timed(eng, reqs, trials)
+            ok = outputs == oracle
+            parity = parity and ok
+            accepts = [s.get("accept_rate", 1.0)
+                       for s in eng.last_stats.values()]
+            accept = float(np.mean(accepts))
+            attend = eng._attend_len(prompt_len + max_new + k)
+            step_bytes = _verify_step_bytes(
+                model, slots, max_seq, page_size, eng.num_pages, k,
+                attend, backend if k > 1 else "jnp")
+            tok_s = n_tok / dt
+            if k == 1:
+                base_tok_s = tok_s
+            p = eng.last_pool_stats
+            rows.append({
+                "section": "spec_decode",
+                "k": k,
+                "verify": "fused-kernel" if (k > 1 and backend == "kernel")
+                else ("chunked-jnp" if k > 1 else "non-spec"),
+                "accepted_tok_s": tok_s,
+                "speedup_vs_k1": tok_s / base_tok_s,
+                "accept_per_step": accept,
+                "step_bytes": step_bytes,
+                "bytes_per_accepted": step_bytes / accept,
+                "retracts": p.retracts,
+                "greedy_identical": ok,
+            })
+    if not parity:
+        raise SystemExit("PARITY FAILURE: greedy speculative decode "
+                         "diverged from non-speculative decode")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI (no perf claims)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the result rows as JSON")
+    args = ap.parse_args(argv)
+    rows = run(smoke=args.smoke)
+    shape = "smoke" if args.smoke else "slots=4 max_seq=256"
+    print(f"\n== Speculative decode: accepted-tokens/s vs window k "
+          f"({shape}; damped-layer smoke model, 1-layer self-draft) ==")
+    print(f"{'k':>2s} {'verify':14s} {'acc tok/s':>10s} {'vs k=1':>7s} "
+          f"{'acc/step':>9s} {'step_MB':>8s} {'MB/accepted':>12s} "
+          f"{'retracts':>9s} {'greedy==':>9s}")
+    for r in rows:
+        print(f"{r['k']:2d} {r['verify']:14s} {r['accepted_tok_s']:10.1f} "
+              f"{r['speedup_vs_k1']:6.2f}x {r['accept_per_step']:9.2f} "
+              f"{r['step_bytes'] / 1e6:8.2f} "
+              f"{r['bytes_per_accepted'] / 1e6:12.3f} "
+              f"{r['retracts']:9d} {str(r['greedy_identical']):>9s}")
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"wrote {args.json}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

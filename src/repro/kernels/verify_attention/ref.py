@@ -1,0 +1,52 @@
+"""Oracle verify attention: dense per-row-masked scores over the window.
+
+The parity oracle for the paged flash-verify kernel: gather every logical
+block through the table into a dense view, score all T window queries
+against it, and mask each row at its own position — query t (at absolute
+position pos+t) sees the committed prefix plus window tokens 0..t.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def verify_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         pos: jnp.ndarray) -> jnp.ndarray:
+    """q: (B, T, Hq, D); k/v: (B, Smax, Hkv, Dv); pos: (B,) first window
+    position (rows pos..pos+T-1 hold the window tokens' K/V).
+
+    Returns (B, T, Hq, Dv)."""
+    b, t, hq, d = q.shape
+    smax, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    g = hq // hkv
+    qg = q.reshape(b, t, hkv, g, d)
+    s = jnp.einsum("bthgd,bkhd->bhtgk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    ki = jnp.arange(smax)
+    row_limit = pos[:, None] + jnp.arange(t)[None, :]        # (B, T)
+    valid = ki[None, None, :] <= row_limit[:, :, None]       # (B, T, Smax)
+    s = jnp.where(valid[:, None, :, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhtgk,bkhd->bthgd", p, v.astype(jnp.float32))
+    return o.reshape(b, t, hq, dv).astype(q.dtype)
+
+
+def paged_verify_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                               v_pages: jnp.ndarray,
+                               block_tables: jnp.ndarray,
+                               pos: jnp.ndarray) -> jnp.ndarray:
+    """Paged oracle: materialized ``jnp.take`` block gather, then the dense
+    oracle — the SW memory-indirection path, batched over the window."""
+    b, nb = block_tables.shape
+    _, ps, h, d = k_pages.shape
+    dv = v_pages.shape[-1]
+    k = jnp.take(k_pages, block_tables.reshape(-1), axis=0)
+    v = jnp.take(v_pages, block_tables.reshape(-1), axis=0)
+    k = k.reshape(b, nb * ps, h, d)
+    v = v.reshape(b, nb * ps, h, dv)
+    return verify_attention_ref(q, k, v, pos)

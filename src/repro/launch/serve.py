@@ -5,11 +5,17 @@ selects the seed per-token-dispatch loop for comparison, and
 ``--cache-layout paged`` swaps the dense slot pool for the paged block
 pool (``--page-size`` / ``--num-pages`` size it; the default pool
 matches dense capacity, a smaller one exercises preempt-and-requeue).
+``--spec-k`` turns on speculative decoding over the paged cache
+(``--draft self:N`` for an N-layer self-speculative prefix or an arch
+name for an independent draft; ``--verify-backend`` picks the fused
+Pallas verify kernel or the chunked-jnp SW baseline).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
       --requests 6 --prompt-len 16 --max-new 12
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
       --cache-layout paged --page-size 16 --num-pages 24
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
+      --cache-layout paged --spec-k 4 --draft self:2
 """
 
 from __future__ import annotations
@@ -53,6 +59,20 @@ def main():
     ap.add_argument("--num-pages", type=int, default=None,
                     help="pool pages incl. the trash page (default: "
                          "dense-capacity parity)")
+    ap.add_argument("--spec-k", type=int, default=1,
+                    help="speculative window: draft proposes k-1 tokens, "
+                         "the target verifies all k in one dispatch "
+                         "(requires --cache-layout paged); 1 disables")
+    ap.add_argument("--draft", default=None,
+                    help="draft model for --spec-k > 1: 'self' "
+                         "(half-depth self-speculation, the default), "
+                         "'self:N' (N-layer prefix), or a registry arch "
+                         "name (independent reduced-shape draft)")
+    ap.add_argument("--verify-backend", default="auto",
+                    choices=["auto", "kernel", "jnp"],
+                    help="k-token verify lowering: fused Pallas verify "
+                         "kernel vs chunked-jnp SW baseline (auto: kernel "
+                         "on TPU, jnp elsewhere)")
     ap.add_argument("--attend-block", type=int, default=64,
                     help="attention-length bucket: decode scores the live "
                          "prefix rounded up to this many positions")
@@ -74,7 +94,10 @@ def main():
                          prompt_block=args.prompt_block,
                          cache_layout=args.cache_layout,
                          page_size=args.page_size,
-                         num_pages=args.num_pages)
+                         num_pages=args.num_pages,
+                         spec_k=args.spec_k, draft=args.draft,
+                         verify_backend=None if args.verify_backend == "auto"
+                         else args.verify_backend)
 
     rng = np.random.default_rng(args.seed)
     reqs = [Request(uid=i,
@@ -87,20 +110,27 @@ def main():
     dt = time.perf_counter() - t0
     n_tok = sum(len(v) for v in results.values())
     print(f"{'req':>4s} {'tokens':>7s} {'admit->first(ms)':>17s} "
-          f"{'tok/s':>8s} {'preempts':>9s}")
+          f"{'decode tok/s':>13s} {'e2e tok/s':>10s} {'accept':>7s} "
+          f"{'preempts':>9s}")
     for uid in sorted(results):
         s = engine.last_stats[uid]
+        acc = (f"{s['accept_rate']:7.2f}" if "accept_rate" in s
+               else f"{'—':>7s}")
         print(f"{uid:4d} {len(results[uid]):7d} "
-              f"{1e3 * s['admit_to_first_s']:17.1f} {s['tok_s']:8.1f} "
+              f"{1e3 * s['admit_to_first_s']:17.1f} {s['tok_s']:13.1f} "
+              f"{s['e2e_tok_s']:10.1f} {acc} "
               f"{int(s['preemptions']):9d}")
+    spec = f", spec-k={args.spec_k}" if args.spec_k > 1 else ""
     print(f"\n{n_tok} tokens in {dt:.2f}s = {n_tok / dt:.1f} tok/s "
-          f"({args.slots} slots, {args.cache_layout} cache, {cfg.name})")
+          f"({args.slots} slots, {args.cache_layout} cache{spec}, "
+          f"{cfg.name})")
     if engine.last_pool_stats is not None:
         p = engine.last_pool_stats
         print(f"pool: {p.num_pages} pages x {p.page_size} tok, peak "
-              f"{p.peak_used_pages} pages ({100 * p.peak_utilization:.0f}%"
-              f" util), {p.allocs} allocs / {p.frees} frees, "
-              f"{engine.preemptions} preemptions")
+              f"{p.peak_used_pages} pages / {p.peak_tokens} tok "
+              f"({100 * p.peak_utilization:.0f}% util high-water), "
+              f"{p.allocs} allocs / {p.frees} frees / {p.retracts} "
+              f"retracts, {engine.preemptions} preemptions")
     for uid in sorted(results):
         print(f"req {uid}: {results[uid]}")
 

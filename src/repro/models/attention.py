@@ -210,6 +210,70 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
     return decode_attention(q, k, v, pos, backend="jnp")
 
 
+def paged_verify_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           v_pages: jnp.ndarray,
+                           block_tables: jnp.ndarray, pos: jnp.ndarray, *,
+                           attend_len: Optional[int] = None,
+                           backend: Optional[str] = None) -> jnp.ndarray:
+    """k-token speculative verify against the paged cache: q (B, T, Hq, D)
+    is the draft window's queries at absolute positions pos..pos+T-1 (whose
+    K/V rows are already written through the block tables), page pools
+    (P, page_size, Hkv, Dv), block_tables (B, NB), pos (B,) first window
+    position.  Returns (B, T, Hq, Dv).
+
+    Causal masking *within the window* is per-row: query t attends cache
+    positions <= pos+t.  T=1 is exactly single-token paged decode.  Two
+    lowerings — the spec-decode subsystem's HW-vs-SW axis:
+
+      'kernel'  fused flash-verify Pallas kernel
+                (``repro.kernels.verify_attention``): ONE dispatch scores
+                all T positions, block table on the scalar-prefetch
+                channel, online softmax in VMEM scratch — the k-for-1
+                dispatch amortization;
+      'jnp'     ``jnp.take`` block gather into a dense view + per-row
+                dense-masked softmax over the window — the chunked SW
+                verification baseline (and CPU fallback).  Structurally
+                the window-batched form of the single-token SW path, so
+                greedy outputs stay bit-identical to non-speculative
+                decode.
+
+    attend_len: static bound on ``pos + T`` (engine-side bucketing); only
+    the first ceil(attend_len / page_size) table columns are visited.
+    """
+    page_size = k_pages.shape[1]
+    nb = block_tables.shape[1]
+    if attend_len is not None:
+        nb = min(nb, -(-attend_len // page_size))
+        block_tables = block_tables[:, :nb]
+    if backend is None:
+        backend = default_decode_backend()
+    if backend == "kernel":
+        from repro.kernels.verify_attention.ops import (
+            paged_verify_attention_op,
+        )
+
+        return paged_verify_attention_op(q, k_pages, v_pages, block_tables,
+                                         pos)
+    b, t, hq, d = q.shape
+    hkv = k_pages.shape[2]
+    dv = v_pages.shape[-1]
+    g = hq // hkv
+    k = jnp.take(k_pages, block_tables.reshape(-1), axis=0)
+    v = jnp.take(v_pages, block_tables.reshape(-1), axis=0)
+    k = k.reshape(b, nb * page_size, hkv, d)
+    v = v.reshape(b, nb * page_size, hkv, dv)
+    qg = q.reshape(b, t, hkv, g, d)
+    s = jnp.einsum("bthgd,bkhd->bhtgk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    ki = jnp.arange(nb * page_size)
+    row_limit = pos[:, None] + jnp.arange(t)[None, :]        # (B, T)
+    valid = ki[None, None, :] <= row_limit[:, :, None]       # (B, T, K)
+    s = jnp.where(valid[:, None, :, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhtgk,bkhd->bthgd", p, v.astype(jnp.float32))
+    return o.reshape(b, t, hq, dv).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # GQA block: projections + rope + cache plumbing
 # ---------------------------------------------------------------------------

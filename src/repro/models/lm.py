@@ -572,27 +572,30 @@ class Model:
                                                cache, unroll)
         return self._head(params, x)[:, 0, :cfg.vocab], new_cache
 
-    def _gqa_decode_loop(self, params, x, pos, write_attend):
-        """Shared unrolled decode layer body for the plain GQA families.
+    def _gqa_decode_layers(self, params, x, positions, write_attend):
+        """Shared unrolled decode/verify layer body for the GQA families.
 
-        ``write_attend(l, q, k, v)`` owns the *only* layout-specific part:
-        where the fresh K/V row lands and how the cache is read back
-        (dense affine address vs paged block-table indirection).  Keeping
-        one loop keeps the dense and paged paths bit-identical by
+        x: (B, S, d) embedded tokens sitting at absolute ``positions``
+        (B, S) — S=1 is single-token decode, S=T a speculative verify
+        window.  ``write_attend(l, q, k, v)`` owns the *only*
+        layout-specific part: where the fresh K/V rows land and how the
+        cache is read back (dense affine address vs paged block-table
+        indirection, one query row vs a causally-masked window).  Keeping
+        one loop keeps the dense, paged, and verify paths bit-identical by
         construction — a change to the layer math cannot diverge them.
         """
         from repro.models.attention import gqa_qkv
         from repro.models.layers import rope_freqs
 
         cfg = self.cfg
-        b = x.shape[0]
-        rope = rope_freqs(cfg.d_head, cfg.rope_theta, pos[:, None])
+        b, s, _ = x.shape
+        rope = rope_freqs(cfg.d_head, cfg.rope_theta, positions)
         for l in range(self._n_scan_layers):
             p = jax.tree.map(lambda a: a[l], params["layers"])
             g = rmsnorm(x, p["ln1"], cfg.norm_eps, self.wf)
-            q, k, v = gqa_qkv(p["attn"], g, cfg, pos[:, None], rope=rope)
+            q, k, v = gqa_qkv(p["attn"], g, cfg, positions, rope=rope)
             o = write_attend(l, q, k, v)
-            x = x + jnp.einsum("bsf,fd->bsd", o.reshape(b, 1, -1),
+            x = x + jnp.einsum("bsf,fd->bsd", o.reshape(b, s, -1),
                                p["attn"]["wo"].astype(x.dtype))
             g = rmsnorm(x, p["ln2"], cfg.norm_eps, self.wf)
             if cfg.family == "moe":
@@ -602,7 +605,11 @@ class Model:
             else:
                 x = x + swiglu(g, p["mlp"]["w_gate"], p["mlp"]["w_up"],
                                p["mlp"]["w_down"])
-        return self._head(params, x)[:, 0, :cfg.vocab]
+        return x
+
+    def _gqa_decode_loop(self, params, x, pos, write_attend):
+        x = self._gqa_decode_layers(params, x, pos[:, None], write_attend)
+        return self._head(params, x)[:, 0, :self.cfg.vocab]
 
     def _gqa_decode_unrolled(self, params, cache, x, pos,
                              attend_len: Optional[int]):
@@ -658,6 +665,74 @@ class Model:
                                           backend=self.decode_backend)
 
         logits = self._gqa_decode_loop(params, x, pos, write_attend)
+        return logits, {"k_pages": kp, "v_pages": vp, "block_tables": bt}
+
+    # ------------------------------------------------------ speculative verify
+    def decode_verify_step(self, params, cache, tokens: jnp.ndarray,
+                           pos: jnp.ndarray,
+                           attend_len: Optional[int] = None,
+                           verify_backend: Optional[str] = None):
+        """Score a T-token speculative window in one dispatch (paged cache).
+
+        tokens: (B, T) — row b holds [last committed token, draft_1, ...,
+        draft_{T-1}] sitting at absolute positions pos[b]..pos[b]+T-1.
+        Returns (logits (B, T, V), cache): logits[:, i] is the target
+        distribution for the token at position pos+i+1, conditioned on the
+        committed prefix plus window tokens 0..i — exactly what T
+        sequential ``decode_step`` calls would produce, so greedy
+        acceptance (longest matching prefix + one correction token) is
+        bit-identical to non-speculative decode.
+
+        T is static (the engine buckets spec_k), so each k compiles one
+        executable; T=1 degenerates to single-token decode.  Every window
+        token's K/V row is written through the block tables before the
+        attention read (rejected rows are rolled back by table edit in the
+        allocator, never copied — the next window simply overwrites them).
+        """
+        if "k_pages" not in cache:
+            raise ValueError("decode_verify_step needs a paged cache "
+                             "(k_pages/v_pages/block_tables); got leaves "
+                             f"{sorted(cache)}")
+        x = self._embed(params, tokens)
+        return self._gqa_verify_paged(params, cache, x, pos, attend_len,
+                                      verify_backend)
+
+    def _gqa_verify_paged(self, params, cache, x, pos,
+                          attend_len: Optional[int],
+                          verify_backend: Optional[str]):
+        """Window twin of :meth:`_gqa_decode_paged`: per layer the T fresh
+        K/V rows scatter at table-resolved ``(page, offset)`` pairs, then
+        the verify attention masks each query row at its own position."""
+        from repro.models.attention import paged_verify_attention
+
+        from repro.serve.kv_cache import TRASH_PAGE
+
+        kp, vp, bt = cache["k_pages"], cache["v_pages"], cache["block_tables"]
+        page_size = kp.shape[2]
+        t = x.shape[1]
+        positions = pos[:, None] + jnp.arange(t)[None, :]      # (B, T)
+        blk = positions // page_size
+        page = jnp.take_along_axis(bt, jnp.minimum(blk, bt.shape[1] - 1),
+                                   axis=1)                     # (B, T)
+        # a window straddling the end of the pool (pos near max_seq, or a
+        # finished slot coasting) must not fold its overflow rows back
+        # onto the last live block — those writes go to the trash page
+        # (the commit clamp never accepts tokens at such positions)
+        page = jnp.where(blk < bt.shape[1], page, TRASH_PAGE)
+        off = positions % page_size
+        backend = (verify_backend if verify_backend is not None
+                   else self.decode_backend)
+
+        def write_attend(l, q, k, v):
+            nonlocal kp, vp
+            kp = kp.at[l, page, off].set(k.astype(kp.dtype))
+            vp = vp.at[l, page, off].set(v.astype(vp.dtype))
+            return paged_verify_attention(q, kp[l], vp[l], bt, pos,
+                                          attend_len=attend_len,
+                                          backend=backend)
+
+        x = self._gqa_decode_layers(params, x, positions, write_attend)
+        logits = self._head(params, x)[..., :self.cfg.vocab]   # (B, T, V)
         return logits, {"k_pages": kp, "v_pages": vp, "block_tables": bt}
 
     # --------------------------------------------------------------- prefill

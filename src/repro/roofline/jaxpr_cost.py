@@ -108,7 +108,15 @@ def _pallas_block_traffic(eqn) -> float:
     over the grid and charge one block transfer per *change* of block
     index — the Pallas pipeline only streams a block when its index moves,
     so an index map that clamps at the causal diagonal (flash attention's
-    kv block-skip) genuinely saves the traffic this counter reports."""
+    kv block-skip) genuinely saves the traffic this counter reports.
+
+    The speculative k-token verify kernel rides the same replay: its
+    block-table gather is charged one page transfer per visited table
+    entry (the arange fill keeps entries distinct) while its widened
+    (T*G)-row query block is fetched once per (batch, head) — so the
+    verify dispatch's traffic is ~constant in k and the per-accepted-token
+    bytes fall ~k-fold, which is exactly the k-for-1 dispatch amortization
+    ``benchmarks/spec_decode.py`` reports."""
     gm = eqn.params["grid_mapping"]
     grid = tuple(int(g) for g in gm.grid)
     steps = int(np.prod(grid)) if grid else 1

@@ -5,3 +5,8 @@ from repro.serve.kv_cache import (  # noqa: F401
     PagedCacheManager,
     PagedStats,
 )
+from repro.serve.spec_decode import (  # noqa: F401
+    build_spec_step,
+    make_self_draft,
+    resolve_draft,
+)

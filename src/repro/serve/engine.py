@@ -34,6 +34,16 @@ being sampled, not from how many keys the engine consumed before, so
 outputs are independent of admission order, slot assignment, and
 preemption.
 
+Speculative decoding (``spec_k > 1``, paged layout) replaces the
+one-token step with a propose+verify window: a draft model proposes k-1
+tokens, the target scores all k positions in one fused dispatch
+(``repro.serve.spec_decode``), and the longest prefix matching the
+target's own ``(uid, position)``-keyed samples commits — 1..k tokens per
+dispatch, bit-identical output to non-speculative decode.  Requests with
+``spec=False`` ride the same batch committing one token per step.  The
+window's page span is mapped before the step and blocks holding only
+rejected rows are retracted afterwards (allocator table edit, no copies).
+
 The seed per-token-dispatch loop is preserved under ``fused=False`` as
 the benchmark baseline (``benchmarks/serve_decode.py``).
 """
@@ -41,7 +51,6 @@ the benchmark baseline (``benchmarks/serve_decode.py``).
 from __future__ import annotations
 
 import dataclasses
-import functools
 import time
 from collections import deque
 from typing import Any, Dict, List, Optional
@@ -50,12 +59,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.serve import spec_decode
 from repro.serve.kv_cache import (
     CACHE_LAYOUTS,
     PagedCacheManager,
     blocks_for,
     cdiv,
     scatter_prefill,
+    write_slot,
+    write_slots,
 )
 
 
@@ -78,6 +90,9 @@ class Request:
     prompt: List[int]
     max_new_tokens: int
     generated: Optional[List[int]] = None
+    # participate in speculative windows when the engine runs spec_k > 1;
+    # spec=False requests share the batch committing one token per step
+    spec: bool = True
 
 
 # families for which right-padded prefill is exact: cache purely positional
@@ -94,10 +109,20 @@ class ServeEngine:
                  cache_shardings=None, fused: bool = True,
                  attend_block: int = 64, prompt_block: int = 16,
                  cache_layout: str = "dense", page_size: int = 16,
-                 num_pages: Optional[int] = None):
+                 num_pages: Optional[int] = None,
+                 spec_k: int = 1, draft=None,
+                 verify_backend: Optional[str] = None):
         if cache_layout not in CACHE_LAYOUTS:
             raise ValueError(f"cache_layout must be one of {CACHE_LAYOUTS}; "
                              f"got {cache_layout!r}")
+        if spec_k < 1:
+            raise ValueError(f"spec_k must be >= 1; got {spec_k}")
+        if spec_k > 1 and cache_layout != "paged":
+            raise ValueError("speculative decoding (spec_k > 1) verifies "
+                             "against the paged cache; pass "
+                             "cache_layout='paged'")
+        if spec_k > 1 and not fused:
+            raise ValueError("speculative decoding requires fused=True")
         self.model = model
         self.params = params
         self.max_seq = max_seq
@@ -108,6 +133,8 @@ class ServeEngine:
         self.prompt_block = prompt_block
         self.cache_layout = cache_layout
         self.page_size = page_size
+        self.spec_k = spec_k
+        self.verify_backend = verify_backend
         if num_pages is None:
             # capacity parity with the dense pool (+1 for the trash page)
             num_pages = batch_slots * cdiv(max_seq, page_size) + 1
@@ -212,6 +239,22 @@ class ServeEngine:
         self._paged_step = jax.jit(paged_step_fn, static_argnums=(7,),
                                    donate_argnums=(1, 4, 5))
 
+        # ---- speculative decoding: draft + fused propose/verify/accept
+        self.draft_model = self.draft_params = None
+        if spec_k > 1:
+            self.draft_model, self.draft_params = spec_decode.resolve_draft(
+                model, params, draft, seed=seed)
+            self._spec_step = spec_decode.build_spec_step(
+                model, self.draft_model, sample_at, max_seq=max_seq,
+                spec_k=spec_k, verify_backend=verify_backend)
+
+            def draft_prefill_fn(dparams, batch, last_pos):
+                # pad to max_seq: the draft cache is a dense slot pool
+                return self.draft_model.prefill(dparams, batch, max_seq,
+                                                last_pos)
+
+            self._draft_prefill = jax.jit(draft_prefill_fn)
+
     # ----------------------------------------------------------- primitives
     def prefill(self, batch: Dict[str, jnp.ndarray]):
         """Equal-length prompt batch -> (last_logits, cache)."""
@@ -293,13 +336,22 @@ class ServeEngine:
                         f"request {req.uid}: prompt of {len(req.prompt)} "
                         f"tokens leaves no decode room in max_seq="
                         f"{self.max_seq}")
-                if not st.mgr.fits_worst_case(len(req.prompt),
-                                              req.max_new_tokens,
-                                              self.max_seq):
+                # a speculative window transiently maps up to spec_k - 1
+                # positions past the final token; charge them so the
+                # grow-span can always be granted to a lone request
+                if not st.mgr.fits_worst_case(
+                        len(req.prompt),
+                        req.max_new_tokens + self.spec_k - 1,
+                        self.max_seq):
+                    longest = min(
+                        len(req.prompt) + req.max_new_tokens
+                        + self.spec_k - 2, self.max_seq)
                     raise ValueError(
                         f"request {req.uid} can never fit: needs "
-                        f"{blocks_for(min(len(req.prompt) + req.max_new_tokens - 1, self.max_seq), self.page_size)}"
-                        f" pages, pool has {st.mgr.allocator.usable}")
+                        f"{blocks_for(longest, self.page_size)} pages "
+                        + (f"(incl. the spec_k={self.spec_k} window "
+                           f"overhang) " if self.spec_k > 1 else "")
+                        + f", pool has {st.mgr.allocator.usable}")
         if st.mgr is not None:
             st.pool = self.model.init_cache(
                 self.slots, self.max_seq, layout="paged",
@@ -313,6 +365,10 @@ class ServeEngine:
         st.remaining = jnp.zeros((self.slots,), jnp.int32)
         st.uids = jnp.zeros((self.slots,), jnp.int32)
         st.slot_pos = [0] * self.slots        # host mirror (no device sync)
+        if self.spec_k > 1:
+            st.draft_cache = self.draft_model.init_cache(self.slots,
+                                                         self.max_seq)
+            st.spec_mask = jnp.zeros((self.slots,), jnp.bool_)
         self.last_stats = st.stats
         self.preemptions = 0
 
@@ -333,6 +389,8 @@ class ServeEngine:
 
     # --------------------------------------------------------------- steps
     def _step(self, st: "_SchedState"):
+        if self.spec_k > 1:
+            return self._spec_step_run(st)
         needed = max(st.slot_pos[s] for s in st.live) + 1
         attend = self._attend_len(needed)
         if self.fused and st.mgr is not None:
@@ -366,6 +424,39 @@ class ServeEngine:
             if bool(done_h[slot]):
                 self._finish(st, slot, now)
 
+    def _spec_step_run(self, st: "_SchedState"):
+        """Speculative twin of the paged branch of :meth:`_step`: one
+        dispatch proposes, verifies, and commits a 1..spec_k token window
+        per live slot.  Host work per step: append the committed prefix,
+        then retract pages holding only rejected rows (table edit)."""
+        t_w = self.spec_k
+        needed = max(st.slot_pos[s] for s in st.live) + t_w
+        attend = self._attend_len(needed)
+        if st.mgr.dirty:
+            st.bt_dev = st.mgr.device_tables()
+        (st.pool, st.draft_cache, targets, commit, st.tok, st.pos,
+         st.remaining, done) = self._spec_step(
+            self.params, self.draft_params, st.pool, st.draft_cache,
+            st.bt_dev, st.tok, st.pos, st.remaining, st.uids, st.spec_mask,
+            attend)
+        # the one host transfer per window: candidates + counts + done
+        targets_h, commit_h, done_h = jax.device_get((targets, commit, done))
+        now = time.perf_counter() - st.t0
+        for slot in list(st.live):
+            req = st.live[slot]
+            c = int(commit_h[slot])
+            req.generated.extend(int(x) for x in targets_h[slot, :c])
+            st.slot_pos[slot] += c
+            s = st.stats[req.uid]
+            s["spec_steps"] = s.get("spec_steps", 0) + 1
+            s["spec_tokens"] = s.get("spec_tokens", 0) + c
+            if bool(done_h[slot]):
+                self._finish(st, slot, now)
+            else:
+                # write-then-retract: pages mapped for the window whose
+                # rows were all rejected go back to the allocator
+                st.mgr.retract_above(slot, st.slot_pos[slot])
+
     def _finish(self, st: "_SchedState", slot: int, now: float):
         req = st.live.pop(slot)
         st.results[req.uid] = req.generated
@@ -374,8 +465,18 @@ class ServeEngine:
         s = st.stats[req.uid]
         s["finished_s"] = now
         s["tokens"] = len(req.generated)
-        wall = max(now - s["admitted_s"], 1e-9)
-        s["tok_s"] = len(req.generated) / wall
+        n = len(req.generated)
+        # steady-state decode rate: tokens after the first over the decode
+        # interval only — admit->first-token (queueing + prefill) is
+        # reported separately so a long prompt cannot masquerade as slow
+        # decode.  e2e_tok_s keeps the old conflated number.
+        decode_wall = max(now - s["first_token_s"], 1e-9)
+        s["tok_s"] = (n - 1) / decode_wall if n > 1 else 0.0
+        s["e2e_tok_s"] = n / max(now - s["admitted_s"], 1e-9)
+        if s.get("spec_steps"):
+            # mean committed tokens per window (1..spec_k); spec_k amortizes
+            # dispatch overhead by exactly this factor
+            s["accept_rate"] = s["spec_tokens"] / s["spec_steps"]
 
     # ------------------------------------------------------------ admission
     def _admit(self, st: "_SchedState"):
@@ -462,9 +563,20 @@ class ServeEngine:
                 self.params, {"tokens": jnp.asarray(toks)}, last_pos)
             slot_idx = jnp.asarray(slots, jnp.int32)
             if len(group) == 1:
-                st.cache = _write_slot(st.cache, pcache, slots[0])
+                st.cache = write_slot(st.cache, pcache, slots[0])
             else:
-                st.cache = _write_slots(st.cache, pcache, slot_idx)
+                st.cache = write_slots(st.cache, pcache, slot_idx)
+        if self.spec_k > 1:
+            # the draft proposes from its own cache: prefill it alongside
+            # the target (same padded batch; draft logits are discarded —
+            # the first committed token is the target's)
+            _, dcache = self._draft_prefill(
+                self.draft_params, {"tokens": jnp.asarray(toks)}, last_pos)
+            if len(group) == 1:
+                st.draft_cache = write_slot(st.draft_cache, dcache, slots[0])
+            else:
+                st.draft_cache = write_slots(
+                    st.draft_cache, dcache, jnp.asarray(slots, jnp.int32))
         # the token sampled from prefill logits sits at position len(prompt)
         first = self._sample_at(logits, jnp.asarray(lens, jnp.int32),
                                 jnp.asarray([r.uid for r in reqs], jnp.int32))
@@ -477,22 +589,28 @@ class ServeEngine:
             jnp.int32))
         st.uids = st.uids.at[slot_idx].set(jnp.asarray(
             [r.uid for r in reqs], jnp.int32))
+        if self.spec_k > 1:
+            st.spec_mask = st.spec_mask.at[slot_idx].set(jnp.asarray(
+                [bool(getattr(r, "spec", True)) for r in reqs]))
         for req, f in zip(reqs, first_h):
             req.generated.append(int(f))
 
     # ----------------------------------------------------------- preemption
     def _grow_or_preempt(self, st: "_SchedState"):
-        """Step boundary: every live slot's next write position must be
-        mapped.  Grow on demand; when the pool exhausts, preempt the
-        newest live request (LIFO — the oldest always makes progress) and
-        requeue it at the queue front with its generated tokens folded
-        into its prompt."""
+        """Step boundary: every live slot's next write span must be
+        mapped — one position for plain decode, ``spec_k`` for a
+        speculative window (positions past ``max_seq`` need no page; their
+        writes land in the trash).  Grow on demand; when the pool
+        exhausts, preempt the newest live request (LIFO — the oldest
+        always makes progress) and requeue it at the queue front with its
+        generated tokens folded into its prompt."""
+        span = self.spec_k
         for slot in sorted(st.live, key=lambda s: st.admit_seq[s]):
             if slot not in st.live:
                 continue  # preempted while serving an older slot
             while slot in st.live:
-                blk = st.slot_pos[slot] // self.page_size
-                if st.mgr.ensure_block(slot, blk):
+                first = st.slot_pos[slot]
+                if st.mgr.ensure_span(slot, first, first + span - 1):
                     break
                 victim = max(st.live, key=lambda s: st.admit_seq[s])
                 self._preempt(st, victim)
@@ -534,29 +652,5 @@ class _SchedState:
     tok: Any = None
     remaining: Any = None
     uids: Any = None
-
-
-def _write_slot(cache, pcache, slot: int):
-    """Copy a batch-1 prefilled cache into slot ``slot`` of the pool cache.
-
-    Every cache leaf has the batch dim at position 1 (layer-stacked leaves).
-    """
-    def one(pool, single):
-        return jax.lax.dynamic_update_slice_in_dim(
-            pool, single.astype(pool.dtype), slot, axis=1)
-
-    return jax.tree.map(one, cache, pcache)
-
-
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _write_slots(cache, pcache, slot_idx: jnp.ndarray):
-    """Scatter a k-row prefilled cache into k pool slots (donated pool).
-
-    slot_idx is traced, not static: free-slot combinations vary while
-    serving, and a compile per combination would litter the jit cache —
-    one executable per (k, shapes) handles them all.
-    """
-    def one(pool, batch):
-        return pool.at[:, slot_idx].set(batch.astype(pool.dtype))
-
-    return jax.tree.map(one, cache, pcache)
+    draft_cache: Any = None    # speculative decoding: dense draft slot pool
+    spec_mask: Any = None      # speculative decoding: per-slot spec flag

@@ -120,16 +120,25 @@ class PageAllocator:
 
 @dataclasses.dataclass
 class PagedStats:
-    """Utilization accounting snapshot (see :meth:`PagedCacheManager.stats`)."""
+    """Utilization accounting snapshot (see :meth:`PagedCacheManager.stats`).
+
+    ``peak_utilization`` / ``peak_used_pages`` / ``peak_tokens`` are the
+    pool's high-water marks over the serve() call (the end-of-call *used*
+    figures are always zero — every page is released at completion).
+    ``retracts`` counts pages taken back by the speculative
+    write-then-retract pattern (mapped for a draft window, freed when the
+    window's tail was rejected)."""
     num_pages: int
     page_size: int
     used_pages: int
     free_pages: int
     peak_used_pages: int
+    peak_tokens: int
     utilization: float
     peak_utilization: float
     allocs: int
     frees: int
+    retracts: int
 
 
 class PagedCacheManager:
@@ -149,6 +158,7 @@ class PagedCacheManager:
         self.tables = np.full((slots, self.max_blocks), TRASH_PAGE, np.int32)
         self.owned: List[List[int]] = [[] for _ in range(slots)]
         self.dirty = True
+        self.retract_count = 0    # pages taken back by speculative rollback
 
     # ------------------------------------------------------------- queries
     def can_admit(self, prompt_len: int, headroom: int = 0) -> bool:
@@ -197,6 +207,42 @@ class PagedCacheManager:
         self.dirty = True
         return True
 
+    def ensure_span(self, slot: int, first_pos: int, last_pos: int) -> bool:
+        """Map every block covering positions [first_pos, last_pos] — the
+        speculative window's write span.  All-or-nothing per call site:
+        returns False as soon as a block cannot be granted (the engine
+        preempts and retries), having mapped any earlier blocks (they stay
+        mapped — the retry needs them anyway)."""
+        for blk in range(first_pos // self.page_size,
+                         last_pos // self.page_size + 1):
+            if not self.ensure_block(slot, blk):
+                return False
+        return True
+
+    def retract_above(self, slot: int, n_tokens: int) -> int:
+        """Speculative rollback: free every block holding only positions
+        >= ``n_tokens`` (the write-then-retract pattern).  A draft window
+        maps blocks up to ``pos + k - 1`` before the verify dispatch; when
+        acceptance commits fewer tokens, the tail blocks hold nothing but
+        rejected rows — a table edit hands their pages back, no copies.
+        The stale rows in the *kept* boundary block are overwritten by the
+        next window (attention masks them until then).  Returns the number
+        of pages retracted."""
+        keep = blocks_for(n_tokens, self.page_size)   # blocks [0, keep)
+        freed = []
+        for blk in range(keep, self.max_blocks):
+            page = int(self.tables[slot, blk])
+            if page == TRASH_PAGE:
+                continue
+            self.tables[slot, blk] = TRASH_PAGE
+            self.owned[slot].remove(page)
+            freed.append(page)
+        if freed:
+            self.allocator.release(freed)
+            self.retract_count += len(freed)
+            self.dirty = True
+        return len(freed)
+
     def release(self, slot: int):
         """Free every page a slot owns and point its table at trash."""
         if self.owned[slot]:
@@ -223,9 +269,11 @@ class PagedCacheManager:
             num_pages=a.num_pages, page_size=self.page_size,
             used_pages=a.used, free_pages=a.free,
             peak_used_pages=a.peak_used,
+            peak_tokens=a.peak_used * self.page_size,
             utilization=a.utilization(),
             peak_utilization=a.peak_used / a.usable,
-            allocs=a.alloc_count, frees=a.free_count)
+            allocs=a.alloc_count, frees=a.free_count,
+            retracts=self.retract_count)
 
 
 # ---------------------------------------------------------------------------
@@ -267,6 +315,34 @@ def scatter_prefill(pages: Dict[str, jnp.ndarray],
         src = src.reshape(l, b * nb, ps, h, d)
         out[name] = pool.at[:, flat_idx].set(src.astype(pool.dtype))
     return out
+
+
+def write_slot(cache, pcache, slot: int):
+    """Copy a batch-1 prefilled cache into slot ``slot`` of a dense pool.
+
+    Every cache leaf has the batch dim at position 1 (layer-stacked
+    leaves).  Shared by the engine's dense cache and the speculative
+    decoder's draft cache — both are slot pools fed by prefill.
+    """
+    def one(pool, single):
+        return jax.lax.dynamic_update_slice_in_dim(
+            pool, single.astype(pool.dtype), slot, axis=1)
+
+    return jax.tree.map(one, cache, pcache)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def write_slots(cache, pcache, slot_idx: jnp.ndarray):
+    """Scatter a k-row prefilled cache into k pool slots (donated pool).
+
+    slot_idx is traced, not static: free-slot combinations vary while
+    serving, and a compile per combination would litter the jit cache —
+    one executable per (k, shapes) handles them all.
+    """
+    def one(pool, batch):
+        return pool.at[:, slot_idx].set(batch.astype(pool.dtype))
+
+    return jax.tree.map(one, cache, pcache)
 
 
 @functools.partial(jax.jit, static_argnames=("page_size",))

@@ -1,0 +1,186 @@
+"""Speculative decoding: draft-model propose + fused k-token verify.
+
+The paper's HW-vs-SW trade-off applied to multi-token decode.  Single-token
+serving pays one dispatch per token; that per-dispatch overhead dominates
+small-model serving (ROADMAP "Speculative / multi-token decode").  Here a
+cheap *draft* model proposes k tokens, and the target model scores the whole
+k-window in ONE fused dispatch against the paged KV cache — the HW path
+(``kernels/verify_attention``: block-table scalar prefetch, causal masking
+within the window, online softmax in VMEM) versus the chunked ``jnp.take``
+verification loop as the measurable SW baseline
+(``models.attention.paged_verify_attention(backend='jnp')``).
+
+Acceptance is longest-matching-prefix against the target's own sampled
+tokens (the greedy shortcut of rejection sampling, generalized):
+
+  the target token at position p is sampled with the engine's
+  ``(uid, p)``-derived key — from logits conditioned only on tokens at
+  positions < p, so the draft window cannot perturb it.  A draft token is
+  accepted iff it *equals* that sample; the first mismatch is replaced by
+  the target's sample and the step ends.  By induction the committed
+  stream is bit-identical to non-speculative decode at ANY temperature
+  (greedy included: temperature 0 reduces the sample to argmax) — the
+  draft only controls how many tokens each dispatch commits, never their
+  values.
+
+Two draft flavours (``resolve_draft``):
+
+  self-speculation   a truncated-layer prefix of the target: the first N
+                     stacked layers plus the target's own final norm and
+                     LM head — zero extra parameters, the draft params
+                     alias the target's.
+  independent draft  any (token-only) registry architecture at reduced
+                     shapes with its own freshly initialized parameters.
+
+The draft keeps a dense slot cache (it is small; paging buys nothing) and
+is prefetched at admission alongside the target prefill.  Draft quality
+affects only the acceptance rate — a bad draft degrades speculative
+decoding to ~1 token/dispatch, never to wrong output.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# families whose prefill consumes tokens only — anything needing frontend
+# embeddings (audio frames / vision patches) cannot draft for a text target
+_DRAFT_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+
+
+def make_self_draft(model, params, n_layers: int) -> Tuple[object, dict]:
+    """Self-speculation draft: the target's first ``n_layers`` layers.
+
+    Returns ``(draft_model, draft_params)``.  Embed, final norm, and LM
+    head are shared by reference with the target; the stacked layer
+    leaves are *sliced* — a device copy of the first ``n_layers`` rows
+    (~``n_layers / n_total`` of the layer weights), since XLA buffers
+    cannot alias sub-ranges.  No training: draft quality is whatever the
+    truncated forward pass gives.
+    """
+    from repro.models.lm import Model
+
+    cfg = model.cfg
+    if not 1 <= n_layers <= cfg.n_layers:
+        raise ValueError(f"self-draft depth {n_layers} outside "
+                         f"[1, {cfg.n_layers}]")
+    if cfg.family in ("hybrid",):
+        raise ValueError("self-draft cannot truncate the hybrid family "
+                         "(layer groups share one attention block)")
+    draft_cfg = dataclasses.replace(cfg, n_layers=n_layers,
+                                    name=f"{cfg.name}-draft{n_layers}")
+    draft_model = Model(draft_cfg, wf=model.wf, remat=False,
+                        param_dtype=model.param_dtype,
+                        compute_dtype=model.compute_dtype,
+                        decode_backend=model.decode_backend,
+                        attn_backend=model.attn_backend)
+    draft_params = dict(params)
+    draft_params["layers"] = jax.tree.map(lambda a: a[:n_layers],
+                                          params["layers"])
+    return draft_model, draft_params
+
+
+def resolve_draft(model, params, draft, *, seed: int = 0):
+    """Draft spec -> ``(draft_model, draft_params)``.
+
+    draft: ``None`` / ``'self'`` (half-depth self-speculation),
+    ``'self:N'`` (N-layer prefix), an architecture name from the registry
+    (independent reduced-shape draft, fresh params), or an explicit
+    ``(draft_model, draft_params)`` pair passed through unchanged.
+    """
+    if isinstance(draft, tuple):
+        return draft
+    if draft is None or draft == "self":
+        return make_self_draft(model, params,
+                               max(1, model.cfg.n_layers // 2))
+    if isinstance(draft, str) and draft.startswith("self:"):
+        return make_self_draft(model, params, int(draft.split(":", 1)[1]))
+    from repro.configs.registry import reduced_config
+    from repro.models.lm import Model
+
+    cfg = reduced_config(draft)
+    if cfg.family not in _DRAFT_FAMILIES:
+        raise ValueError(f"draft arch {draft!r} (family {cfg.family}) "
+                         "needs frontend embeddings and cannot draft for "
+                         "a token-only target")
+    if cfg.vocab != model.cfg.vocab:
+        # proposals must live in the target's vocabulary
+        cfg = dataclasses.replace(cfg, vocab=model.cfg.vocab)
+    draft_model = Model(cfg, compute_dtype=model.compute_dtype,
+                        decode_backend=model.decode_backend,
+                        attn_backend=model.attn_backend)
+    draft_params = draft_model.init(jax.random.PRNGKey(seed))
+    return draft_model, draft_params
+
+
+def build_spec_step(model, draft_model, sample_at, *, max_seq: int,
+                    spec_k: int, verify_backend=None):
+    """Compile-ready propose+verify+accept step (one dispatch per window).
+
+    Returned callable (jitted, cache/draft-cache/pos/remaining donated):
+
+      (params, draft_params, pool, draft_cache, block_tables, tok, pos,
+       remaining, uids, spec_mask, attend_len) ->
+      (pool, draft_cache, targets (B, T), commit (B,), tok, pos,
+       remaining, done)
+
+    The draft's T-1 propose steps, the fused T-token verify, the per-
+    position target sampling, and the longest-matching-prefix accept all
+    live in ONE jitted dispatch, so a spec step costs one host round trip
+    and one launch for up to T committed tokens — the k-for-1 dispatch
+    amortization.  ``spec_mask`` rows that are False commit exactly one
+    token (the target sample), which is how non-speculative requests ride
+    the same batch; their window writes are overwritten before they are
+    ever attended, exactly like a rejected draft tail.
+    """
+    t_window = spec_k
+
+    def spec_step_fn(params, draft_params, pool, draft_cache, block_tables,
+                     tok, pos, remaining, uids, spec_mask, attend_len):
+        # ---- propose: T-1 draft decode steps, sampled with the SAME
+        # (uid, position) keys the target uses — a well-matched draft then
+        # reproduces the target's sample and the whole window is accepted
+        window = [tok]
+        dtok = tok
+        for i in range(t_window - 1):
+            dlogits, draft_cache = draft_model.decode_step(
+                draft_params, draft_cache, dtok, pos + i, attend_len,
+                unroll=True)
+            dtok = sample_at(dlogits, pos + i + 1, uids)
+            window.append(dtok)
+        win = jnp.stack(window, axis=1)                        # (B, T)
+
+        # ---- verify: every window position scored in one dispatch; the
+        # window's K/V rows are written through the block tables first
+        cache = dict(pool, block_tables=block_tables)
+        logits, cache = model.decode_verify_step(
+            params, cache, win, pos, attend_len, verify_backend)
+        pool = {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]}
+
+        # ---- accept: target samples per position, longest matching prefix
+        targets = jnp.stack(
+            [sample_at(logits[:, i], pos + i + 1, uids)
+             for i in range(t_window)], axis=1)                # (B, T)
+        if t_window > 1:
+            match = (win[:, 1:] == targets[:, :-1]).astype(jnp.int32)
+            lead = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+        else:
+            lead = jnp.zeros(tok.shape, jnp.int32)
+        commit = jnp.where(spec_mask, lead + 1, 1)
+        # never overrun the token budget or the position cap (finished
+        # slots coast at commit=1, exactly like the non-spec step)
+        commit = jnp.minimum(commit, jnp.maximum(remaining, 1))
+        commit = jnp.maximum(jnp.minimum(commit, max_seq - 1 - pos), 1)
+        tok = jnp.take_along_axis(targets, (commit - 1)[:, None],
+                                  axis=1)[:, 0]
+        pos = pos + commit
+        remaining = remaining - commit
+        done = (remaining <= 0) | (pos >= max_seq - 1)
+        return (pool, draft_cache, targets, commit, tok, pos, remaining,
+                done)
+
+    return jax.jit(spec_step_fn, static_argnums=(10,),
+                   donate_argnums=(2, 3, 6, 7))

@@ -216,11 +216,32 @@ def test_last_stats_populated():
         assert s["admit_to_first_s"] >= 0.0
         assert s["finished_s"] >= s["first_token_s"]
         assert s["tokens"] == len(results[uid])
+        # steady-state decode rate and e2e rate are separate: tok_s covers
+        # only the decode interval (admit->first-token is its own field)
         assert s["tok_s"] > 0.0
+        assert s["e2e_tok_s"] > 0.0
+        # e2e pays the admit->first-token wall-clock that tok_s excludes
+        decode_wall = (s["tokens"] - 1) / s["tok_s"]
+        e2e_wall = s["tokens"] / s["e2e_tok_s"]
+        assert abs(e2e_wall - (s["admit_to_first_s"] + decode_wall)) < 1e-6
     p = eng.last_pool_stats
     assert p.used_pages == 0            # everything released at the end
     assert p.allocs == p.frees > 0
     assert 0.0 < p.peak_utilization <= 1.0
+    # utilization high-water marks
+    assert p.peak_tokens == p.peak_used_pages * p.page_size
+    assert p.retracts == 0              # no speculation in this engine
+
+
+def test_one_token_request_has_zero_steady_rate():
+    """A request whose budget is exhausted by the admission sample has no
+    decode interval: steady tok_s is 0, e2e_tok_s still positive."""
+    eng = _engine(cache_layout="paged", page_size=8)
+    eng.serve([Request(uid=0, prompt=[1, 2, 3], max_new_tokens=1)])
+    s = eng.last_stats[0]
+    assert s["tokens"] == 1
+    assert s["tok_s"] == 0.0
+    assert s["e2e_tok_s"] > 0.0
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,427 @@
+"""Speculative decoding subsystem: fused k-token verify kernel parity,
+k-window decode_verify_step == sequential decode, engine-level greedy and
+temperature>0 bit-equivalence with non-speculative decode (both verify
+backends, mixed spec/non-spec batches, forced preemption + rejection),
+the allocator's write-then-retract pattern, and the bytes-proxy
+amortization."""
+
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import reduced_config
+from repro.models.attention import (
+    paged_decode_attention,
+    paged_verify_attention,
+)
+from repro.models.lm import Model
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.kv_cache import PagedCacheManager
+from repro.serve.spec_decode import make_self_draft, resolve_draft
+
+_CACHE = {}
+
+
+def _model(arch="qwen2-1.5b", damp=None):
+    key = (arch, damp)
+    if key not in _CACHE:
+        cfg = reduced_config(arch)
+        model = Model(cfg, compute_dtype=jnp.float32)
+        params = model.init(jax.random.PRNGKey(1))
+        if damp is not None:
+            params = dict(params, layers=jax.tree.map(
+                lambda a: a * damp, params["layers"]))
+        _CACHE[key] = (cfg, model, params)
+    return _CACHE[key]
+
+
+def _engine(arch="qwen2-1.5b", damp=None, **kw):
+    cfg, model, params = _model(arch, damp)
+    kw = {"max_seq": 48, "batch_slots": 2, "temperature": 0.0, "seed": 0,
+          **kw}
+    return ServeEngine(model, params, **kw)
+
+
+def _reqs(n, seed=3, plo=3, phi=12, mlo=2, mhi=9, arch="qwen2-1.5b"):
+    cfg, _, _ = _model(arch)
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        int(rng.integers(plo, phi))).tolist(),
+                    max_new_tokens=int(rng.integers(mlo, mhi)))
+            for i in range(n)]
+
+
+def _serve(engine, reqs):
+    return engine.serve(copy.deepcopy(reqs))
+
+
+# ---------------------------------------------------------------------------
+# kernel parity: fused verify vs oracle vs chunked-jnp SW baseline
+# ---------------------------------------------------------------------------
+
+def _rand_paged(seed=0, b=3, t=4, hq=4, hkv=2, d=64, p=9, ps=8, nb=5):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, t, hq, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(p, ps, hkv, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(p, ps, hkv, d)), jnp.float32)
+    bt = jnp.asarray(rng.integers(1, p, size=(b, nb)), jnp.int32)
+    pos = jnp.asarray(rng.integers(0, nb * ps - t, size=(b,)), jnp.int32)
+    return q, kp, vp, bt, pos
+
+
+def test_verify_kernel_matches_ref_and_jnp():
+    from repro.kernels.verify_attention.ops import paged_verify_attention_op
+    from repro.kernels.verify_attention.ref import paged_verify_attention_ref
+
+    q, kp, vp, bt, pos = _rand_paged()
+    ref = paged_verify_attention_ref(q, kp, vp, bt, pos)
+    kern = paged_verify_attention_op(q, kp, vp, bt, pos, interpret=True)
+    sw = paged_verify_attention(q, kp, vp, bt, pos, backend="jnp")
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sw), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_verify_window_of_one_is_decode():
+    """T=1 degenerates to single-token paged decode exactly."""
+    q, kp, vp, bt, pos = _rand_paged(seed=4, t=1)
+    for backend in ("kernel", "jnp"):
+        ver = paged_verify_attention(q, kp, vp, bt, pos, backend=backend)
+        dec = paged_decode_attention(q, kp, vp, bt, pos, backend=backend)
+        np.testing.assert_array_equal(np.asarray(ver), np.asarray(dec))
+
+
+def test_verify_causal_within_window():
+    """Row t must not see window rows > t: perturbing a later window
+    position's K/V leaves earlier rows' outputs unchanged."""
+    q, kp, vp, _, pos = _rand_paged(seed=7, t=4, nb=5, ps=8, p=16)
+    # unique physical pages per table entry: the clobber below must touch
+    # exactly one (row, block) mapping
+    rng = np.random.default_rng(7)
+    bt = jnp.asarray(1 + rng.permutation(15)[:15].reshape(3, 5), jnp.int32)
+    base = paged_verify_attention(q, kp, vp, bt, pos, backend="jnp")
+    # clobber the K/V rows at window offset 3 (position pos+3)
+    b = q.shape[0]
+    page = jnp.take_along_axis(bt, (pos[:, None] + 3) // 8, axis=1)[:, 0]
+    off = (pos + 3) % 8
+    kp2 = kp.at[page, off].set(99.0)
+    vp2 = vp.at[page, off].set(99.0)
+    pert = paged_verify_attention(q, kp2, vp2, bt, pos, backend="jnp")
+    np.testing.assert_array_equal(np.asarray(base[:, :3]),
+                                  np.asarray(pert[:, :3]))
+    assert not np.array_equal(np.asarray(base[:, 3]), np.asarray(pert[:, 3]))
+
+
+def test_verify_attend_len_bounds_table_walk():
+    q, kp, vp, bt, pos = _rand_paged(seed=9, nb=5, ps=8)
+    pos = jnp.minimum(pos, 8)            # live prefix within 2 blocks
+    full = paged_verify_attention(q, kp, vp, bt, pos, backend="jnp")
+    bounded = paged_verify_attention(q, kp, vp, bt, pos, attend_len=16,
+                                     backend="jnp")
+    np.testing.assert_allclose(np.asarray(full), np.asarray(bounded),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# model: k-window verify step == T sequential decode steps
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("t_window", [2, 4])
+def test_decode_verify_step_matches_sequential_decode(t_window):
+    cfg, model, params = _model()
+    slots, max_seq, ps = 2, 48, 8
+    num_pages = slots * (max_seq // ps) + 1
+    prompt_len = 7
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (slots, prompt_len)),
+                       jnp.int32)
+    _, pcache = model.prefill(params, {"tokens": toks}, prompt_len)
+
+    def fresh_cache():
+        from repro.serve.kv_cache import scatter_prefill
+
+        cache = model.init_cache(slots, max_seq, layout="paged",
+                                 page_size=ps, num_pages=num_pages)
+        mgr = PagedCacheManager(num_pages, ps, slots, max_seq)
+        for s in range(slots):
+            mgr.admit(s, prompt_len + t_window)
+        nb = -(-prompt_len // ps)
+        page_idx = jnp.asarray(np.stack(
+            [mgr.prefill_page_idx(s, nb) for s in range(slots)]))
+        pool = scatter_prefill(
+            {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]},
+            {"k": pcache["k"], "v": pcache["v"]}, page_idx)
+        return dict(pool, block_tables=jnp.asarray(mgr.tables))
+
+    window = jnp.asarray(rng.integers(0, cfg.vocab, (slots, t_window)),
+                         jnp.int32)
+    pos = jnp.full((slots,), prompt_len, jnp.int32)
+
+    ver_logits, _ = model.decode_verify_step(params, fresh_cache(), window,
+                                             pos, 32, "jnp")
+    cache = fresh_cache()
+    seq_logits = []
+    for i in range(t_window):
+        lg, cache = model.decode_step(params, cache, window[:, i],
+                                      pos + i, 32)
+        seq_logits.append(lg)
+    seq_logits = jnp.stack(seq_logits, axis=1)
+    np.testing.assert_allclose(np.asarray(ver_logits),
+                               np.asarray(seq_logits),
+                               rtol=2e-5, atol=2e-5)
+    assert np.array_equal(np.argmax(np.asarray(ver_logits), -1),
+                          np.argmax(np.asarray(seq_logits), -1))
+
+
+def test_decode_verify_step_rejects_dense_cache():
+    cfg, model, params = _model()
+    cache = model.init_cache(2, 32)
+    with pytest.raises(ValueError, match="paged"):
+        model.decode_verify_step(params, cache,
+                                 jnp.zeros((2, 2), jnp.int32),
+                                 jnp.zeros((2,), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# drafts
+# ---------------------------------------------------------------------------
+
+def test_self_draft_aliases_target_params():
+    cfg, model, params = _model()
+    dm, dp = make_self_draft(model, params, 2)
+    assert dm.cfg.n_layers == 2
+    assert dp["embed"] is params["embed"]
+    leaf = jax.tree.leaves(dp["layers"])[0]
+    assert leaf.shape[0] == 2
+    # full-depth draft proposes exactly the target's tokens
+    dm_full, dp_full = make_self_draft(model, params, cfg.n_layers)
+    x = jnp.asarray([[1, 2, 3]], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(dm_full.forward(dp_full, {"tokens": x})),
+        np.asarray(model.forward(params, {"tokens": x})))
+
+
+def test_resolve_draft_variants():
+    cfg, model, params = _model()
+    dm, _ = resolve_draft(model, params, None)
+    assert dm.cfg.n_layers == cfg.n_layers // 2
+    dm2, dp2 = resolve_draft(model, params, "qwen2-1.5b", seed=3)
+    assert dm2.cfg.vocab == cfg.vocab
+    assert jax.tree.leaves(dp2["layers"])[0] is not \
+        jax.tree.leaves(params["layers"])[0]
+    with pytest.raises(ValueError, match="frontend"):
+        resolve_draft(model, params, "whisper-small")
+    with pytest.raises(ValueError):
+        make_self_draft(model, params, cfg.n_layers + 1)
+
+
+# ---------------------------------------------------------------------------
+# engine: speculative == non-speculative, bit for bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("spec_k", [2, 4])
+def test_spec_greedy_matches_dense_nonspec(spec_k):
+    reqs = _reqs(5)
+    want = _serve(_engine(), reqs)
+    got = _serve(_engine(cache_layout="paged", page_size=8,
+                         spec_k=spec_k, draft="self:2"), reqs)
+    assert got == want
+
+
+def test_spec_kernel_backend_matches():
+    reqs = _reqs(4, seed=17)
+    want = _serve(_engine(), reqs)
+    got = _serve(_engine(cache_layout="paged", page_size=8, spec_k=2,
+                         draft="self:2", verify_backend="kernel"), reqs)
+    assert got == want
+
+
+def test_spec_high_acceptance_still_exact():
+    """Damped layers -> the draft usually matches; multi-token commits
+    must stay bit-identical (and actually commit > 1 token per step)."""
+    reqs = _reqs(4, seed=5, mlo=8, mhi=13)
+    want = _serve(_engine(damp=0.05, max_seq=64), reqs)
+    eng = _engine(damp=0.05, max_seq=64, cache_layout="paged", page_size=8,
+                  spec_k=4, draft="self:1")
+    got = _serve(eng, reqs)
+    assert got == want
+    assert any(s["accept_rate"] > 1.5 for s in eng.last_stats.values())
+
+
+def test_spec_temperature_matches_nonspec():
+    """Matched sampling: the target token at position p is sampled with
+    the (uid, p) key whatever the window shape, so temperature > 0
+    outputs are bit-identical to non-speculative decode too."""
+    reqs = _reqs(4, seed=11, mlo=5, mhi=9)
+    want = _serve(_engine(temperature=0.8, seed=7), reqs)
+    got = _serve(_engine(temperature=0.8, seed=7, cache_layout="paged",
+                         page_size=8, spec_k=4, draft="self:2"), reqs)
+    assert got == want
+
+
+def test_mixed_spec_and_nonspec_batch():
+    reqs = _reqs(5, seed=13)
+    for i, r in enumerate(reqs):
+        r.spec = i % 2 == 0
+    want = _serve(_engine(), reqs)
+    eng = _engine(cache_layout="paged", page_size=8, spec_k=2,
+                  draft="self:2")
+    got = _serve(eng, reqs)
+    assert got == want
+    # non-spec requests commit one token per window => accept_rate == 1
+    for r in reqs:
+        acc = eng.last_stats[r.uid]["accept_rate"]
+        if not r.spec:
+            assert acc == 1.0
+
+
+def test_spec_forced_preempt_and_rejection_matches():
+    """A pool too small for two growing sequences forces preemption while
+    speculative windows are being written and retracted; outputs must
+    still be bit-identical to dense non-speculative decode."""
+    reqs = [Request(uid=0, prompt=list(range(1, 9)), max_new_tokens=12),
+            Request(uid=1, prompt=list(range(9, 17)), max_new_tokens=12)]
+    want = _serve(_engine(), reqs)
+    eng = _engine(cache_layout="paged", page_size=8, num_pages=5,
+                  spec_k=2, draft="self:2")
+    got = _serve(eng, reqs)
+    assert got == want
+    assert eng.preemptions >= 1
+
+
+def test_spec_write_then_retract_accounting():
+    """Rejection rolls back window pages by table edit: the pool ends the
+    serve drained (used == 0, allocs == frees incl. retracted pages)."""
+    reqs = _reqs(4, seed=23, mlo=6, mhi=12)
+    eng = _engine(max_seq=64, cache_layout="paged", page_size=4,
+                  spec_k=4, draft="self:2")
+    results = _serve(eng, reqs)
+    assert {r.uid for r in reqs} == set(results)
+    for r in reqs:
+        assert len(results[r.uid]) == r.max_new_tokens
+    p = eng.last_pool_stats
+    assert p.used_pages == 0
+    assert p.allocs == p.frees > 0
+    assert p.retracts > 0          # page_size 4 < k guarantees spillover
+    assert p.peak_tokens == p.peak_used_pages * 4
+
+
+def test_spec_requires_paged_fused():
+    with pytest.raises(ValueError, match="paged"):
+        _engine(spec_k=2)
+    with pytest.raises(ValueError, match="spec_k"):
+        _engine(cache_layout="paged", spec_k=0)
+
+
+def test_spec_acceptance_stats_populated():
+    reqs = _reqs(3, seed=29)
+    eng = _engine(cache_layout="paged", page_size=8, spec_k=2,
+                  draft="self:2")
+    results = _serve(eng, reqs)
+    for uid, s in eng.last_stats.items():
+        assert s["spec_tokens"] == len(results[uid]) - 1  # first: prefill
+        assert 1.0 <= s["accept_rate"] <= 2.0
+        assert s["spec_steps"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# allocator: ensure_span / retract_above unit behavior
+# ---------------------------------------------------------------------------
+
+def test_manager_ensure_span_and_retract():
+    mgr = PagedCacheManager(num_pages=8, page_size=4, slots=2, max_seq=32)
+    assert mgr.admit(0, 5) is not None            # blocks 0,1 (pos 0..7)
+    assert mgr.ensure_span(0, 5, 12)              # blocks 1,2,3
+    assert mgr.allocator.used == 4
+    # retract everything above 6 committed tokens -> keep blocks 0,1
+    assert mgr.retract_above(0, 6) == 2
+    assert mgr.allocator.used == 2
+    assert mgr.tables[0, 2] == 0 and mgr.tables[0, 3] == 0
+    assert mgr.dirty
+    # idempotent; stats carry the retract count
+    assert mgr.retract_above(0, 6) == 0
+    assert mgr.stats().retracts == 2
+    # span entirely past the table cap (positions >= max_seq) needs no
+    # pages — those writes land in the trash
+    assert mgr.ensure_span(0, 32, 40)
+    assert mgr.allocator.used == 2
+    # exhaustion: only 7 usable pages
+    assert mgr.admit(1, 20) is not None           # 5 blocks
+    assert not mgr.ensure_span(0, 8, 16)          # needs 3, has 0
+
+
+# ---------------------------------------------------------------------------
+# roofline: the k-for-1 dispatch amortization is visible in the proxy
+# ---------------------------------------------------------------------------
+
+def test_verify_bytes_amortize_with_k():
+    from repro.roofline.jaxpr_cost import trace_cost
+
+    cfg, model, _ = _model()
+    slots, max_seq, ps = 2, 64, 8
+    num_pages = slots * (max_seq // ps) + 1
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    cache = jax.eval_shape(lambda: model.init_cache(
+        slots, max_seq, layout="paged", page_size=ps, num_pages=num_pages))
+    per_tok = {}
+    for t in (1, 4):
+        tok = jax.ShapeDtypeStruct((slots, t), jnp.int32)
+        pos = jax.ShapeDtypeStruct((slots,), jnp.int32)
+
+        def step(params, cache, tok, pos):
+            return model.decode_verify_step(params, cache, tok, pos, 32,
+                                            "kernel")
+
+        per_tok[t] = trace_cost(step, pshapes, cache, tok, pos)[
+            "bytes_total"] / t
+    # one k=4 dispatch moves far less than 4 single-token dispatches
+    assert per_tok[4] < 0.5 * per_tok[1]
+
+
+# ---------------------------------------------------------------------------
+# property test: random schedules + preemption + rejection == unbatched
+# non-speculative decode (hypothesis)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    @settings(max_examples=5, deadline=None)
+    @given(data=st.data())
+    def test_property_spec_equals_unbatched_nonspec(data):
+        cfg, _, _ = _model()
+        n = data.draw(st.integers(2, 5), label="n_requests")
+        rng_seed = data.draw(st.integers(0, 2 ** 16), label="prompt_seed")
+        rng = np.random.default_rng(rng_seed)
+        reqs = []
+        for i in range(n):
+            plen = data.draw(st.integers(1, 16), label=f"plen{i}")
+            mnew = data.draw(st.integers(1, 9), label=f"mnew{i}")
+            reqs.append(Request(
+                uid=i, prompt=rng.integers(0, cfg.vocab, plen).tolist(),
+                max_new_tokens=mnew))
+        order = data.draw(st.permutations(list(range(n))), label="order")
+        slots = data.draw(st.integers(1, 3), label="slots")
+        spec_k = data.draw(st.sampled_from([2, 3, 4]), label="spec_k")
+        # pool from barely-fits (forcing preemption mid-window) upward;
+        # the worst case charges the window's spec_k - 1 overhang
+        longest = max(min(len(r.prompt) + r.max_new_tokens + spec_k - 2, 48)
+                      for r in reqs)
+        min_pages = -(-longest // 8)
+        num_pages = data.draw(st.integers(min_pages + 1, 15), label="pages")
+        # the oracle: unbatched (slots=1) dense non-speculative decode
+        want = _serve(_engine(batch_slots=1), reqs)
+        got = _serve(_engine(batch_slots=slots, cache_layout="paged",
+                             page_size=8, num_pages=num_pages,
+                             spec_k=spec_k, draft="self:2"),
+                     [reqs[i] for i in order])
+        assert got == want
