@@ -69,10 +69,13 @@ def main():
         from benchmarks.table4_overhead import main as table4
         table4()
     if args.section in ("all", "serve"):
-        # covers both cache layouts: seed-vs-fused (dense) and the
-        # dense-vs-paged capacity section run in one invocation
+        # covers both cache layouts: seed-vs-fused (dense), dense-vs-paged
+        # capacity, and the page-size sweep; the shared-prefix on/off
+        # parity gate is its own CI step (serve_decode --section
+        # shared_prefix) so the matrix isn't served twice per run
         from benchmarks.serve_decode import main as serve_decode
-        serve_decode(smoke + jdir("serve_decode"))
+        serve_decode(smoke + jdir("serve_decode")
+                     + ["--section", "fastpath,layouts,page_sweep"])
     if args.section in ("all", "spec"):
         # speculative decoding: accepted-tokens/s vs k, both verify
         # backends, greedy-parity gate (non-zero exit on divergence)

@@ -329,60 +329,206 @@ def run_page_sweep(smoke: bool = False, trials: int = 3) -> List[Dict]:
     return rows
 
 
+def run_shared_prefix(smoke: bool = False, trials: int = 3) -> List[Dict]:
+    """Prefix-sharing workload: N requests x one common system prompt.
+
+    Every request's prompt is ``prefix_len`` shared tokens plus a short
+    private suffix — the serving shape prefix caching targets (system
+    prompts, few-shot preambles).  With sharing enabled the prefix's
+    pages are allocated once and mapped into every slot's block table
+    (refcounted, copy-on-write at the boundary), so physical allocation
+    is bounded by prefix_pages + N * suffix_pages instead of
+    N * total_pages, admission prefills only the suffix
+    (admit-to-first-token drops accordingly), and the free-pool gate
+    charges only private pages.  Greedy outputs must stay bit-identical
+    to sharing-disabled paged serving — any break exits non-zero (the CI
+    parity gate).
+    """
+    arch = "qwen2-1.5b"
+    if smoke:
+        slots, max_seq, n_req, max_new = 2, 128, 6, 10
+        prefix_len, suf_lo, suf_hi, page_size = 32, 4, 12, 16
+        trials = 1
+    else:
+        slots, max_seq, n_req, max_new = 4, 512, 12, 48
+        prefix_len, suf_lo, suf_hi, page_size = 192, 16, 48, 32
+    cfg = reduced_config(arch)
+    if not smoke:
+        cfg = dataclasses.replace(cfg, max_seq=max_seq)
+    model = Model(cfg, compute_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(0, cfg.vocab, prefix_len).tolist()
+    reqs = [Request(uid=i,
+                    prompt=prefix + rng.integers(
+                        0, cfg.vocab, int(rng.integers(suf_lo, suf_hi))
+                    ).tolist(),
+                    max_new_tokens=max_new)
+            for i in range(n_req)]
+    engines = {
+        False: ServeEngine(model, params, max_seq=max_seq,
+                           batch_slots=slots, temperature=0.0, seed=0,
+                           cache_layout="paged", page_size=page_size),
+        True: ServeEngine(model, params, max_seq=max_seq,
+                          batch_slots=slots, temperature=0.0, seed=0,
+                          cache_layout="paged", page_size=page_size,
+                          prefix_sharing=True),
+    }
+    outputs, pool, best = {}, {}, {}
+    for sharing, e in engines.items():
+        outputs[sharing] = e.serve([dataclasses.replace(r, generated=None)
+                                    for r in reqs])  # warm jit caches
+        pool[sharing] = e.last_pool_stats
+    if outputs[True] != outputs[False]:
+        raise SystemExit("GREEDY PARITY BROKEN: prefix sharing changed "
+                         "outputs vs sharing-disabled paged serving")
+    for _ in range(trials):
+        for sharing, e in engines.items():
+            s = _serve_once(e, reqs)
+            if sharing not in best or s["tok_s"] > best[sharing]["tok_s"]:
+                best[sharing] = s
+    prefix_pages = prefix_len // page_size
+    suffix_pages = sum(
+        cdiv(min(len(r.prompt) + r.max_new_tokens - 1, max_seq), page_size)
+        - prefix_pages for r in reqs)
+    rows = []
+    for sharing, e in engines.items():
+        p = pool[sharing]
+        stats = e.last_stats
+        rows.append({
+            "section": "shared_prefix",
+            "shape": f"n={n_req} prefix={prefix_len} page={page_size}",
+            "engine": "shared" if sharing else "unshared",
+            "tok_s": best[sharing]["tok_s"],
+            "tokens": best[sharing]["tokens"],
+            "seconds": best[sharing]["seconds"],
+            "pages_allocated": p.allocs,
+            "pages_per_request": p.allocs / n_req,
+            "peak_used_pages": p.peak_used_pages,
+            "page_bound": prefix_pages + suffix_pages,
+            "sharing_ratio": p.sharing_ratio,
+            "cached_prompt_tokens": p.cached_prefix_tokens,
+            "cow_forks": p.cow_forks,
+            "evictions": p.evictions,
+            "admit_to_first_ms": 1e3 * float(np.mean(
+                [s["admit_to_first_s"] for s in stats.values()])),
+            "greedy_identical": True,
+        })
+    u, s = rows[0], rows[1]
+    rows.append({
+        "section": "shared_prefix", "engine": "SHARED/UNSHARED",
+        "tok_s": s["tok_s"] / u["tok_s"],
+        "pages_per_request": s["pages_per_request"]
+        / u["pages_per_request"],
+        "admit_to_first_ms": s["admit_to_first_ms"]
+        / max(u["admit_to_first_ms"], 1e-9),
+    })
+    return rows
+
+
+_SECTIONS = ("fastpath", "layouts", "page_sweep", "shared_prefix")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes for CI (no perf claims)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the result rows as JSON")
+    ap.add_argument("--section", default="all",
+                    help="comma-separated subset of "
+                         f"{', '.join(_SECTIONS)} (default: all)")
     args = ap.parse_args(argv)
-    rows = run(smoke=args.smoke)
-    for r in rows:
-        r.setdefault("section", "seed_vs_fused")
-    shape = "smoke" if args.smoke else "slots=4 max_seq=1024"
-    print(f"\n== Serve decode: seed engine vs fused fast path ({shape}) ==")
-    print(f"{'engine':10s} {'tok/s':>8s} {'tokens':>7s} {'wall_s':>7s} "
-          f"{'step_MB':>8s} {'copy_MB/tok':>12s} {'attend':>7s} {'donated':>8s}")
-    for r in rows:
-        if r["engine"] == "SPEEDUP":
-            print(f"{'SPEEDUP':10s} {r['tok_s']:7.2f}x {'':7s} {'':7s} "
-                  f"{r['step_bytes']:7.2f}x")
-        else:
-            print(f"{r['engine']:10s} {r['tok_s']:8.1f} {r['tokens']:7d} "
-                  f"{r['seconds']:7.2f} {r['step_bytes'] / 1e6:8.2f} "
-                  f"{r['copy_bytes_per_tok'] / 1e6:12.2f} "
-                  f"{r['attend_len']:7d} {str(r['donated']):>8s}")
+    sections = (set(_SECTIONS) if args.section == "all"
+                else set(args.section.split(",")))
+    unknown = sections - set(_SECTIONS)
+    if unknown:
+        ap.error(f"unknown section(s) {sorted(unknown)}; "
+                 f"pick from {_SECTIONS}")
+    rows: List[Dict] = []
+    if "fastpath" in sections:
+        frows = run(smoke=args.smoke)
+        for r in frows:
+            r.setdefault("section", "seed_vs_fused")
+        shape = "smoke" if args.smoke else "slots=4 max_seq=1024"
+        print(f"\n== Serve decode: seed engine vs fused fast path "
+              f"({shape}) ==")
+        print(f"{'engine':10s} {'tok/s':>8s} {'tokens':>7s} {'wall_s':>7s} "
+              f"{'step_MB':>8s} {'copy_MB/tok':>12s} {'attend':>7s} "
+              f"{'donated':>8s}")
+        for r in frows:
+            if r["engine"] == "SPEEDUP":
+                print(f"{'SPEEDUP':10s} {r['tok_s']:7.2f}x {'':7s} {'':7s} "
+                      f"{r['step_bytes']:7.2f}x")
+            else:
+                print(f"{r['engine']:10s} {r['tok_s']:8.1f} "
+                      f"{r['tokens']:7d} "
+                      f"{r['seconds']:7.2f} {r['step_bytes'] / 1e6:8.2f} "
+                      f"{r['copy_bytes_per_tok'] / 1e6:12.2f} "
+                      f"{r['attend_len']:7d} {str(r['donated']):>8s}")
+        rows += frows
 
-    lrows = run_layouts(smoke=args.smoke)
-    print(f"\n== Cache layouts: dense slot pool vs paged block pool "
-          f"({lrows[0]['shape']}; request KV footprint "
-          f"{lrows[0]['footprint_over_capacity']:.1f}x dense capacity) ==")
-    print(f"{'layout':12s} {'tok/s':>8s} {'tokens':>7s} {'pool_MB':>8s} "
-          f"{'pool_tok':>9s} {'step_MB':>8s} {'done':>5s} {'preempt':>8s} "
-          f"{'peak_util':>10s} {'greedy==':>9s}")
-    for r in lrows:
-        if r["engine"] == "PAGED/DENSE":
-            print(f"{'PAGED/DENSE':12s} {r['tok_s']:7.2f}x {'':7s} "
-                  f"{r['pool_mb']:7.2f}x {'':9s} {r['step_bytes']:7.2f}x")
-        else:
-            print(f"{r['engine']:12s} {r['tok_s']:8.1f} {r['tokens']:7d} "
-                  f"{r['pool_mb']:8.2f} {r['pool_tokens']:9d} "
-                  f"{r['step_bytes'] / 1e6:8.2f} {r['completed']:5d} "
-                  f"{r.get('preemptions', 0):8d} "
-                  f"{r.get('peak_util', 0.0):10.2f} "
+    if "layouts" in sections:
+        lrows = run_layouts(smoke=args.smoke)
+        print(f"\n== Cache layouts: dense slot pool vs paged block pool "
+              f"({lrows[0]['shape']}; request KV footprint "
+              f"{lrows[0]['footprint_over_capacity']:.1f}x dense "
+              f"capacity) ==")
+        print(f"{'layout':12s} {'tok/s':>8s} {'tokens':>7s} {'pool_MB':>8s} "
+              f"{'pool_tok':>9s} {'step_MB':>8s} {'done':>5s} "
+              f"{'preempt':>8s} {'peak_util':>10s} {'greedy==':>9s}")
+        for r in lrows:
+            if r["engine"] == "PAGED/DENSE":
+                print(f"{'PAGED/DENSE':12s} {r['tok_s']:7.2f}x {'':7s} "
+                      f"{r['pool_mb']:7.2f}x {'':9s} "
+                      f"{r['step_bytes']:7.2f}x")
+            else:
+                print(f"{r['engine']:12s} {r['tok_s']:8.1f} "
+                      f"{r['tokens']:7d} "
+                      f"{r['pool_mb']:8.2f} {r['pool_tokens']:9d} "
+                      f"{r['step_bytes'] / 1e6:8.2f} {r['completed']:5d} "
+                      f"{r.get('preemptions', 0):8d} "
+                      f"{r.get('peak_util', 0.0):10.2f} "
+                      f"{str(r['greedy_identical']):>9s}")
+        rows += lrows
+
+    if "page_sweep" in sections:
+        srows = run_page_sweep(smoke=args.smoke)
+        print("\n== Page-size sweep: indirection overhead vs dense "
+              "(page_size 0 = dense baseline) ==")
+        print(f"{'page_size':>9s} {'tok/s':>8s} {'vs dense':>9s} "
+              f"{'step_MB':>8s} {'indirection':>12s} {'greedy==':>9s}")
+        for r in srows:
+            print(f"{r['page_size']:9d} {r['tok_s']:8.1f} "
+                  f"{r['tok_s_vs_dense']:8.2f}x "
+                  f"{r['step_bytes'] / 1e6:8.2f} "
+                  f"{r['indirection_ratio']:11.2f}x "
                   f"{str(r['greedy_identical']):>9s}")
-    srows = run_page_sweep(smoke=args.smoke)
-    print("\n== Page-size sweep: indirection overhead vs dense "
-          "(page_size 0 = dense baseline) ==")
-    print(f"{'page_size':>9s} {'tok/s':>8s} {'vs dense':>9s} "
-          f"{'step_MB':>8s} {'indirection':>12s} {'greedy==':>9s}")
-    for r in srows:
-        print(f"{r['page_size']:9d} {r['tok_s']:8.1f} "
-              f"{r['tok_s_vs_dense']:8.2f}x {r['step_bytes'] / 1e6:8.2f} "
-              f"{r['indirection_ratio']:11.2f}x "
-              f"{str(r['greedy_identical']):>9s}")
+        rows += srows
 
-    rows = rows + lrows + srows
+    if "shared_prefix" in sections:
+        prows = run_shared_prefix(smoke=args.smoke)
+        print(f"\n== Shared-prefix workload: N requests x one system "
+              f"prompt ({prows[0]['shape']}; greedy-parity gated) ==")
+        print(f"{'engine':16s} {'tok/s':>8s} {'pages/req':>10s} "
+              f"{'peak_pages':>11s} {'bound':>6s} {'share':>6s} "
+              f"{'cached_tok':>11s} {'CoW':>4s} {'admit->first':>13s}")
+        for r in prows:
+            if r["engine"] == "SHARED/UNSHARED":
+                print(f"{'SHARED/UNSHARED':16s} {r['tok_s']:7.2f}x "
+                      f"{r['pages_per_request']:9.2f}x {'':11s} {'':6s} "
+                      f"{'':6s} {'':11s} {'':4s} "
+                      f"{r['admit_to_first_ms']:12.2f}x")
+            else:
+                print(f"{r['engine']:16s} {r['tok_s']:8.1f} "
+                      f"{r['pages_per_request']:10.1f} "
+                      f"{r['peak_used_pages']:11d} {r['page_bound']:6d} "
+                      f"{r['sharing_ratio']:6.2f} "
+                      f"{r['cached_prompt_tokens']:11d} "
+                      f"{r['cow_forks']:4d} "
+                      f"{r['admit_to_first_ms']:10.1f} ms")
+        rows += prows
+
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         with open(args.json, "w") as f:

@@ -9,6 +9,11 @@ matches dense capacity, a smaller one exercises preempt-and-requeue).
 (``--draft self:N`` for an N-layer self-speculative prefix or an arch
 name for an independent draft; ``--verify-backend`` picks the fused
 Pallas verify kernel or the chunked-jnp SW baseline).
+``--prefix-sharing`` turns on prompt-prefix sharing: requests whose
+prompts start with the same ``--shared-prefix`` tokens map the same
+physical pages (refcounted, copy-on-write) and prefill only their
+suffix — the per-request ``cached`` column shows how many prompt
+tokens came from the radix index instead of compute.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
       --requests 6 --prompt-len 16 --max-new 12
@@ -16,6 +21,8 @@ Pallas verify kernel or the chunked-jnp SW baseline).
       --cache-layout paged --page-size 16 --num-pages 24
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
       --cache-layout paged --spec-k 4 --draft self:2
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
+      --cache-layout paged --prefix-sharing --shared-prefix 32
 """
 
 from __future__ import annotations
@@ -59,6 +66,16 @@ def main():
     ap.add_argument("--num-pages", type=int, default=None,
                     help="pool pages incl. the trash page (default: "
                          "dense-capacity parity)")
+    ap.add_argument("--prefix-sharing", default=False,
+                    action=argparse.BooleanOptionalAction,
+                    help="share page-aligned prompt prefixes: identical "
+                         "prefixes map the same refcounted physical pages "
+                         "(copy-on-write), prefill computes only the "
+                         "suffix (requires --cache-layout paged)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="make all request prompts share their first N "
+                         "tokens (the prefix-sharing demo workload; 0 = "
+                         "fully random prompts)")
     ap.add_argument("--spec-k", type=int, default=1,
                     help="speculative window: draft proposes k-1 tokens, "
                          "the target verifies all k in one dispatch "
@@ -95,21 +112,26 @@ def main():
                          cache_layout=args.cache_layout,
                          page_size=args.page_size,
                          num_pages=args.num_pages,
+                         prefix_sharing=args.prefix_sharing,
                          spec_k=args.spec_k, draft=args.draft,
                          verify_backend=None if args.verify_backend == "auto"
                          else args.verify_backend)
 
     rng = np.random.default_rng(args.seed)
+    shared = rng.integers(
+        0, cfg.vocab, min(args.shared_prefix, args.prompt_len)).tolist()
     reqs = [Request(uid=i,
-                    prompt=rng.integers(0, cfg.vocab,
-                                        args.prompt_len).tolist(),
+                    prompt=shared + rng.integers(
+                        0, cfg.vocab,
+                        args.prompt_len - len(shared)).tolist(),
                     max_new_tokens=args.max_new)
             for i in range(args.requests)]
     t0 = time.perf_counter()
     results = engine.serve(reqs)
     dt = time.perf_counter() - t0
     n_tok = sum(len(v) for v in results.values())
-    print(f"{'req':>4s} {'tokens':>7s} {'admit->first(ms)':>17s} "
+    print(f"{'req':>4s} {'tokens':>7s} {'cached':>7s} "
+          f"{'admit->first(ms)':>17s} "
           f"{'decode tok/s':>13s} {'e2e tok/s':>10s} {'accept':>7s} "
           f"{'preempts':>9s}")
     for uid in sorted(results):
@@ -117,6 +139,7 @@ def main():
         acc = (f"{s['accept_rate']:7.2f}" if "accept_rate" in s
                else f"{'—':>7s}")
         print(f"{uid:4d} {len(results[uid]):7d} "
+              f"{int(s.get('cached_prefix_tokens', 0)):7d} "
               f"{1e3 * s['admit_to_first_s']:17.1f} {s['tok_s']:13.1f} "
               f"{s['e2e_tok_s']:10.1f} {acc} "
               f"{int(s['preemptions']):9d}")
@@ -131,6 +154,14 @@ def main():
               f"({100 * p.peak_utilization:.0f}% util high-water), "
               f"{p.allocs} allocs / {p.frees} frees / {p.retracts} "
               f"retracts, {engine.preemptions} preemptions")
+        if args.prefix_sharing:
+            print(f"sharing: {p.peak_logical_pages} logical pages peak vs "
+                  f"{p.peak_used_pages} physical "
+                  f"({p.sharing_ratio:.2f}x high-water), "
+                  f"{p.cached_prefix_tokens} prompt tokens served from "
+                  f"cache, {p.shares} shares / {p.cow_forks} CoW forks / "
+                  f"{p.evictions} evictions, {p.index_pages} pages left "
+                  f"in the index")
     for uid in sorted(results):
         print(f"req {uid}: {results[uid]}")
 

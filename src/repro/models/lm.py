@@ -697,12 +697,16 @@ class Model:
         return self._gqa_verify_paged(params, cache, x, pos, attend_len,
                                       verify_backend)
 
-    def _gqa_verify_paged(self, params, cache, x, pos,
-                          attend_len: Optional[int],
-                          verify_backend: Optional[str]):
-        """Window twin of :meth:`_gqa_decode_paged`: per layer the T fresh
-        K/V rows scatter at table-resolved ``(page, offset)`` pairs, then
-        the verify attention masks each query row at its own position."""
+    def _paged_window(self, params, cache, x, pos,
+                      attend_len: Optional[int],
+                      verify_backend: Optional[str]):
+        """Shared T-token window body over the paged cache: per layer the
+        T fresh K/V rows scatter at table-resolved ``(page, offset)``
+        pairs, then the verify attention masks each query row at its own
+        position.  Backs both the speculative verify
+        (:meth:`decode_verify_step`) and the shared-prefix suffix prefill
+        (:meth:`prefill_suffix`) — one body keeps their math identical.
+        Returns (hidden (B, T, d), new cache)."""
         from repro.models.attention import paged_verify_attention
 
         from repro.serve.kv_cache import TRASH_PAGE
@@ -732,8 +736,53 @@ class Model:
                                           backend=backend)
 
         x = self._gqa_decode_layers(params, x, positions, write_attend)
+        return x, {"k_pages": kp, "v_pages": vp, "block_tables": bt}
+
+    def _gqa_verify_paged(self, params, cache, x, pos,
+                          attend_len: Optional[int],
+                          verify_backend: Optional[str]):
+        x, cache = self._paged_window(params, cache, x, pos, attend_len,
+                                      verify_backend)
         logits = self._head(params, x)[..., :self.cfg.vocab]   # (B, T, V)
-        return logits, {"k_pages": kp, "v_pages": vp, "block_tables": bt}
+        return logits, cache
+
+    # -------------------------------------------------- shared-prefix prefill
+    def prefill_suffix(self, params, cache, tokens: jnp.ndarray,
+                       start_pos: jnp.ndarray, last_idx: jnp.ndarray,
+                       attend_len: Optional[int] = None,
+                       verify_backend: Optional[str] = None):
+        """Prefill only the un-cached suffix of a prompt whose prefix
+        pages are already mapped (prefix sharing — the cached positions'
+        K/V is *someone else's* physical pages, reached through this
+        slot's block table).
+
+        tokens: (B, T) right-padded suffix; row b's real tokens sit at
+        absolute positions start_pos[b] .. start_pos[b] + last_idx[b],
+        with ``last_idx[b]`` the index of the row's last real token
+        inside the window.  Returns (logits (B, V) at each row's last
+        real token, cache).
+
+        This is the verify window re-aimed at admission: every suffix
+        K/V row is written through the block tables (shared prefix pages
+        are never written — the suffix starts past them by construction,
+        see :meth:`PagedCacheManager.plan_admit`), each query row attends
+        the cached prefix plus the window causally, and only the compute
+        for ``T`` suffix tokens is spent instead of the full prompt.
+        Padding rows past ``last_idx`` write into the slot's private tail
+        page (masked and progressively overwritten by decode, exactly
+        like right-padded dense prefill) or the trash page."""
+        if "k_pages" not in cache:
+            raise ValueError("prefill_suffix needs a paged cache "
+                             "(k_pages/v_pages/block_tables); got leaves "
+                             f"{sorted(cache)}")
+        x = self._embed(params, tokens)
+        x, cache = self._paged_window(params, cache, x, start_pos,
+                                      attend_len, verify_backend)
+        idx = jnp.broadcast_to(last_idx[:, None, None],
+                               (x.shape[0], 1, x.shape[2]))
+        last = jnp.take_along_axis(x, idx, axis=1)             # (B, 1, d)
+        logits = self._head(params, last)[:, 0, :self.cfg.vocab]
+        return logits, cache
 
     # --------------------------------------------------------------- prefill
     def prefill(self, params, batch: Dict[str, jnp.ndarray], max_seq: int,

@@ -1,10 +1,12 @@
 from repro.serve.engine import Request, ServeEngine, sample_token  # noqa: F401
 from repro.serve.kv_cache import (  # noqa: F401
     CACHE_LAYOUTS,
+    AdmitPlan,
     PageAllocator,
     PagedCacheManager,
     PagedStats,
 )
+from repro.serve.prefix_index import PrefixIndex  # noqa: F401
 from repro.serve.spec_decode import (  # noqa: F401
     build_spec_step,
     make_self_draft,

@@ -44,6 +44,17 @@ dispatch, bit-identical output to non-speculative decode.  Requests with
 window's page span is mapped before the step and blocks holding only
 rejected rows are retracted afterwards (allocator table edit, no copies).
 
+Prefix sharing (``prefix_sharing=True``, paged layout) admits a prompt
+by resolving its longest cached page-granular prefix in a radix index
+(``repro.serve.prefix_index``) and mapping those *physical* pages into
+the new slot's block table — zero copies, refcount++ in the allocator.
+Prefill then computes only the un-cached suffix through the paged cache
+(:meth:`Model.prefill_suffix`), admission charges only the private
+suffix pages against the free-pool gate, and released requests' prefixes
+linger in the index as reclaimable cache (LRU-evicted under allocation
+pressure).  Greedy outputs are bit-identical to sharing-disabled paged
+serving — sharing is invisible below the block tables.
+
 The seed per-token-dispatch loop is preserved under ``fused=False`` as
 the benchmark baseline (``benchmarks/serve_decode.py``).
 """
@@ -62,13 +73,16 @@ import numpy as np
 from repro.serve import spec_decode
 from repro.serve.kv_cache import (
     CACHE_LAYOUTS,
+    AdmitPlan,
     PagedCacheManager,
     blocks_for,
     cdiv,
+    copy_pages,
     scatter_prefill,
     write_slot,
     write_slots,
 )
+from repro.serve.prefix_index import PrefixIndex
 
 
 def _round_up(x: int, block: int) -> int:
@@ -110,6 +124,7 @@ class ServeEngine:
                  attend_block: int = 64, prompt_block: int = 16,
                  cache_layout: str = "dense", page_size: int = 16,
                  num_pages: Optional[int] = None,
+                 prefix_sharing: bool = False,
                  spec_k: int = 1, draft=None,
                  verify_backend: Optional[str] = None):
         if cache_layout not in CACHE_LAYOUTS:
@@ -133,8 +148,22 @@ class ServeEngine:
         self.prompt_block = prompt_block
         self.cache_layout = cache_layout
         self.page_size = page_size
+        self.prefix_sharing = prefix_sharing
         self.spec_k = spec_k
         self.verify_backend = verify_backend
+        if prefix_sharing:
+            if cache_layout != "paged":
+                raise ValueError("prefix sharing maps prompt prefixes "
+                                 "through the paged block tables; pass "
+                                 "cache_layout='paged'")
+            if model.cfg.family != "dense":
+                raise ValueError(
+                    "prefix sharing resolves prompts by token ids and "
+                    "prefills only the un-cached suffix; family "
+                    f"{model.cfg.family!r} prefills with non-positional "
+                    "state (frontend embeddings / length-dependent expert "
+                    "capacity), so cached K/V would not be exact — "
+                    "supported family: 'dense'")
         if num_pages is None:
             # capacity parity with the dense pool (+1 for the trash page)
             num_pages = batch_slots * cdiv(max_seq, page_size) + 1
@@ -255,6 +284,28 @@ class ServeEngine:
 
             self._draft_prefill = jax.jit(draft_prefill_fn)
 
+        # ---- prefix sharing: suffix prefill through the paged cache
+        if prefix_sharing:
+            vb = verify_backend
+
+            def suffix_prefill_fn(params, pool, block_tables, toks,
+                                  start_pos, last_idx, attend_len):
+                """Prefill only the un-cached suffix: the shared prefix is
+                reached through the block tables, the suffix K/V rows are
+                written through them, and only the last real token's
+                logits come back.  The pool is donated — the suffix lands
+                in place like every other cache write."""
+                cache = dict(pool, block_tables=block_tables)
+                logits, cache = model.prefill_suffix(
+                    params, cache, toks, start_pos, last_idx, attend_len,
+                    vb)
+                return logits, {"k_pages": cache["k_pages"],
+                                "v_pages": cache["v_pages"]}
+
+            self._suffix_prefill = jax.jit(suffix_prefill_fn,
+                                           static_argnums=(6,),
+                                           donate_argnums=(1,))
+
     # ----------------------------------------------------------- primitives
     def prefill(self, batch: Dict[str, jnp.ndarray]):
         """Equal-length prompt batch -> (last_logits, cache)."""
@@ -321,8 +372,10 @@ class ServeEngine:
         """
         st = _SchedState(
             queue=deque(requests),
-            mgr=PagedCacheManager(self.num_pages, self.page_size, self.slots,
-                                  self.max_seq)
+            mgr=PagedCacheManager(
+                self.num_pages, self.page_size, self.slots, self.max_seq,
+                prefix_index=PrefixIndex(self.page_size)
+                if self.prefix_sharing else None)
             if self.cache_layout == "paged" else None,
             t0=time.perf_counter(),
         )
@@ -373,7 +426,10 @@ class ServeEngine:
         self.preemptions = 0
 
         while st.queue or st.live:
-            self._admit(st)
+            if self.prefix_sharing:
+                self._admit_shared(st)
+            else:
+                self._admit(st)
             if not st.live:
                 # every admitted request completed at admission (1-token
                 # budgets); keep draining the queue
@@ -479,6 +535,33 @@ class ServeEngine:
             s["accept_rate"] = s["spec_tokens"] / s["spec_steps"]
 
     # ------------------------------------------------------------ admission
+    def _bookkeep_admit(self, st: "_SchedState", slot: int, req: Request,
+                        t_admit: float):
+        """Per-request admission bookkeeping, shared by both admission
+        paths — they must stay behaviorally identical (the sharing-on ==
+        sharing-off parity guarantee rides on it)."""
+        # only a preemption-resume (this serve) keeps its generated
+        # prefix; re-serving the same Request objects starts fresh
+        if id(req) not in st.resumed:
+            req.generated = []
+        st.live[slot] = req
+        st.admit_seq[slot] = st.next_seq
+        st.next_seq += 1
+        st.slot_pos[slot] = len(req.prompt)
+        st.stats.setdefault(req.uid, {
+            "admitted_s": t_admit, "preemptions": 0})
+
+    def _finish_admission(self, st: "_SchedState", slot: int, req: Request):
+        """First-token timing + immediate completion of budgets the
+        admission sample already exhausted (a decode step would overrun
+        them)."""
+        now = time.perf_counter() - st.t0
+        s = st.stats[req.uid]
+        s.setdefault("first_token_s", now)
+        s["admit_to_first_s"] = s["first_token_s"] - s["admitted_s"]
+        if req.max_new_tokens - len(req.generated) <= 0:
+            self._finish(st, slot, now)
+
     def _admit(self, st: "_SchedState"):
         """Admit queued requests into free slots, FIFO.  Dense gating: a
         free slot.  Paged gating: a free slot and enough free pages for
@@ -503,16 +586,7 @@ class ServeEngine:
             return
         t_admit = time.perf_counter() - st.t0
         for slot, req in taken:
-            # only a preemption-resume (this serve) keeps its generated
-            # prefix; re-serving the same Request objects starts fresh
-            if id(req) not in st.resumed:
-                req.generated = []
-            st.live[slot] = req
-            st.admit_seq[slot] = st.next_seq
-            st.next_seq += 1
-            st.slot_pos[slot] = len(req.prompt)
-            st.stats.setdefault(req.uid, {
-                "admitted_s": t_admit, "preemptions": 0})
+            self._bookkeep_admit(st, slot, req, t_admit)
         batched = (self.fused and
                    self.model.cfg.family in _PADDED_PREFILL_FAMILIES)
         if batched:
@@ -521,20 +595,125 @@ class ServeEngine:
             groups = [[t] for t in taken]
         for group in groups:
             self._prefill_group(st, group)
-        now = time.perf_counter() - st.t0
         for slot, req in taken:
-            s = st.stats[req.uid]
-            s.setdefault("first_token_s", now)
-            s["admit_to_first_s"] = s["first_token_s"] - s["admitted_s"]
-            # a request whose budget is exhausted by the admission sample
-            # completes immediately; a decode step would overrun it
-            if req.max_new_tokens - len(req.generated) <= 0:
-                self._finish(st, slot, now)
+            self._finish_admission(st, slot, req)
+
+    def _admit_shared(self, st: "_SchedState"):
+        """Prefix-sharing admission: requests admit *sequentially* — each
+        prompt's prefill publishes its full pages to the index before the
+        next request is planned, so N identical prompts arriving together
+        share pages with each other, not just with earlier traffic.  The
+        gate charges only the plan's private pages (the shared prefix is
+        already resident), which admits strictly more requests from the
+        same pool."""
+        for slot in range(self.slots):
+            if slot in st.live or not st.queue:
+                continue
+            req = st.queue[0]
+            # replan the blocked queue head only when the allocator or the
+            # index changed since its gate last failed: the gate is a pure
+            # function of that state, and replanning every decode step
+            # would both waste O(prompt + index) host work per token and
+            # keep refreshing the blocked prompt's LRU stamps (skewing
+            # eviction toward other, possibly hot, entries)
+            a = st.mgr.allocator
+            key = (id(req), a.alloc_count, a.release_count, a.share_count,
+                   st.mgr.index.version)
+            if st.gate_block == key:
+                break
+            plan = st.mgr.plan_admit(req.prompt)
+            if (not st.mgr.can_admit_plan(plan, headroom=len(st.live))
+                    or st.mgr.admit_prefix(slot, plan) is None):
+                st.gate_block = key
+                break
+            st.gate_block = None
+            st.queue.popleft()
+            self._bookkeep_admit(st, slot, req,
+                                 time.perf_counter() - st.t0)
+            # first-admission figure (a preemption resume re-matches its
+            # own folded prompt, which would double-count the reuse)
+            st.stats[req.uid].setdefault("cached_prefix_tokens",
+                                         plan.cached_tokens)
+            st.plans[slot] = plan
+            self._prefill_group(st, [(slot, req)])
+            st.mgr.register_prefix(slot, req.prompt)
+            self._finish_admission(st, slot, req)
+
+    def _prefill_suffix_row(self, st: "_SchedState", slot: int,
+                            req: Request, plan: AdmitPlan):
+        """Admission prefill for a prefix-index hit: fork the boundary
+        page if the plan calls for copy-on-write, then compute only the
+        un-cached suffix through the paged cache (bucketed window — the
+        shared prefix is read through the block tables, never copied)."""
+        if plan.cow_src is not None:
+            st.pool = copy_pages(st.pool,
+                                 jnp.asarray([plan.cow_src], jnp.int32),
+                                 jnp.asarray([plan.cow_dst], jnp.int32))
+        st.mgr.cow_release(plan)  # the fork-source pin outlives the copy
+        suffix = req.prompt[plan.cached_tokens:]
+        t_b = _round_up(len(suffix), self.prompt_block)
+        toks = np.zeros((1, t_b), np.int32)
+        toks[0, :len(suffix)] = suffix
+        attend = self._attend_len(plan.cached_tokens + t_b)
+        if st.mgr.dirty:
+            st.bt_dev = st.mgr.device_tables()
+        logits, st.pool = self._suffix_prefill(
+            self.params, st.pool, st.bt_dev[slot:slot + 1],
+            jnp.asarray(toks),
+            jnp.asarray([plan.cached_tokens], jnp.int32),
+            jnp.asarray([len(suffix) - 1], jnp.int32), attend)
+        if self.spec_k > 1:
+            # the draft cache is a dense slot pool with no sharing: it
+            # prefills the full prompt (draft quality only affects the
+            # acceptance rate, never output values)
+            full_b = min(self.max_seq,
+                         _round_up(len(req.prompt), self.prompt_block))
+            full = np.zeros((1, full_b), np.int32)
+            full[0, :len(req.prompt)] = req.prompt
+            _, dcache = self._draft_prefill(
+                self.draft_params, {"tokens": jnp.asarray(full)},
+                jnp.asarray([len(req.prompt) - 1], jnp.int32))
+            st.draft_cache = write_slot(st.draft_cache, dcache, slot)
+        self._commit_prefill(st, [slot], [req], logits)
+
+    def _commit_prefill(self, st: "_SchedState", slots: List[int],
+                        reqs: List[Request], logits):
+        """Post-prefill slot-state commit, shared by the full and the
+        suffix admission prefills (one implementation keeps the two paths
+        behaviorally identical): sample each row's first token at
+        position ``len(prompt)`` with its (uid, position) key, scatter
+        pos/tok/remaining/uids (+ spec flags) into the slot state, and
+        append the sampled token."""
+        lens = [len(r.prompt) for r in reqs]
+        first = self._sample_at(logits, jnp.asarray(lens, jnp.int32),
+                                jnp.asarray([r.uid for r in reqs],
+                                            jnp.int32))
+        first_h = jax.device_get(first)
+        slot_idx = jnp.asarray(slots, jnp.int32)
+        st.pos = st.pos.at[slot_idx].set(jnp.asarray(lens, jnp.int32))
+        st.tok = st.tok.at[slot_idx].set(first)
+        st.remaining = st.remaining.at[slot_idx].set(jnp.asarray(
+            [r.max_new_tokens - len(r.generated) - 1 for r in reqs],
+            jnp.int32))
+        st.uids = st.uids.at[slot_idx].set(jnp.asarray(
+            [r.uid for r in reqs], jnp.int32))
+        if self.spec_k > 1:
+            st.spec_mask = st.spec_mask.at[slot_idx].set(jnp.asarray(
+                [bool(getattr(r, "spec", True)) for r in reqs]))
+        for req, f in zip(reqs, first_h):
+            req.generated.append(int(f))
 
     def _prefill_group(self, st: "_SchedState", group: List[tuple]):
         """One prefill for k admitted (slot, request) pairs: bucketed
         right-padding + exact per-slot last-token logits (last_pos gather
         inside the model), then the layout-specific cache write."""
+        if self.prefix_sharing and len(group) == 1:
+            plan = st.plans.pop(group[0][0], None)
+            if plan is not None and plan.cached_tokens > 0:
+                return self._prefill_suffix_row(st, group[0][0],
+                                                group[0][1], plan)
+            if plan is not None:
+                st.mgr.cow_release(plan)  # no-op unless the plan forked
         slots = [s for s, _ in group]
         reqs = [r for _, r in group]
         lens = [len(r.prompt) for r in reqs]
@@ -578,22 +757,7 @@ class ServeEngine:
                 st.draft_cache = write_slots(
                     st.draft_cache, dcache, jnp.asarray(slots, jnp.int32))
         # the token sampled from prefill logits sits at position len(prompt)
-        first = self._sample_at(logits, jnp.asarray(lens, jnp.int32),
-                                jnp.asarray([r.uid for r in reqs], jnp.int32))
-        first_h = jax.device_get(first)
-        slot_idx = jnp.asarray(slots, jnp.int32)
-        st.pos = st.pos.at[slot_idx].set(jnp.asarray(lens, jnp.int32))
-        st.tok = st.tok.at[slot_idx].set(first)
-        st.remaining = st.remaining.at[slot_idx].set(jnp.asarray(
-            [r.max_new_tokens - len(r.generated) - 1 for r in reqs],
-            jnp.int32))
-        st.uids = st.uids.at[slot_idx].set(jnp.asarray(
-            [r.uid for r in reqs], jnp.int32))
-        if self.spec_k > 1:
-            st.spec_mask = st.spec_mask.at[slot_idx].set(jnp.asarray(
-                [bool(getattr(r, "spec", True)) for r in reqs]))
-        for req, f in zip(reqs, first_h):
-            req.generated.append(int(f))
+        self._commit_prefill(st, slots, reqs, logits)
 
     # ----------------------------------------------------------- preemption
     def _grow_or_preempt(self, st: "_SchedState"):
@@ -645,6 +809,9 @@ class _SchedState:
     next_seq: int = 0
     resumed: set = dataclasses.field(default_factory=set)
     slot_pos: List[int] = dataclasses.field(default_factory=list)
+    plans: Dict[int, AdmitPlan] = dataclasses.field(default_factory=dict)
+    gate_block: Any = None     # (req, allocator, index) state of the last
+    #                            failed sharing-admission gate
     cache: Any = None          # dense layout
     pool: Any = None           # paged layout: {"k_pages", "v_pages"}
     bt_dev: Any = None         # paged layout: uploaded block tables

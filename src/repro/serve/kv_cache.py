@@ -28,6 +28,23 @@ outputs, exactly as in the dense layout) — their cache writes land in the
 trash page instead of corrupting pages that were freed and reused by live
 slots.
 
+Pages are *refcounted* and therefore shareable: the logical-to-physical
+decoupling the block tables bought (the paper's indirection axis) lets
+two slots whose prompts share a page-aligned prefix point at the same
+physical pages (``repro.serve.prefix_index`` resolves the prefix;
+:meth:`PagedCacheManager.admit_prefix` maps it).  The ownership rules are
+strict — the unit tests treat them as hard errors, not best-effort:
+
+  * a page frees only when its refcount reaches 0 (``release`` is a
+    decrement; double-release of a free page raises);
+  * a shared page (refcount > 1) is read-only — every write span must be
+    private, enforced by :meth:`PageAllocator.assert_writable`;
+  * a writer landing inside a shared page forks it copy-on-write:
+    allocate a private page, copy the K/V rows (:func:`copy_pages`),
+    remap the table.  The only place this happens by construction is the
+    last page of a fully-matched aligned prefix — decode growth and
+    suffix prefill always target private pages.
+
 The allocator itself is deliberately host-side and synchronous: pages
 move at *step boundaries* (admission, growth, preemption, completion),
 never inside the jitted token step, so the hot loop stays one dispatch
@@ -38,11 +55,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.serve.prefix_index import PrefixIndex
 
 CACHE_LAYOUTS = ("dense", "paged")
 
@@ -61,13 +80,25 @@ def blocks_for(n_tokens: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """Free-list allocator over pages [1, num_pages) — page 0 is trash.
+    """Refcounted free-list allocator over pages [1, num_pages).
 
     alloc(n) is all-or-nothing (a request's blocks are granted together or
     not at all, so a failed admission never leaks partial allocations) and
     LIFO: freed pages are reused most-recently-freed first, which keeps the
-    working set of hot pages small.  All accounting is exact — the unit
-    tests treat ``used + free == usable`` as an invariant.
+    working set of hot pages small.
+
+    Every allocated page carries a refcount: ``alloc`` starts it at 1,
+    ``share`` increments (prefix sharing maps the same physical page into
+    another slot's table), ``release`` decrements and returns the page to
+    the free list only at 0.  Releasing a page that is not allocated, or
+    sharing one, is a hard error — as is writing to a shared page
+    (:meth:`assert_writable`), which callers must check before using a
+    page as a scatter target.
+
+    Accounting is exact and counts *physical* pages: a page shared by N
+    holders contributes once to ``used`` (``used + free == usable`` is a
+    test invariant) and N times to ``logical`` — the spread between them
+    is what sharing saves.
     """
 
     def __init__(self, num_pages: int):
@@ -77,10 +108,14 @@ class PageAllocator:
         self.num_pages = num_pages
         # LIFO free list; initialized so page 1 is handed out first
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
-        self._used: set = set()
+        self._refs: Dict[int, int] = {}
+        self._logical = 0
         self.alloc_count = 0      # pages ever handed out
-        self.free_count = 0       # pages ever returned
+        self.free_count = 0       # pages ever returned to the free list
+        self.share_count = 0      # refs ever added by sharing
+        self.release_count = 0    # refs ever dropped (freed or not)
         self.peak_used = 0
+        self.peak_logical = 0
 
     @property
     def usable(self) -> int:
@@ -92,30 +127,77 @@ class PageAllocator:
 
     @property
     def used(self) -> int:
-        return len(self._used)
+        """Physical pages allocated — a shared page counts once."""
+        return len(self._refs)
+
+    @property
+    def logical(self) -> int:
+        """Sum of refcounts: pages the holders collectively believe they
+        own.  ``logical - used`` pages of HBM are saved by sharing."""
+        return self._logical
 
     def utilization(self) -> float:
         return self.used / self.usable
 
+    def refcount(self, page: int) -> int:
+        return self._refs.get(page, 0)
+
+    def is_shared(self, page: int) -> bool:
+        return self.refcount(page) > 1
+
+    def assert_writable(self, page: int):
+        """Write spans must target private pages — a shared page is
+        read-only until copy-on-write forks it."""
+        r = self.refcount(page)
+        if r != 1:
+            kind = "shared" if r > 1 else "unallocated"
+            raise ValueError(f"write to {kind} page {page} (refcount {r})")
+
     def alloc(self, n: int) -> Optional[List[int]]:
-        """n pages, or None if fewer than n are free (nothing allocated)."""
+        """n pages at refcount 1, or None if fewer than n are free
+        (nothing allocated)."""
         if n < 0:
             raise ValueError(f"alloc({n})")
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
-        self._used.update(pages)
+        for p in pages:
+            self._refs[p] = 1
+        self._logical += n
         self.alloc_count += n
         self.peak_used = max(self.peak_used, self.used)
+        self.peak_logical = max(self.peak_logical, self._logical)
         return pages
 
-    def release(self, pages: List[int]):
+    def share(self, pages: Sequence[int]):
+        """Add one reference to each page (all must be allocated)."""
         for p in pages:
-            if p not in self._used:
+            if p not in self._refs:
+                raise ValueError(f"share of unallocated page {p}")
+        for p in pages:
+            self._refs[p] += 1
+        self._logical += len(pages)
+        self.share_count += len(pages)
+        self.peak_logical = max(self.peak_logical, self._logical)
+
+    def release(self, pages: Sequence[int]) -> int:
+        """Drop one reference per page; pages reaching refcount 0 return
+        to the free list.  Returns how many were actually freed."""
+        freed = 0
+        for p in pages:
+            r = self._refs.get(p)
+            if r is None:
                 raise ValueError(f"double free / foreign page {p}")
-            self._used.remove(p)
-            self._free.append(p)
-        self.free_count += len(pages)
+            if r == 1:
+                del self._refs[p]
+                self._free.append(p)
+                freed += 1
+            else:
+                self._refs[p] = r - 1
+        self._logical -= len(pages)
+        self.free_count += freed
+        self.release_count += len(pages)
+        return freed
 
 
 @dataclasses.dataclass
@@ -123,11 +205,16 @@ class PagedStats:
     """Utilization accounting snapshot (see :meth:`PagedCacheManager.stats`).
 
     ``peak_utilization`` / ``peak_used_pages`` / ``peak_tokens`` are the
-    pool's high-water marks over the serve() call (the end-of-call *used*
-    figures are always zero — every page is released at completion).
-    ``retracts`` counts pages taken back by the speculative
-    write-then-retract pattern (mapped for a draft window, freed when the
-    window's tail was rejected)."""
+    pool's *physical* high-water marks over the serve() call (a page
+    shared by N slots counts once; with prefix sharing the end-of-call
+    ``used_pages`` are whatever the prefix index still caches, zero
+    otherwise).  ``logical_*`` count every mapping separately — the
+    tokens requests collectively believe they hold — and
+    ``sharing_ratio`` is the high-water logical/physical ratio (1.0 when
+    nothing is shared).  ``retracts`` counts pages taken back by the
+    speculative write-then-retract pattern; ``cow_forks`` pages
+    copy-on-write forked at admission; ``evictions`` index entries
+    reclaimed under allocation pressure."""
     num_pages: int
     page_size: int
     used_pages: int
@@ -139,6 +226,36 @@ class PagedStats:
     allocs: int
     frees: int
     retracts: int
+    # ---- prefix sharing
+    logical_pages: int = 0
+    physical_pages: int = 0
+    logical_tokens: int = 0
+    physical_tokens: int = 0
+    peak_logical_pages: int = 0
+    sharing_ratio: float = 1.0
+    shares: int = 0
+    cow_forks: int = 0
+    evictions: int = 0
+    index_pages: int = 0
+    cached_prefix_tokens: int = 0
+
+
+@dataclasses.dataclass
+class AdmitPlan:
+    """Resolved admission for one prompt (see
+    :meth:`PagedCacheManager.plan_admit`): which indexed pages the slot
+    will share, whether the boundary page must be copy-on-write forked
+    (``cow_src`` -> ``cow_dst``, filled at admit time), how many prompt
+    positions come from cache (``cached_tokens`` — prefill computes only
+    the suffix), and how many *private* pages admission must allocate
+    (the only pages charged against the free-pool gate)."""
+    prompt_len: int
+    n_blocks: int
+    shared_pages: List[int]
+    cached_tokens: int
+    private_blocks: int
+    cow_src: Optional[int] = None
+    cow_dst: Optional[int] = None
 
 
 class PagedCacheManager:
@@ -148,17 +265,61 @@ class PagedCacheManager:
     owned by the engine; this class owns the *mapping* and hands the
     engine a fresh ``(slots, max_blocks)`` int32 table whenever it
     changes (``dirty`` flag → one small H2D per change, not per token).
+
+    With a ``prefix_index`` the manager also owns prompt-prefix sharing:
+    :meth:`plan_admit` resolves a prompt to its longest cached prefix,
+    :meth:`admit_prefix` maps those pages into the slot's table with zero
+    copies (refcount++), and :meth:`register_prefix` publishes a prompt's
+    full pages after prefill.  The index holds its own reference on every
+    published page, so a released request's prefix lingers as reusable
+    cache; pages whose only holder is the index are reclaimed LRU-first
+    when an allocation would otherwise fail.
     """
 
     def __init__(self, num_pages: int, page_size: int, slots: int,
-                 max_seq: int):
+                 max_seq: int, prefix_index: Optional[PrefixIndex] = None):
         self.page_size = page_size
         self.max_blocks = cdiv(max_seq, page_size)
         self.allocator = PageAllocator(num_pages)
         self.tables = np.full((slots, self.max_blocks), TRASH_PAGE, np.int32)
         self.owned: List[List[int]] = [[] for _ in range(slots)]
+        self.index = prefix_index
         self.dirty = True
         self.retract_count = 0    # pages taken back by speculative rollback
+        self.cow_forks = 0
+        self.evictions = 0
+        self.cached_tokens_total = 0
+        self.peak_logical_pages = 0
+        self.peak_sharing_ratio = 1.0
+
+    # ----------------------------------------------------------- internals
+    def _evictable_pred(self, page: int) -> bool:
+        # reclaimable iff the index holds the only reference
+        return self.allocator.refcount(page) == 1
+
+    def _alloc(self, n: int) -> Optional[List[int]]:
+        """allocator.alloc with lazy index eviction: when the free list
+        cannot cover ``n``, reclaim LRU index-only entries first."""
+        pages = self.allocator.alloc(n)
+        if pages is None and self.index is not None:
+            evicted = self.index.evict_lru(n - self.allocator.free,
+                                           self._evictable_pred)
+            if evicted:
+                self.allocator.release(evicted)
+                self.evictions += len(evicted)
+                pages = self.allocator.alloc(n)
+        return pages
+
+    def _probe(self):
+        """Track the logical/physical high-water marks (sharing_ratio)."""
+        logical = sum(len(o) for o in self.owned)
+        if logical > self.peak_logical_pages:
+            self.peak_logical_pages = logical
+        distinct = len({p for o in self.owned for p in o})
+        if distinct:
+            ratio = logical / distinct
+            if ratio > self.peak_sharing_ratio:
+                self.peak_sharing_ratio = ratio
 
     # ------------------------------------------------------------- queries
     def can_admit(self, prompt_len: int, headroom: int = 0) -> bool:
@@ -170,11 +331,28 @@ class PagedCacheManager:
         return (self.allocator.free
                 >= blocks_for(prompt_len, self.page_size) + headroom)
 
+    def can_admit_plan(self, plan: AdmitPlan, headroom: int = 0) -> bool:
+        """Prefix-sharing admission gate: only the plan's *private* pages
+        are charged (shared pages are already resident — over-subscribing
+        the pool with shared prompts admits strictly more requests), and
+        index-only entries count as reclaimable capacity — except the
+        pages this very plan is about to share or fork from."""
+        avail = self.allocator.free
+        if self.index is not None:
+            pinned = set(plan.shared_pages)
+            if plan.cow_src is not None:
+                pinned.add(plan.cow_src)
+            avail += self.index.evictable(self._evictable_pred,
+                                          exclude=pinned)
+        return avail >= plan.private_blocks + headroom
+
     def fits_worst_case(self, prompt_len: int, max_new: int,
                         max_seq: int) -> bool:
         """Can this request *ever* complete alone in the pool?  Positions
         written: the prompt plus one per decode step (the last sampled
-        token is never written), capped by max_seq."""
+        token is never written), capped by max_seq.  (Index-held pages
+        don't shrink this bound — alone in the pool, every one of them is
+        evictable.)"""
         longest = min(prompt_len + max(max_new - 1, 0), max_seq)
         return blocks_for(longest, self.page_size) <= self.allocator.usable
 
@@ -182,7 +360,7 @@ class PagedCacheManager:
     def admit(self, slot: int, prompt_len: int) -> Optional[List[int]]:
         """Map blocks for a prompt; None (nothing changed) if pages lack."""
         n = blocks_for(prompt_len, self.page_size)
-        pages = self.allocator.alloc(n)
+        pages = self._alloc(n)
         if pages is None:
             return None
         assert not self.owned[slot], f"slot {slot} already mapped"
@@ -190,21 +368,126 @@ class PagedCacheManager:
             self.tables[slot, j] = p
         self.owned[slot] = list(pages)
         self.dirty = True
+        self._probe()
         return pages
+
+    def plan_admit(self, prompt: Sequence[int]) -> AdmitPlan:
+        """Resolve a prompt against the prefix index (longest cached
+        page-granular prefix).  Pure query — nothing is allocated or
+        shared until :meth:`admit_prefix`.
+
+        The write frontier is always private: when the match covers every
+        full page *and* the prompt is page-aligned, the last matched page
+        would receive the suffix recompute and the first decode token, so
+        the plan forks it copy-on-write (``cow_src``) instead of sharing
+        it — one page allocated + copied, ``cached_tokens`` = all but the
+        final token.  Otherwise the suffix (>= 1 token, starting at the
+        first un-cached position) prefills into freshly allocated private
+        pages."""
+        p = len(prompt)
+        n_blocks = blocks_for(p, self.page_size)
+        if self.index is None:
+            return AdmitPlan(prompt_len=p, n_blocks=n_blocks,
+                             shared_pages=[], cached_tokens=0,
+                             private_blocks=n_blocks)
+        matched = self.index.match(prompt)
+        cow_src = None
+        if matched and len(matched) * self.page_size == p:
+            if p == 1:
+                # degenerate one-token prompt: a fork would cache 0
+                # tokens, so there is nothing to share
+                matched = []
+                cached = 0
+            else:
+                cow_src = matched[-1]
+                matched = matched[:-1]
+                cached = p - 1
+        else:
+            cached = len(matched) * self.page_size
+        return AdmitPlan(prompt_len=p, n_blocks=n_blocks,
+                         shared_pages=list(matched), cached_tokens=cached,
+                         private_blocks=n_blocks - len(matched),
+                         cow_src=cow_src)
+
+    def admit_prefix(self, slot: int, plan: AdmitPlan) -> Optional[AdmitPlan]:
+        """Map a planned admission: share the cached prefix pages into the
+        slot's table (zero copies), allocate the private suffix pages (and
+        the CoW fork target, returned in ``plan.cow_dst`` — the engine
+        performs the device copy).  All-or-nothing: on allocation failure
+        the shares are rolled back and nothing changed.
+
+        ``cow_src`` is pinned (an extra reference) from here until
+        :meth:`cow_release` — without the pin, the fork *source* would sit
+        at refcount 1 (index-only) and any allocation between this call
+        and the device copy could evict and reuse the very page the copy
+        reads from."""
+        assert not self.owned[slot], f"slot {slot} already mapped"
+        pins = list(plan.shared_pages)
+        if plan.cow_src is not None:
+            pins.append(plan.cow_src)
+        if pins:
+            self.allocator.share(pins)
+        pages = self._alloc(plan.private_blocks)
+        if pages is None:
+            if pins:
+                self.allocator.release(pins)
+            return None
+        mapping = list(plan.shared_pages)
+        if plan.cow_src is not None:
+            plan.cow_dst = pages[0]
+            self.cow_forks += 1
+        mapping.extend(pages)
+        for j, pg in enumerate(mapping):
+            self.tables[slot, j] = pg
+        self.owned[slot] = list(mapping)
+        self.cached_tokens_total += plan.cached_tokens
+        self.dirty = True
+        self._probe()
+        return plan
+
+    def cow_release(self, plan: AdmitPlan):
+        """Drop the fork-source pin :meth:`admit_prefix` took — call once
+        the device copy into ``cow_dst`` has been issued."""
+        if plan.cow_src is not None:
+            self.allocator.release([plan.cow_src])
+
+    def register_prefix(self, slot: int, prompt: Sequence[int]) -> int:
+        """Publish a prompt's full pages to the index (call after prefill
+        has written them).  The index takes its own reference on every
+        newly published page, so the prefix outlives the request; pages
+        already indexed (the shared prefix itself, or a CoW fork whose
+        original still sits at that node) are left as-is.  Returns the
+        number of pages newly published."""
+        if self.index is None:
+            return 0
+        fp = len(prompt) // self.page_size
+        if fp == 0:
+            return 0
+        pages = [int(self.tables[slot, j]) for j in range(fp)]
+        new = self.index.insert(list(prompt), pages)
+        if new:
+            self.allocator.share(new)
+        return len(new)
 
     def ensure_block(self, slot: int, block: int) -> bool:
         """Map logical block ``block`` for ``slot`` (on-demand growth at a
-        step boundary).  True if already mapped or newly allocated."""
+        step boundary).  True if already mapped or newly allocated.  An
+        already-mapped block must be private — growth spans are write
+        spans, and writing a shared page is a hard error (decode growth
+        lands past the shared prefix by construction)."""
         if block >= self.max_blocks:
             return True  # position cap: decode stops at max_seq anyway
-        if self.tables[slot, block] != TRASH_PAGE:
+        page = int(self.tables[slot, block])
+        if page != TRASH_PAGE:
+            self.allocator.assert_writable(page)
             return True
-        pages = self.allocator.alloc(1)
+        pages = self._alloc(1)
         if pages is None:
             return False
         self.tables[slot, block] = pages[0]
         self.owned[slot].append(pages[0])
         self.dirty = True
+        self._probe()
         return True
 
     def ensure_span(self, slot: int, first_pos: int, last_pos: int) -> bool:
@@ -220,36 +503,43 @@ class PagedCacheManager:
         return True
 
     def retract_above(self, slot: int, n_tokens: int) -> int:
-        """Speculative rollback: free every block holding only positions
+        """Speculative rollback: unmap every block holding only positions
         >= ``n_tokens`` (the write-then-retract pattern).  A draft window
         maps blocks up to ``pos + k - 1`` before the verify dispatch; when
         acceptance commits fewer tokens, the tail blocks hold nothing but
         rejected rows — a table edit hands their pages back, no copies.
         The stale rows in the *kept* boundary block are overwritten by the
-        next window (attention masks them until then).  Returns the number
-        of pages retracted."""
+        next window (attention masks them until then).  Retraction is a
+        refcount release: a page another slot (or the index) still holds
+        is unmapped from *this* slot but never returned to the free list.
+        Returns the number of pages retracted from the slot."""
         keep = blocks_for(n_tokens, self.page_size)   # blocks [0, keep)
-        freed = []
+        dropped = []
         for blk in range(keep, self.max_blocks):
             page = int(self.tables[slot, blk])
             if page == TRASH_PAGE:
                 continue
             self.tables[slot, blk] = TRASH_PAGE
             self.owned[slot].remove(page)
-            freed.append(page)
-        if freed:
-            self.allocator.release(freed)
-            self.retract_count += len(freed)
+            dropped.append(page)
+        if dropped:
+            self.allocator.release(dropped)
+            self.retract_count += len(dropped)
             self.dirty = True
-        return len(freed)
+            self._probe()
+        return len(dropped)
 
     def release(self, slot: int):
-        """Free every page a slot owns and point its table at trash."""
+        """Drop the slot's reference on every page it maps and point its
+        table at trash.  Pages shared with other slots — or published to
+        the prefix index — stay allocated until their last holder lets
+        go; only the refcount-0 remainder returns to the free list."""
         if self.owned[slot]:
             self.allocator.release(self.owned[slot])
             self.owned[slot] = []
             self.tables[slot, :] = TRASH_PAGE
             self.dirty = True
+            self._probe()
 
     def device_tables(self) -> jnp.ndarray:
         self.dirty = False
@@ -257,14 +547,22 @@ class PagedCacheManager:
 
     def prefill_page_idx(self, slot: int, n_blocks: int) -> np.ndarray:
         """(n_blocks,) page indices for a slot's first blocks, trash-padded
-        past what the slot owns (scatter targets for padded prefill)."""
+        past what the slot owns (scatter targets for padded prefill).
+        Scatter targets are writes: every emitted page must be private —
+        a shared-prefix admission scatters nothing (its suffix prefill
+        writes through the block tables instead), so hitting a shared
+        page here is a hard error, not a silent corruption."""
         idx = np.full((n_blocks,), TRASH_PAGE, np.int32)
         m = min(n_blocks, len(self.owned[slot]))
+        for j in range(m):
+            self.allocator.assert_writable(int(self.tables[slot, j]))
         idx[:m] = self.tables[slot, :m]
         return idx
 
     def stats(self) -> PagedStats:
         a = self.allocator
+        logical = sum(len(o) for o in self.owned)
+        distinct = len({p for o in self.owned for p in o})
         return PagedStats(
             num_pages=a.num_pages, page_size=self.page_size,
             used_pages=a.used, free_pages=a.free,
@@ -273,7 +571,16 @@ class PagedCacheManager:
             utilization=a.utilization(),
             peak_utilization=a.peak_used / a.usable,
             allocs=a.alloc_count, frees=a.free_count,
-            retracts=self.retract_count)
+            retracts=self.retract_count,
+            logical_pages=logical, physical_pages=distinct,
+            logical_tokens=logical * self.page_size,
+            physical_tokens=distinct * self.page_size,
+            peak_logical_pages=self.peak_logical_pages,
+            sharing_ratio=self.peak_sharing_ratio,
+            shares=a.share_count, cow_forks=self.cow_forks,
+            evictions=self.evictions,
+            index_pages=len(self.index) if self.index is not None else 0,
+            cached_prefix_tokens=self.cached_tokens_total)
 
 
 # ---------------------------------------------------------------------------
@@ -300,6 +607,9 @@ def scatter_prefill(pages: Dict[str, jnp.ndarray],
     rows' tails past their prompt point at the trash page, so the scatter
     is one fused gather-free ``.at[].set`` per leaf (duplicate trash
     indices may collide — by construction only padding lands there).
+    Shared pages are never valid targets (the manager's
+    ``prefill_page_idx`` enforces this): a shared-prefix admission skips
+    the already-cached pages entirely and prefills only its suffix.
     """
     ps = pages["k_pages"].shape[2]
     out = dict(pages)
@@ -314,6 +624,20 @@ def scatter_prefill(pages: Dict[str, jnp.ndarray],
         nb = src.shape[2] // ps
         src = src.reshape(l, b * nb, ps, h, d)
         out[name] = pool.at[:, flat_idx].set(src.astype(pool.dtype))
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def copy_pages(pages: Dict[str, jnp.ndarray], src_idx: jnp.ndarray,
+               dst_idx: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Copy-on-write fork: duplicate physical pages ``src_idx`` into
+    ``dst_idx`` (both (n,) int32) across every layer of the donated pool.
+    One page copy per fork — the price of making a write frontier private
+    — versus re-prefilling the whole prefix without sharing."""
+    out = dict(pages)
+    for name in ("k_pages", "v_pages"):
+        pool = out[name]
+        out[name] = pool.at[:, dst_idx].set(pool[:, src_idx])
     return out
 
 
@@ -349,10 +673,20 @@ def write_slots(cache, pcache, slot_idx: jnp.ndarray):
 def gather_slot(pages: Dict[str, jnp.ndarray], table_row: jnp.ndarray,
                 page_size: int) -> Dict[str, jnp.ndarray]:
     """Debug/test helper: reassemble one slot's dense (L, NB*ps, H, D)
-    K/V view from the pool through its block-table row."""
+    K/V view from the pool through its block-table row.
+
+    Shared pages resolve exactly like private ones — sharing lives purely
+    in the table, invisible below it.  Truly-unmapped entries (table
+    rows pointing at the trash page) are *poisoned* with NaN so a debug
+    view can never mistake trash-page garbage for cached data; note this
+    means positions past the live prefix inside a *mapped* page show
+    stale-but-real rows, exactly what the device sees."""
+    unmapped = table_row == TRASH_PAGE                      # (NB,)
     out = {}
     for name, dense in (("k_pages", "k"), ("v_pages", "v")):
         g = jnp.take(pages[name], table_row, axis=1)  # (L, NB, ps, H, D)
         l, nb, ps, h, d = g.shape
+        g = jnp.where(unmapped[None, :, None, None, None],
+                      jnp.asarray(jnp.nan, g.dtype), g)
         out[dense] = g.reshape(l, nb * ps, h, d)
     return out

@@ -1,0 +1,168 @@
+"""Radix index over page-granular prompt prefixes.
+
+Prefix sharing is the block tables' indirection (the paper's SW
+memory-decoupling axis) cashed in as capacity: two prompts that start
+with the same tokens produce bit-identical K/V for those positions, so
+their block tables can point at the *same physical pages*.  This module
+owns the lookup structure — a radix tree whose edges are whole pages of
+token ids (``page_size`` tokens per edge) and whose nodes carry the
+physical page holding that page's K/V.
+
+Granularity is deliberately page-level: a page is the unit the allocator
+moves and the unit the decode kernels gather, so a prefix is shareable
+exactly when it covers *full* pages.  The partial tail page of a prompt
+is never indexed — the owner keeps writing into it (suffix prefill
+padding, first decode rows), and a shared page must never see a write.
+
+Ownership protocol (the :class:`~repro.serve.kv_cache.PagedCacheManager`
+drives this; the index never touches the allocator itself):
+
+  * ``match(tokens)`` walks the longest indexed prefix and returns its
+    pages; the caller ``share()``s them (refcount++) before mapping them
+    into a new slot's block table.
+  * ``insert(tokens, pages)`` registers a prompt's full pages after its
+    prefill has written them; pages *newly* referenced by the index are
+    returned so the caller can take the index's own refcount on them.
+    Existing nodes keep their page (the caller shared that same page at
+    admission, so there is nothing to register).
+  * Entries whose page refcount has dropped to the index's own single
+    reference are *evictable*: ``evict_lru`` releases them leaf-first in
+    least-recently-matched order, cascading so a parent becomes a
+    candidate once its children are gone.  Released requests' prefixes
+    therefore linger as reusable cache instead of being freed — free
+    pages are reclaimed lazily, under allocation pressure.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+
+class _Node:
+    __slots__ = ("children", "page", "last_used")
+
+    def __init__(self, page: int = -1):
+        self.children: Dict[Tuple[int, ...], _Node] = {}
+        self.page = page
+        self.last_used = 0
+
+
+class PrefixIndex:
+    """Radix tree: one edge per full page of token ids -> physical page."""
+
+    def __init__(self, page_size: int):
+        if page_size < 1:
+            raise ValueError(f"page_size must be >= 1; got {page_size}")
+        self.page_size = page_size
+        self._root = _Node()
+        self._clock = 0          # LRU clock: bumped on match/insert
+        self._n_pages = 0
+        # bumped whenever the page set changes (insert/evict) — lets the
+        # scheduler skip replanning a blocked admission until the answer
+        # could differ (matching alone only moves LRU stamps)
+        self.version = 0
+
+    def __len__(self) -> int:
+        """Number of physical pages the index currently references."""
+        return self._n_pages
+
+    def _tick(self) -> int:
+        self._clock += 1
+        return self._clock
+
+    def _page_keys(self, tokens: Sequence[int]) -> Iterable[Tuple[int, ...]]:
+        ps = self.page_size
+        for j in range(len(tokens) // ps):
+            yield tuple(tokens[j * ps:(j + 1) * ps])
+
+    # -------------------------------------------------------------- lookup
+    def match(self, tokens: Sequence[int]) -> List[int]:
+        """Pages of the longest indexed prefix of ``tokens`` (full pages
+        only).  Touches every matched entry's LRU stamp — a shared prefix
+        in active use is the last thing eviction should take."""
+        node, pages, t = self._root, [], self._tick()
+        for key in self._page_keys(tokens):
+            child = node.children.get(key)
+            if child is None:
+                break
+            child.last_used = t
+            pages.append(child.page)
+            node = child
+        return pages
+
+    # ------------------------------------------------------------ mutation
+    def insert(self, tokens: Sequence[int], pages: Sequence[int]) -> List[int]:
+        """Register ``pages[j]`` as holding the K/V of token page ``j``.
+
+        Only ``len(tokens) // page_size`` full pages are walked; ``pages``
+        must supply at least that many entries.  Returns the pages the
+        index newly references — the caller owns refcounting and must
+        ``share()`` exactly those.  Where a node already exists, its page
+        is kept (by protocol the caller mapped that same page at
+        admission; a private duplicate such as a CoW fork is simply not
+        registered).
+        """
+        node, new, t = self._root, [], self._tick()
+        for key, page in zip(self._page_keys(tokens), pages):
+            child = node.children.get(key)
+            if child is None:
+                child = _Node(int(page))
+                node.children[key] = child
+                new.append(int(page))
+                self._n_pages += 1
+                self.version += 1
+            child.last_used = t
+            node = child
+        return new
+
+    # ------------------------------------------------------------ eviction
+    def evictable(self, can_evict: Callable[[int], bool],
+                  exclude: Optional[set] = None) -> int:
+        """How many pages :meth:`evict_lru` could reclaim right now.
+
+        A node is reclaimable when its own page passes ``can_evict``
+        (typically: the index holds the only reference) and nothing in
+        its subtree is pinned — leaf-first cascading can then take the
+        whole chain.  ``exclude`` masks pages the caller is about to
+        share (an admission must not count its own prefix as free
+        capacity)."""
+        exclude = exclude or set()
+
+        def walk(node: _Node) -> Tuple[int, bool]:
+            total, pinned = 0, False
+            for child in node.children.values():
+                sub, sub_pinned = walk(child)
+                total += sub
+                pinned |= sub_pinned
+            if node is self._root:
+                return total, pinned
+            if pinned or node.page in exclude or not can_evict(node.page):
+                return total, True
+            return total + 1, False
+
+        return walk(self._root)[0]
+
+    def evict_lru(self, n: int, can_evict: Callable[[int], bool]) -> List[int]:
+        """Drop up to ``n`` entries, least-recently-matched first, leaves
+        only (evicting a leaf may expose its parent next round).  Returns
+        the freed pages; the caller releases them to the allocator."""
+        freed: List[int] = []
+        while len(freed) < n:
+            best = None  # (last_used, parent, key, node)
+            stack: List[_Node] = [self._root]
+            while stack:
+                node = stack.pop()
+                for key, child in node.children.items():
+                    if child.children:
+                        stack.append(child)
+                    elif can_evict(child.page) and (
+                            best is None or child.last_used < best[0]):
+                        best = (child.last_used, node, key, child)
+            if best is None:
+                break
+            _, parent, key, node = best
+            del parent.children[key]
+            self._n_pages -= 1
+            self.version += 1
+            freed.append(node.page)
+        return freed

@@ -66,6 +66,63 @@ def test_allocator_double_free_raises():
         a.release([TRASH_PAGE])               # trash is never allocated
 
 
+def test_allocator_share_release_ordering():
+    """share/release ordering: a page frees exactly when its last holder
+    releases, whoever that is; releasing past zero is a double free."""
+    a = PageAllocator(6)
+    p = a.alloc(2)
+    a.share(p)                           # refcount 2
+    assert a.used == 2 and a.logical == 4
+    assert a.free == 3
+    assert a.release(p) == 0             # back to 1 — nothing freed
+    assert a.used == 2 and a.free == 3
+    assert a.release(p) == 2             # last holder: freed
+    assert a.used == 0 and a.free == 5
+    with pytest.raises(ValueError):
+        a.release(p)                     # double free after full release
+    with pytest.raises(ValueError):
+        a.share(p)                       # share of unallocated page
+
+
+def test_allocator_share_then_free_any_order():
+    a = PageAllocator(4)
+    (p,) = a.alloc(1)
+    a.share([p])
+    a.share([p])                         # three holders
+    assert a.refcount(p) == 3 and a.share_count == 2
+    a.release([p])
+    a.release([p])
+    assert a.used == 1 and a.refcount(p) == 1
+    a.release([p])
+    assert a.used == 0 and a.free == 3 and a.refcount(p) == 0
+
+
+def test_allocator_write_to_shared_is_hard_error():
+    a = PageAllocator(4)
+    (p,) = a.alloc(1)
+    a.assert_writable(p)                 # private: fine
+    a.share([p])
+    with pytest.raises(ValueError, match="shared"):
+        a.assert_writable(p)
+    a.release([p])
+    a.assert_writable(p)                 # private again
+    a.release([p])
+    with pytest.raises(ValueError, match="unallocated"):
+        a.assert_writable(p)
+
+
+def test_allocator_utilization_counts_shared_once():
+    """The naive refcount change would double-count shared pages in the
+    pool accounting; ``used`` is physical — N holders, one page."""
+    a = PageAllocator(8)
+    p = a.alloc(3)
+    a.share(p)
+    assert a.used == 3 and a.logical == 6
+    assert a.used + a.free == a.usable
+    assert a.utilization() == 3 / 7
+    assert a.peak_logical == 6 and a.peak_used == 3
+
+
 def test_allocator_fragmentation_accounting():
     """Interleaved alloc/free keeps used + free == usable exactly, and the
     peak tracks the high-water mark."""
