@@ -35,7 +35,14 @@ import numpy as np
 from repro.configs.registry import reduced_config
 from repro.models.lm import Model
 from repro.roofline.jaxpr_cost import trace_cost
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import (
+    STATUS_FAILED,
+    STATUS_OK,
+    TERMINAL_STATUSES,
+    Request,
+    ServeEngine,
+)
+from repro.serve.faults import Fault, FaultSchedule
 from repro.serve.kv_cache import cdiv
 
 
@@ -98,9 +105,11 @@ def _donated(engine: ServeEngine, params, slots: int, max_seq: int) -> bool:
     """Does the compiled fused step alias the cache buffers in place?"""
     cache = jax.eval_shape(lambda: engine.model.init_cache(slots, max_seq))
     arr = jax.ShapeDtypeStruct((slots,), jnp.int32)
+    mask = jax.ShapeDtypeStruct((slots,), jnp.bool_)
     txt = engine._fused_step.lower(
         jax.eval_shape(engine.model.init, jax.random.PRNGKey(0)),
-        cache, arr, arr, arr, arr, engine.attend_block).compile().as_text()
+        cache, arr, arr, arr, arr, mask,
+        engine.attend_block).compile().as_text()
     return "input_output_alias" in txt
 
 
@@ -411,7 +420,8 @@ def run_shared_prefix(smoke: bool = False, trials: int = 3) -> List[Dict]:
             "cow_forks": p.cow_forks,
             "evictions": p.evictions,
             "admit_to_first_ms": 1e3 * float(np.mean(
-                [s["admit_to_first_s"] for s in stats.values()])),
+                [s["admit_to_first_s"] for u, s in stats.items()
+                 if isinstance(u, int)])),
             "greedy_identical": True,
         })
     u, s = rows[0], rows[1]
@@ -426,7 +436,101 @@ def run_shared_prefix(smoke: bool = False, trials: int = 3) -> List[Dict]:
     return rows
 
 
-_SECTIONS = ("fastpath", "layouts", "page_sweep", "shared_prefix")
+def run_faults(smoke: bool = False) -> List[Dict]:
+    """Fault-injection sweep: seeded random schedules against ONE engine.
+
+    Each schedule mixes allocator OOM (denials and raises), NaN logits,
+    kernel failures, stragglers, spec-acceptance collapse, forced
+    deadlines, cancels, and page corruption.  Three hard gates, any
+    violation exits non-zero (the CI robustness gate):
+
+      parity     every request that still finishes OK is bit-identical
+                 to the fault-free baseline
+      partition  every request ends in exactly one terminal status
+      leaks      allocator audit clean and used_pages == 0 after every
+                 schedule
+
+    Plus a targeted-NaN subsection: poisoned logits for one uid must
+    fail only that uid — the quarantine granularity claim.
+    """
+    arch = "qwen2-1.5b"
+    if smoke:
+        slots, max_seq, n_req, max_new = 2, 64, 4, 8
+        plo, phi, n_schedules = 4, 10, 12
+    else:
+        slots, max_seq, n_req, max_new = 4, 128, 8, 16
+        plo, phi, n_schedules = 8, 24, 100
+    cfg = reduced_config(arch)
+    cfg = dataclasses.replace(cfg, max_seq=max_seq)
+    model = Model(cfg, compute_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    reqs = _requests(n_req, cfg.vocab, plo, phi, max_new, seed=4)
+    eng = ServeEngine(model, params, max_seq=max_seq, batch_slots=slots,
+                      temperature=0.0, seed=0, cache_layout="paged",
+                      page_size=8, max_recoveries=64)
+    base = eng.serve([dataclasses.replace(r, generated=None) for r in reqs])
+
+    counts: Dict[str, int] = {}
+    stragglers = 0
+    t0 = time.perf_counter()
+    for seed in range(n_schedules):
+        fs = FaultSchedule.random(seed, uids=tuple(r.uid for r in reqs),
+                                  max_step=24)
+        out = eng.serve([dataclasses.replace(r, generated=None)
+                         for r in reqs], faults=fs)
+        stt = {u: s["status"] for u, s in eng.last_stats.items()
+               if isinstance(u, int)}
+        if set(stt) != {r.uid for r in reqs} or not all(
+                v in TERMINAL_STATUSES for v in stt.values()):
+            raise SystemExit(f"PARTITION BROKEN (seed {seed}): {stt}")
+        for u, toks in out.items():
+            if toks != base[u]:
+                raise SystemExit(f"PARITY BROKEN (seed {seed}, uid {u}): "
+                                 f"OK output differs from fault-free run")
+        p = eng.last_pool_stats
+        if not p.audit_ok or p.used_pages != 0:
+            raise SystemExit(f"ALLOCATOR LEAK (seed {seed}): "
+                             f"used={p.used_pages} errors={p.audit_errors}")
+        for v in stt.values():
+            counts[v] = counts.get(v, 0) + 1
+        stragglers += len(eng.last_stats["stragglers"])
+    dt = time.perf_counter() - t0
+    rows: List[Dict] = [{
+        "section": "faults",
+        "mode": "random-sweep",
+        "schedules": n_schedules,
+        "requests_per_schedule": n_req,
+        "seconds": dt,
+        "status_counts": counts,
+        "recoveries": eng.recoveries,
+        "preemptions": eng.preemptions,
+        "straggler_events": stragglers,
+        "backend_degraded": eng.backend_degraded,
+        "parity_ok": True,
+        "leak_free": True,
+    }]
+
+    # targeted NaN: the blast radius must be exactly one request
+    fs = FaultSchedule([Fault("nan", step=1, uid=0, span=2)])
+    out = eng.serve([dataclasses.replace(r, generated=None) for r in reqs],
+                    faults=fs)
+    stt = {u: s["status"] for u, s in eng.last_stats.items()
+           if isinstance(u, int)}
+    if stt[0] != STATUS_FAILED or any(
+            v != STATUS_OK for u, v in stt.items() if u != 0):
+        raise SystemExit(f"NaN QUARANTINE BROKEN: {stt}")
+    if any(out[u] != base[u] for u in out):
+        raise SystemExit("NaN QUARANTINE BROKEN: batchmates diverged")
+    rows.append({
+        "section": "faults",
+        "mode": "targeted-nan",
+        "failed_uids": [0],
+        "survivors_identical": True,
+    })
+    return rows
+
+
+_SECTIONS = ("fastpath", "layouts", "page_sweep", "shared_prefix", "faults")
 
 
 def main(argv=None):
@@ -528,6 +632,25 @@ def main(argv=None):
                       f"{r['cow_forks']:4d} "
                       f"{r['admit_to_first_ms']:10.1f} ms")
         rows += prows
+
+    if "faults" in sections:
+        xrows = run_faults(smoke=args.smoke)
+        sweep = xrows[0]
+        print(f"\n== Fault injection: {sweep['schedules']} random "
+              f"schedules x {sweep['requests_per_schedule']} requests "
+              f"(parity/partition/leak gated) ==")
+        print(f"{'statuses':40s} {'recover':>8s} {'preempt':>8s} "
+              f"{'straggle':>9s} {'degraded':>9s} {'wall_s':>7s}")
+        status_s = " ".join(f"{k}={v}"
+                            for k, v in sorted(sweep["status_counts"].items()))
+        print(f"{status_s:40s} {sweep['recoveries']:8d} "
+              f"{sweep['preemptions']:8d} {sweep['straggler_events']:9d} "
+              f"{str(sweep['backend_degraded']):>9s} "
+              f"{sweep['seconds']:7.1f}")
+        print("targeted-NaN quarantine: failed uids "
+              f"{xrows[1]['failed_uids']}, survivors identical: "
+              f"{xrows[1]['survivors_identical']}")
+        rows += xrows
 
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)

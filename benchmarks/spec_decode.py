@@ -125,7 +125,8 @@ def run(smoke: bool = False, trials: int = 3) -> List[Dict]:
             ok = outputs == oracle
             parity = parity and ok
             accepts = [s.get("accept_rate", 1.0)
-                       for s in eng.last_stats.values()]
+                       for u, s in eng.last_stats.items()
+                       if isinstance(u, int)]
             accept = float(np.mean(accepts))
             attend = eng._attend_len(prompt_len + max_new + k)
             step_bytes = _verify_step_bytes(

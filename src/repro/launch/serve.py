@@ -15,6 +15,16 @@ physical pages (refcounted, copy-on-write) and prefill only their
 suffix — the per-request ``cached`` column shows how many prompt
 tokens came from the radix index instead of compute.
 
+Fault tolerance: ``--deadline-ms`` / ``--ttft-deadline-ms`` attach
+per-request deadlines (expired requests end TIMEOUT), ``--max-queue``
+bounds the waiting queue with ``--shed-policy`` picking the victim
+(overflow ends SHED), ``--max-retries`` caps requeues after a recovered
+mid-step failure, ``--audit`` sweeps the allocator/index invariants
+every scheduler round, and ``--inject-faults SEED`` runs a seeded
+random fault schedule (OOM, NaN, kernel failure, stragglers, spec
+collapse, cancels, page corruption) against the batch — the status
+column then shows each request's terminal state.
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
       --requests 6 --prompt-len 16 --max-new 12
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
@@ -23,6 +33,8 @@ tokens came from the radix index instead of compute.
       --cache-layout paged --spec-k 4 --draft self:2
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
       --cache-layout paged --prefix-sharing --shared-prefix 32
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
+      --cache-layout paged --inject-faults 0 --audit --deadline-ms 5000
 """
 
 from __future__ import annotations
@@ -37,6 +49,7 @@ import numpy as np
 from repro.configs.registry import reduced_config
 from repro.models.lm import Model
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.faults import FaultSchedule
 
 
 def main():
@@ -96,6 +109,29 @@ def main():
     ap.add_argument("--prompt-block", type=int, default=16,
                     help="admission bucket: prompts right-pad to a "
                          "multiple of this for the batched prefill")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request end-to-end deadline: requests that "
+                         "overrun end TIMEOUT instead of finishing")
+    ap.add_argument("--ttft-deadline-ms", type=float, default=None,
+                    help="per-request time-to-first-token deadline "
+                         "(expires only before the first token)")
+    ap.add_argument("--max-retries", type=int, default=2,
+                    help="requeues allowed per request after a recovered "
+                         "mid-step failure before it ends FAILED")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound on the waiting queue: overflow is shed "
+                         "per --shed-policy (default: unbounded)")
+    ap.add_argument("--shed-policy", default="reject-newest",
+                    choices=["reject-newest", "reject-largest"],
+                    help="overflow victim selection for --max-queue")
+    ap.add_argument("--audit", action="store_true",
+                    help="sweep allocator/index invariants every "
+                         "scheduler round (always swept once at the end)")
+    ap.add_argument("--inject-faults", type=int, default=None,
+                    metavar="SEED",
+                    help="run a seeded random fault schedule against the "
+                         "batch (OOM, NaN, kernel failure, stragglers, "
+                         "spec collapse, cancels, page corruption)")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
@@ -115,7 +151,10 @@ def main():
                          prefix_sharing=args.prefix_sharing,
                          spec_k=args.spec_k, draft=args.draft,
                          verify_backend=None if args.verify_backend == "auto"
-                         else args.verify_backend)
+                         else args.verify_backend,
+                         max_queue=args.max_queue,
+                         shed_policy=args.shed_policy,
+                         audit=args.audit)
 
     rng = np.random.default_rng(args.seed)
     shared = rng.integers(
@@ -124,21 +163,39 @@ def main():
                     prompt=shared + rng.integers(
                         0, cfg.vocab,
                         args.prompt_len - len(shared)).tolist(),
-                    max_new_tokens=args.max_new)
+                    max_new_tokens=args.max_new,
+                    deadline_ms=args.deadline_ms,
+                    ttft_deadline_ms=args.ttft_deadline_ms,
+                    max_retries=args.max_retries)
             for i in range(args.requests)]
+    faults = None
+    if args.inject_faults is not None:
+        faults = FaultSchedule.random(
+            args.inject_faults, uids=tuple(r.uid for r in reqs))
+        print(f"injecting (seed {args.inject_faults}): "
+              + ", ".join(f.kind + (f"@{f.step}" if f.span == 1
+                                    else f"@{f.step}+{f.span}")
+                          for f in faults.faults))
     t0 = time.perf_counter()
-    results = engine.serve(reqs)
+    results = engine.serve(reqs, faults=faults)
     dt = time.perf_counter() - t0
     n_tok = sum(len(v) for v in results.values())
-    print(f"{'req':>4s} {'tokens':>7s} {'cached':>7s} "
+    per_req = {u: s for u, s in engine.last_stats.items()
+               if isinstance(u, int)}
+    print(f"{'req':>4s} {'status':>9s} {'tokens':>7s} {'cached':>7s} "
           f"{'admit->first(ms)':>17s} "
           f"{'decode tok/s':>13s} {'e2e tok/s':>10s} {'accept':>7s} "
           f"{'preempts':>9s}")
-    for uid in sorted(results):
-        s = engine.last_stats[uid]
+    for uid in sorted(per_req):
+        s = per_req[uid]
+        if uid not in results:          # shed/timeout/cancelled/failed
+            reason = s.get("reason", "")
+            print(f"{uid:4d} {s['status']:>9s} {'—':>7s} {'—':>7s} "
+                  f"{reason:>17s}")
+            continue
         acc = (f"{s['accept_rate']:7.2f}" if "accept_rate" in s
                else f"{'—':>7s}")
-        print(f"{uid:4d} {len(results[uid]):7d} "
+        print(f"{uid:4d} {s['status']:>9s} {len(results[uid]):7d} "
               f"{int(s.get('cached_prefix_tokens', 0)):7d} "
               f"{1e3 * s['admit_to_first_s']:17.1f} {s['tok_s']:13.1f} "
               f"{s['e2e_tok_s']:10.1f} {acc} "
@@ -147,6 +204,18 @@ def main():
     print(f"\n{n_tok} tokens in {dt:.2f}s = {n_tok / dt:.1f} tok/s "
           f"({args.slots} slots, {args.cache_layout} cache{spec}, "
           f"{cfg.name})")
+    counts = {}
+    for s in per_req.values():
+        counts[s["status"]] = counts.get(s["status"], 0) + 1
+    lifecycle = " ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+    stragglers = engine.last_stats["stragglers"]
+    print(f"lifecycle: {lifecycle}, {engine.recoveries} recoveries, "
+          f"{len(stragglers)} straggler events"
+          + (", backend degraded to SW" if engine.backend_degraded else ""))
+    if engine.last_pool_stats is not None and args.audit:
+        p = engine.last_pool_stats
+        print(f"audit: {'clean' if p.audit_ok else p.audit_errors} "
+              f"(per-round sweep enabled)")
     if engine.last_pool_stats is not None:
         p = engine.last_pool_stats
         print(f"pool: {p.num_pages} pages x {p.page_size} tok, peak "

@@ -1,4 +1,28 @@
-from repro.serve.engine import Request, ServeEngine, sample_token  # noqa: F401
+from repro.serve.audit import (  # noqa: F401
+    AuditError,
+    AuditReport,
+    audit_allocator,
+    audit_manager,
+)
+from repro.serve.engine import (  # noqa: F401
+    SHED_POLICIES,
+    STATUS_CANCELLED,
+    STATUS_FAILED,
+    STATUS_OK,
+    STATUS_SHED,
+    STATUS_TIMEOUT,
+    TERMINAL_STATUSES,
+    Request,
+    ServeEngine,
+    sample_token,
+)
+from repro.serve.faults import (  # noqa: F401
+    FAULT_KINDS,
+    Fault,
+    FaultSchedule,
+    InjectedFault,
+    KernelBackendError,
+)
 from repro.serve.kv_cache import (  # noqa: F401
     CACHE_LAYOUTS,
     AdmitPlan,

@@ -1,0 +1,140 @@
+"""Allocator / block-table / prefix-index invariant auditor.
+
+The paged cache's correctness story rests on a handful of cross-layer
+invariants that no single class can check alone: the allocator knows
+refcounts, the manager knows which slot maps which page, the prefix
+index knows which pages it keeps alive.  A leak — a page whose refcount
+says two holders but only one table entry points at it, or an allocated
+page nobody maps — is invisible to all three until the pool mysteriously
+runs dry three ``serve()`` calls later.  This module sweeps all of it in
+one pass so a leak is caught *at the step that caused it*:
+
+  * allocator internals: ``used + free == usable``, the free list holds
+    no duplicates and no allocated (or trash) page, every refcount is
+    >= 1, ``logical`` equals the refcount sum;
+  * table <-> ownership: each slot's non-trash block-table entries are
+    exactly its ``owned`` pages, with no page mapped twice by one slot;
+  * refcount cross-check: for every allocated page, refcount ==
+    (number of slots mapping it) + (1 if the prefix index references
+    it) — a mismatch in either direction is a leak or a double-count;
+  * orphans: allocated pages with no holder at all.
+
+The sweep is host-side, O(pages + slots x blocks), and touches no device
+state — cheap enough to run at every step boundary under the engine's
+``audit=True`` debug flag, and after every ``serve()`` via
+:meth:`PagedCacheManager.stats` (the report rides in ``last_pool_stats``
+so tests and benchmarks assert leak-freedom without reaching into
+internals).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import List
+
+
+class AuditError(AssertionError):
+    """An invariant violation found by the audit sweep.
+
+    Subclasses AssertionError deliberately: an audit failure means the
+    accounting is corrupt, which is a bug, never a runtime condition the
+    engine's fault recovery should paper over.
+    """
+
+    def __init__(self, report: "AuditReport"):
+        super().__init__("allocator audit failed:\n  "
+                         + "\n  ".join(report.errors))
+        self.report = report
+
+
+@dataclasses.dataclass
+class AuditReport:
+    """Result of one audit sweep (``ok`` iff ``errors`` is empty)."""
+    ok: bool
+    errors: List[str] = dataclasses.field(default_factory=list)
+    orphan_pages: int = 0
+    refcount_mismatches: int = 0
+
+    def raise_if_failed(self):
+        if not self.ok:
+            raise AuditError(self)
+
+
+def audit_allocator(alloc) -> List[str]:
+    """Internal consistency of one :class:`PageAllocator` (no tables)."""
+    from repro.serve.kv_cache import TRASH_PAGE
+
+    errors: List[str] = []
+    free = list(alloc._free)
+    refs = dict(alloc._refs)
+    if alloc.used + alloc.free != alloc.usable:
+        errors.append(f"accounting: used {alloc.used} + free {alloc.free} "
+                      f"!= usable {alloc.usable}")
+    if len(set(free)) != len(free):
+        dup = [p for p, c in Counter(free).items() if c > 1]
+        errors.append(f"free list holds duplicates: {sorted(dup)}")
+    if TRASH_PAGE in set(free) or TRASH_PAGE in refs:
+        errors.append("trash page entered circulation")
+    overlap = set(free) & set(refs)
+    if overlap:
+        errors.append(f"pages both free and allocated: {sorted(overlap)}")
+    out_of_range = [p for p in list(refs) + free
+                    if not 0 < p < alloc.num_pages]
+    if out_of_range:
+        errors.append(f"pages outside [1, {alloc.num_pages}): "
+                      f"{sorted(set(out_of_range))}")
+    bad_refs = {p: r for p, r in refs.items() if r < 1}
+    if bad_refs:
+        errors.append(f"non-positive refcounts: {bad_refs}")
+    if alloc.logical != sum(refs.values()):
+        errors.append(f"logical {alloc.logical} != refcount sum "
+                      f"{sum(refs.values())}")
+    return errors
+
+
+def audit_manager(mgr) -> AuditReport:
+    """Full sweep over allocator + block tables + prefix index."""
+    from repro.serve.kv_cache import TRASH_PAGE
+
+    errors = audit_allocator(mgr.allocator)
+    refs = dict(mgr.allocator._refs)
+
+    # ---- table <-> owned consistency, per slot
+    expected: Counter = Counter()
+    for slot, owned in enumerate(mgr.owned):
+        row = [int(p) for p in mgr.tables[slot] if p != TRASH_PAGE]
+        if Counter(row) != Counter(owned):
+            errors.append(f"slot {slot}: table maps {sorted(row)} but "
+                          f"owns {sorted(owned)}")
+        dup = [p for p, c in Counter(row).items() if c > 1]
+        if dup:
+            errors.append(f"slot {slot}: pages mapped at two logical "
+                          f"blocks: {sorted(dup)}")
+        expected.update(set(row) | set(owned))
+
+    # ---- the index holds one reference per page it keeps alive
+    index_pages = list(mgr.index.pages()) if mgr.index is not None else []
+    dup = [p for p, c in Counter(index_pages).items() if c > 1]
+    if dup:
+        errors.append(f"prefix index references pages twice: {sorted(dup)}")
+    expected.update(set(index_pages))
+
+    # ---- refcount cross-check + orphan detection
+    mismatches = 0
+    orphans = 0
+    for page in sorted(set(refs) | set(expected)):
+        want, have = expected.get(page, 0), refs.get(page, 0)
+        if want == have:
+            continue
+        if have and not want:
+            orphans += 1
+            errors.append(f"orphan page {page}: refcount {have}, "
+                          f"no slot or index holds it")
+        else:
+            mismatches += 1
+            errors.append(f"page {page}: refcount {have} but "
+                          f"{want} holders (slots + index)")
+    return AuditReport(ok=not errors, errors=errors,
+                       orphan_pages=orphans,
+                       refcount_mismatches=mismatches)

@@ -23,9 +23,9 @@ the HW-path discipline from the paper applied end to end: decode + sample
 + position/remaining advance + done-mask fuse into a single dispatch;
 ``donate_argnums`` on the cache lets XLA alias the KV buffers in place;
 attention reads are bounded to the live prefix via a bucketed static
-``attend_len``; the only host transfer per token is the (tokens, done)
-pair.  The paged step additionally reads its block tables, uploaded only
-when the allocator changed them — never per token.
+``attend_len``; the only host transfer per token is the (tokens, done,
+bad) triple.  The paged step additionally reads its block tables,
+uploaded only when the allocator changed them — never per token.
 
 Sampling is reproducible under continuous batching: the key for the
 token at absolute position P of request ``uid`` is
@@ -55,6 +55,37 @@ linger in the index as reclaimable cache (LRU-evicted under allocation
 pressure).  Greedy outputs are bit-identical to sharing-disabled paged
 serving — sharing is invisible below the block tables.
 
+Fault tolerance — every request leaves ``serve()`` with exactly one
+terminal status in ``last_stats[uid]["status"]``:
+
+  ok          completed; its tokens are in the returned dict
+  shed        rejected at enqueue by the bounded waiting queue
+              (``max_queue`` + ``shed_policy``: reject-newest or
+              reject-largest)
+  timeout     its ``deadline_ms`` (enqueue->finish) or
+              ``ttft_deadline_ms`` (enqueue->first token) expired
+  cancelled   :meth:`cancel`\\ led (or fault-injected cancel)
+  failed      quarantined (non-finite logits poison only the offending
+              row — the NaN guard rides inside the fused step, so the
+              rest of the batch commits normally), or its capped
+              retry-with-requeue budget ran out across step-restart
+              recoveries
+
+Recovery is step-restart: a recoverable mid-step exception (allocator
+OOM, kernel-backend failure) releases every live slot, requeues each
+request with its generated tokens folded into its prompt (charging one
+retry), and rebuilds the manager + device pool from scratch — the
+``(uid, position)`` sampling keys make the replay bit-identical, the
+same property preemption rides on.  A kernel-backend failure
+additionally degrades the engine onto the chunked-``jnp`` SW path
+(``backend_degraded``) — the paper's HW-vs-SW interchangeability as a
+runtime policy.  Speculative decoding auto-disables per request when its
+acceptance collapses (window of 1-token commits) and re-enables after a
+cooldown.  ``repro.serve.faults`` injects all of these
+deterministically; ``repro.serve.audit`` sweeps the allocator / block
+table / prefix index invariants per round under ``audit=True`` and
+always after ``serve()`` (via ``last_pool_stats``).
+
 The seed per-token-dispatch loop is preserved under ``fused=False`` as
 the benchmark baseline (``benchmarks/serve_decode.py``).
 """
@@ -62,6 +93,7 @@ the benchmark baseline (``benchmarks/serve_decode.py``).
 from __future__ import annotations
 
 import dataclasses
+import statistics
 import time
 from collections import deque
 from typing import Any, Dict, List, Optional
@@ -71,6 +103,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve import spec_decode
+from repro.serve.audit import AuditError
+from repro.serve.faults import InjectedFault, KernelBackendError, poison_pages
 from repro.serve.kv_cache import (
     CACHE_LAYOUTS,
     AdmitPlan,
@@ -83,6 +117,20 @@ from repro.serve.kv_cache import (
     write_slots,
 )
 from repro.serve.prefix_index import PrefixIndex
+
+# terminal request statuses (last_stats[uid]["status"]) — every request
+# handed to serve() ends in exactly one of these
+STATUS_OK = "ok"
+STATUS_SHED = "shed"
+STATUS_TIMEOUT = "timeout"
+STATUS_CANCELLED = "cancelled"
+STATUS_FAILED = "failed"
+TERMINAL_STATUSES = (STATUS_OK, STATUS_SHED, STATUS_TIMEOUT,
+                     STATUS_CANCELLED, STATUS_FAILED)
+
+# bounded-queue shed policies: who gets rejected when the waiting queue
+# overflows max_queue
+SHED_POLICIES = ("reject-newest", "reject-largest")
 
 
 def _round_up(x: int, block: int) -> int:
@@ -107,6 +155,19 @@ class Request:
     # participate in speculative windows when the engine runs spec_k > 1;
     # spec=False requests share the batch committing one token per step
     spec: bool = True
+    # ---- lifecycle (all optional; None = unbounded) ----
+    # wall-clock budget from enqueue to completion; expiry -> TIMEOUT
+    deadline_ms: Optional[float] = None
+    # wall-clock budget from enqueue to the first token; expiry -> TIMEOUT
+    ttft_deadline_ms: Optional[float] = None
+    # step-restart recoveries this request may ride before FAILED
+    max_retries: int = 2
+    # internal resume bookkeeping: how many ``generated`` tokens are
+    # already folded into ``prompt``.  A preemption/recovery resume rides
+    # a copy whose prompt absorbs the generated-so-far suffix; folding
+    # the *full* list again on a second preemption would duplicate the
+    # earlier tokens (generated is the whole-output accumulator).
+    folded: int = 0
 
 
 # families for which right-padded prefill is exact: cache purely positional
@@ -126,7 +187,15 @@ class ServeEngine:
                  num_pages: Optional[int] = None,
                  prefix_sharing: bool = False,
                  spec_k: int = 1, draft=None,
-                 verify_backend: Optional[str] = None):
+                 verify_backend: Optional[str] = None,
+                 max_queue: Optional[int] = None,
+                 shed_policy: str = "reject-newest",
+                 audit: bool = False, faults=None,
+                 max_recoveries: int = 2,
+                 straggler_factor: float = 3.0,
+                 straggler_window: int = 20,
+                 spec_disable_window: int = 8,
+                 spec_cooldown: int = 16):
         if cache_layout not in CACHE_LAYOUTS:
             raise ValueError(f"cache_layout must be one of {CACHE_LAYOUTS}; "
                              f"got {cache_layout!r}")
@@ -138,6 +207,12 @@ class ServeEngine:
                              "cache_layout='paged'")
         if spec_k > 1 and not fused:
             raise ValueError("speculative decoding requires fused=True")
+        if shed_policy not in SHED_POLICIES:
+            raise ValueError(f"shed_policy must be one of {SHED_POLICIES}; "
+                             f"got {shed_policy!r}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1 (or None for "
+                             f"unbounded); got {max_queue}")
         self.model = model
         self.params = params
         self.max_seq = max_seq
@@ -151,6 +226,22 @@ class ServeEngine:
         self.prefix_sharing = prefix_sharing
         self.spec_k = spec_k
         self.verify_backend = verify_backend
+        # ---- lifecycle / fault-tolerance policy
+        self.max_queue = max_queue
+        self.shed_policy = shed_policy
+        self.audit = audit
+        self.faults = faults            # default FaultSchedule (or None)
+        self.max_recoveries = max_recoveries
+        self.straggler_factor = straggler_factor
+        self.straggler_window = straggler_window
+        self.spec_disable_window = spec_disable_window
+        self.spec_cooldown = spec_cooldown
+        self._draft_spec = draft
+        self._seed = seed
+        self._cache_shardings = cache_shardings
+        self._cancel_uids: set = set()
+        self.backend_degraded = False   # kernel -> SW fallback engaged
+        self.recoveries = 0             # step restarts, cumulative
         if prefix_sharing:
             if cache_layout != "paged":
                 raise ValueError("prefix sharing maps prompt prefixes "
@@ -183,11 +274,14 @@ class ServeEngine:
                     "pool and cannot shard the paged page pool; sharded "
                     "paged caches are a ROADMAP item")
         # observability, refreshed by every serve() call
-        self.last_stats: Dict[int, Dict[str, float]] = {}
+        self.last_stats: Dict[Any, Any] = {}
         self.last_pool_stats = None
         self.preemptions = 0
 
-        # sampling keys derive from (uid, position) — see module docstring
+        # sampling keys derive from (uid, position) — see module docstring.
+        # Built once: it never touches the model, so it survives the
+        # kernel->SW degradation rebuild unchanged (bit-parity across the
+        # fallback rides on this).
         sample_base = jax.random.PRNGKey(seed)
         temperature_ = temperature
 
@@ -203,6 +297,22 @@ class ServeEngine:
                     keys, logits).astype(jnp.int32)
 
         self._sample_at = sample_at
+        self.draft_model = self.draft_params = None
+        self._build_steps()
+
+    # ---------------------------------------------------------- step build
+    def _build_steps(self):
+        """(Re)build every jitted step function from ``self.model``.
+
+        Called at construction and again by :meth:`_degrade_to_sw`, which
+        swaps the model onto the chunked-``jnp`` backends and must re-jit
+        everything that closed over the old one.  Keeping all model
+        closures here is what makes the degradation a rebuild instead of
+        a special case threaded through the scheduler.
+        """
+        model = self.model
+        max_seq = self.max_seq
+        sample_at = self._sample_at
 
         def prefill_fn(params, batch):
             return model.prefill(params, batch, max_seq)
@@ -221,24 +331,31 @@ class ServeEngine:
             return logits, cache
 
         def fused_step_fn(params, cache, tok, pos, remaining, uids,
-                          attend_len):
+                          nan_mask, attend_len):
             """One decode token for every slot, single dispatch.
 
-            Returns (cache, next_tok, pos, remaining, done); the cache
-            argument is donated — XLA writes the new K/V row through the
-            existing buffers instead of copying the pool.  The sampled
+            Returns (cache, next_tok, pos, remaining, done, bad); the
+            cache argument is donated — XLA writes the new K/V row through
+            the existing buffers instead of copying the pool.  The sampled
             token sits at position pos+1, hence its key position.
+            ``nan_mask`` rows get their logits poisoned (fault injection
+            riding the real guard); ``bad`` flags rows whose logits are
+            non-finite for any reason — the scheduler quarantines those
+            requests instead of committing garbage.
             """
             logits, cache = model.decode_step(params, cache, tok, pos,
                                               attend_len, unroll=True)
+            logits = jnp.where(nan_mask[:, None],
+                               jnp.asarray(jnp.nan, logits.dtype), logits)
+            bad = ~jnp.all(jnp.isfinite(logits), axis=-1)
             nxt = sample_at(logits, pos + 1, uids)
             pos = pos + 1
             remaining = remaining - 1
             done = (remaining <= 0) | (pos >= max_seq - 1)
-            return cache, nxt, pos, remaining, done
+            return cache, nxt, pos, remaining, done, bad
 
         def paged_step_fn(params, pool, block_tables, tok, pos, remaining,
-                          uids, attend_len):
+                          uids, nan_mask, attend_len):
             """Paged twin of fused_step_fn: the page pool is donated, the
             block tables are a read-only input (uploaded at allocator
             boundaries, reused across steps)."""
@@ -246,47 +363,51 @@ class ServeEngine:
             logits, cache = model.decode_step(params, cache, tok, pos,
                                               attend_len)
             pool = {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]}
+            logits = jnp.where(nan_mask[:, None],
+                               jnp.asarray(jnp.nan, logits.dtype), logits)
+            bad = ~jnp.all(jnp.isfinite(logits), axis=-1)
             nxt = sample_at(logits, pos + 1, uids)
             pos = pos + 1
             remaining = remaining - 1
             done = (remaining <= 0) | (pos >= max_seq - 1)
-            return pool, nxt, pos, remaining, done
+            return pool, nxt, pos, remaining, done, bad
 
         kw: Dict[str, Any] = {}
         fkw: Dict[str, Any] = {}
-        if cache_shardings is not None:
-            kw["out_shardings"] = (None, cache_shardings)
-            fkw["out_shardings"] = (cache_shardings, None, None, None, None)
+        if self._cache_shardings is not None:
+            kw["out_shardings"] = (None, self._cache_shardings)
+            fkw["out_shardings"] = (self._cache_shardings, None, None, None,
+                                    None, None)
         self._prefill = jax.jit(prefill_fn)
         self._prefill_padded = jax.jit(prefill_padded_fn)
         self._prefill_bucket = jax.jit(prefill_bucket_fn)
         self._decode = jax.jit(decode_fn, **kw)
         # donate cache/pos/remaining; tok is retained by callers
         # (generate stacks the per-step tokens), so it stays undonated
-        self._fused_step = jax.jit(fused_step_fn, static_argnums=(6,),
+        self._fused_step = jax.jit(fused_step_fn, static_argnums=(7,),
                                    donate_argnums=(1, 3, 4), **fkw)
-        self._paged_step = jax.jit(paged_step_fn, static_argnums=(7,),
+        self._paged_step = jax.jit(paged_step_fn, static_argnums=(8,),
                                    donate_argnums=(1, 4, 5))
 
         # ---- speculative decoding: draft + fused propose/verify/accept
-        self.draft_model = self.draft_params = None
-        if spec_k > 1:
+        if self.spec_k > 1:
             self.draft_model, self.draft_params = spec_decode.resolve_draft(
-                model, params, draft, seed=seed)
+                model, self.params, self._draft_spec, seed=self._seed)
             self._spec_step = spec_decode.build_spec_step(
                 model, self.draft_model, sample_at, max_seq=max_seq,
-                spec_k=spec_k, verify_backend=verify_backend)
+                spec_k=self.spec_k, verify_backend=self.verify_backend)
+            draft_model = self.draft_model
 
             def draft_prefill_fn(dparams, batch, last_pos):
                 # pad to max_seq: the draft cache is a dense slot pool
-                return self.draft_model.prefill(dparams, batch, max_seq,
-                                                last_pos)
+                return draft_model.prefill(dparams, batch, max_seq,
+                                           last_pos)
 
             self._draft_prefill = jax.jit(draft_prefill_fn)
 
         # ---- prefix sharing: suffix prefill through the paged cache
-        if prefix_sharing:
-            vb = verify_backend
+        if self.prefix_sharing:
+            vb = self.verify_backend
 
             def suffix_prefill_fn(params, pool, block_tables, toks,
                                   start_pos, last_idx, attend_len):
@@ -315,8 +436,17 @@ class ServeEngine:
         return self._decode(self.params, cache, tokens, pos)
 
     def fused_step(self, cache, tok, pos, remaining, uids, attend_len: int):
+        """Public fused step (no injection): a zero nan_mask rides along
+        so the NaN guard is always armed."""
+        mask = jnp.zeros(tok.shape, jnp.bool_)
         return self._fused_step(self.params, cache, tok, pos, remaining,
-                                uids, attend_len)
+                                uids, mask, attend_len)
+
+    def cancel(self, uid: int):
+        """Request cancellation of ``uid``: queued -> CANCELLED at the
+        next round; live -> slot released, partial output discarded.
+        Unknown uids are remembered until a serve() sees them."""
+        self._cancel_uids.add(uid)
 
     def _attend_len(self, needed: int) -> int:
         """Static attention bound: ``needed`` rounded up to the bucket."""
@@ -354,36 +484,53 @@ class ServeEngine:
         remaining = jnp.full((b,), n_tokens - 1, jnp.int32)
         for i in range(n_tokens - 1):
             attend = self._attend_len(s + offset + i + 1)
-            cache, tok, pos, remaining, _done = self.fused_step(
+            cache, tok, pos, remaining, _done, _bad = self.fused_step(
                 cache, tok, pos, remaining, uids, attend)
             out.append(tok)
         return jnp.stack(out, axis=1)
 
     # ------------------------------------------------- continuous batching
-    def serve(self, requests: List[Request]) -> Dict[int, List[int]]:
+    def serve(self, requests: List[Request], faults=None) -> Dict[int, List[int]]:
         """Scheduler: waiting queue -> admission -> joint decode.
 
         Admission is gated on a free slot (dense) or a free slot *and*
         enough free pages for the prompt (paged); paged sequences grow
         page-by-page at step boundaries and preempt-and-requeue when the
-        pool exhausts.  Returns {uid: generated tokens}; per-request
-        latency lands in ``self.last_stats`` and pool accounting in
-        ``self.last_pool_stats``.
+        pool exhausts.  Returns {uid: generated tokens} for requests that
+        finished OK; every request — OK or not — gets a terminal
+        ``status`` (one of :data:`TERMINAL_STATUSES`) plus latency
+        figures in ``self.last_stats[uid]``, watchdog events in
+        ``self.last_stats["stragglers"]``, and pool accounting (with the
+        invariant-audit verdict) in ``self.last_pool_stats``.
+
+        ``faults`` overrides the engine's default
+        :class:`~repro.serve.faults.FaultSchedule` for this call only —
+        the jit caches are per-engine, so sweeping many schedules through
+        one engine never recompiles.
         """
-        st = _SchedState(
-            queue=deque(requests),
-            mgr=PagedCacheManager(
-                self.num_pages, self.page_size, self.slots, self.max_seq,
-                prefix_index=PrefixIndex(self.page_size)
-                if self.prefix_sharing else None)
-            if self.cache_layout == "paged" else None,
-            t0=time.perf_counter(),
-        )
+        st = _SchedState(queue=deque(requests), mgr=None,
+                         t0=time.perf_counter())
+        st.faults = faults if faults is not None else self.faults
+        for i, req in enumerate(requests):
+            if req.uid in st.stats:
+                raise ValueError(f"duplicate request uid {req.uid}: the "
+                                 "status ledger and sampling keys are "
+                                 "keyed by uid")
+            st.arrival[req.uid] = i
+            st.stats[req.uid] = {"enqueued_s": 0.0, "preemptions": 0,
+                                 "retries": 0, "status": None}
+        st.has_deadlines = any(
+            r.deadline_ms is not None or r.ttft_deadline_ms is not None
+            for r in requests)
+        self.last_stats = st.stats
+        self.preemptions = 0
+        self._shed_overflow(st)
+        self._init_mgr(st)
         if st.mgr is not None:
             # fail fast, before any device work: a request that can never
             # fit the pool must not abort a half-served batch later (or,
             # worse, spin in the admission gate forever)
-            for req in requests:
+            for req in st.queue:
                 if len(req.prompt) >= self.max_seq:
                     raise ValueError(
                         f"request {req.uid}: prompt of {len(req.prompt)} "
@@ -405,65 +552,346 @@ class ServeEngine:
                         + (f"(incl. the spec_k={self.spec_k} window "
                            f"overhang) " if self.spec_k > 1 else "")
                         + f", pool has {st.mgr.allocator.usable}")
+        self._init_device(st)
+
+        try:
+            while st.queue or st.live:
+                st.rnd += 1
+                self._apply_round_faults(st)
+                self._expire_and_cancel(st)
+                if not (st.queue or st.live):
+                    break
+                try:
+                    if self.prefix_sharing:
+                        self._admit_shared(st)
+                    else:
+                        self._admit(st)
+                    if st.live:
+                        if st.mgr is not None:
+                            self._grow_or_preempt(st)
+                        if st.live:
+                            self._timed_step(st)
+                except Exception as exc:
+                    if (isinstance(exc, AuditError)
+                            or (isinstance(exc, InjectedFault) and exc.fatal)
+                            or st.recoveries >= self.max_recoveries):
+                        raise
+                    self._recover(st, exc)
+                if self.audit and st.mgr is not None:
+                    st.mgr.audit().raise_if_failed()
+        except BaseException as exc:
+            # exception safety: whatever escapes, no slot or page stays
+            # held and every in-flight request gets a terminal status —
+            # the next serve() on this engine starts clean
+            self._abort(st, exc)
+            raise
+
+        missing = [uid for uid, s in st.stats.items()
+                   if s.get("status") not in TERMINAL_STATUSES]
+        if missing:  # the statuses partition the request set, always
+            raise RuntimeError(
+                f"requests left without a terminal status: {missing}")
+        self._cancel_uids -= set(st.stats)
+        st.stats["stragglers"] = st.stragglers
+        if st.mgr is not None:
+            self.last_pool_stats = st.mgr.stats()
+        return st.results
+
+    # ----------------------------------------------------- lifecycle setup
+    def _shed_overflow(self, st: "_SchedState"):
+        """Bounded waiting queue: reject down to ``max_queue`` before any
+        device work.  reject-newest drops the latest arrivals (FIFO
+        fairness); reject-largest drops the biggest worst-case footprint
+        (prompt + budget — protect many small requests over one huge
+        one), newest-first among ties.  Requeues (preemption / retry) are
+        exempt: the bound applies at enqueue, not during recovery."""
+        if self.max_queue is None:
+            return
+        while len(st.queue) > self.max_queue:
+            if self.shed_policy == "reject-newest":
+                victim = max(st.queue, key=lambda r: st.arrival[r.uid])
+            else:
+                victim = max(st.queue,
+                             key=lambda r: (len(r.prompt) + r.max_new_tokens,
+                                            st.arrival[r.uid]))
+            st.queue.remove(victim)
+            self._terminal(
+                st, victim, STATUS_SHED,
+                reason=f"queue overflow (max_queue={self.max_queue}, "
+                       f"policy={self.shed_policy})")
+
+    def _init_mgr(self, st: "_SchedState"):
+        """Fresh paged-cache manager (+ prefix index) with the OOM fault
+        hook installed; recovery calls this again — a rebuilt pool must
+        never be reachable from a stale index."""
+        if self.cache_layout != "paged":
+            st.mgr = None
+            return
+        st.mgr = PagedCacheManager(
+            self.num_pages, self.page_size, self.slots, self.max_seq,
+            prefix_index=PrefixIndex(self.page_size)
+            if self.prefix_sharing else None)
+        if st.faults is not None:
+            fs = st.faults
+
+            def oom_hook(n, _st=st, _fs=fs):
+                f = _fs.oom_raise(_st.rnd)
+                if f is not None:
+                    raise InjectedFault(
+                        f"injected allocator OOM (hard) at round {_st.rnd}",
+                        fatal=f.fatal)
+                return _fs.oom_denied(_st.rnd)
+
+            st.mgr.allocator.fault_hook = oom_hook
+
+    def _init_device(self, st: "_SchedState"):
+        """Fresh device-side pool + slot state (used at serve() start and
+        again by step-restart recovery)."""
         if st.mgr is not None:
             st.pool = self.model.init_cache(
                 self.slots, self.max_seq, layout="paged",
                 page_size=self.page_size, num_pages=self.num_pages)
             st.pool.pop("block_tables")  # the manager owns the mapping
             st.bt_dev = st.mgr.device_tables()
+            st.cache = None
         else:
             st.cache = self.model.init_cache(self.slots, self.max_seq)
         st.pos = jnp.zeros((self.slots,), jnp.int32)
         st.tok = jnp.zeros((self.slots,), jnp.int32)
         st.remaining = jnp.zeros((self.slots,), jnp.int32)
         st.uids = jnp.zeros((self.slots,), jnp.int32)
+        st.zero_mask = jnp.zeros((self.slots,), jnp.bool_)
         st.slot_pos = [0] * self.slots        # host mirror (no device sync)
+        st.plans.clear()
+        st.gate_block = None
         if self.spec_k > 1:
             st.draft_cache = self.draft_model.init_cache(self.slots,
                                                          self.max_seq)
             st.spec_mask = jnp.zeros((self.slots,), jnp.bool_)
-        self.last_stats = st.stats
-        self.preemptions = 0
 
-        while st.queue or st.live:
-            if self.prefix_sharing:
-                self._admit_shared(st)
-            else:
-                self._admit(st)
-            if not st.live:
-                # every admitted request completed at admission (1-token
-                # budgets); keep draining the queue
+    # ------------------------------------------------------- fault plumbing
+    def _apply_round_faults(self, st: "_SchedState"):
+        """Injections that land at round boundaries: cancels, forced
+        deadline expiries, and page corruption (NaN-poisoning a live
+        physical page — the corruption then surfaces as non-finite logits
+        in whichever slot reads it, driving the same quarantine real
+        corruption would)."""
+        fs = st.faults
+        if fs is None:
+            return
+        for uid in fs.cancels_at(st.rnd):
+            self._cancel_uids.add(uid)
+        for uid in fs.deadline_expiries_at(st.rnd):
+            st.forced_expired.add(uid)
+        for f in fs.corruptions_at(st.rnd):
+            if st.mgr is None or st.pool is None:
                 continue
-            if st.mgr is not None:
-                self._grow_or_preempt(st)
-                if not st.live:
-                    continue
-            self._step(st)
+            mapped = sorted({p for owned in st.mgr.owned for p in owned})
+            page = fs.corruption_target(f, st.rnd, mapped)
+            if page is None or not 0 < page < self.num_pages:
+                continue
+            st.pool = poison_pages(st.pool,
+                                   jnp.asarray([page], jnp.int32))
+
+    def _expired(self, st: "_SchedState", req: Request,
+                 now_ms: float) -> Optional[str]:
+        """Why this request's deadline is up (None if it is not)."""
+        if req.uid in st.forced_expired:
+            return "deadline"
+        if req.deadline_ms is not None and now_ms > req.deadline_ms:
+            return "deadline"
+        if (req.ttft_deadline_ms is not None and now_ms > req.ttft_deadline_ms
+                and "first_token_s" not in st.stats[req.uid]):
+            return "ttft_deadline"
+        return None
+
+    def _expire_and_cancel(self, st: "_SchedState"):
+        """Terminal-ize cancelled and deadline-expired requests, queued
+        and live alike; a live victim's slot frees immediately."""
+        if not (self._cancel_uids or st.forced_expired or st.has_deadlines):
+            return
+        now_ms = (time.perf_counter() - st.t0) * 1e3
+        keep: deque = deque()
+        while st.queue:
+            req = st.queue.popleft()
+            why = self._expired(st, req, now_ms)
+            if req.uid in self._cancel_uids:
+                self._terminal(st, req, STATUS_CANCELLED, reason="cancelled")
+            elif why is not None:
+                self._terminal(st, req, STATUS_TIMEOUT, reason=why)
+            else:
+                keep.append(req)
+        st.queue = keep
+        for slot in list(st.live):
+            req = st.live[slot]
+            why = self._expired(st, req, now_ms)
+            if req.uid in self._cancel_uids:
+                self._terminal(st, req, STATUS_CANCELLED, slot=slot,
+                               reason="cancelled")
+            elif why is not None:
+                self._terminal(st, req, STATUS_TIMEOUT, slot=slot,
+                               reason=why)
+
+    def _fault_mask(self, st: "_SchedState", uids: List[Optional[int]]):
+        """(slots,) bool device mask over live rows matching the targeted
+        uids (None targets every live row)."""
+        if not uids:
+            return st.zero_mask
+        mask = np.zeros((self.slots,), bool)
+        for slot, req in st.live.items():
+            if any(u is None or u == req.uid for u in uids):
+                mask[slot] = True
+        return jnp.asarray(mask)
+
+    def _nan_mask(self, st: "_SchedState"):
+        fs = st.faults
+        if fs is None:
+            return st.zero_mask
+        return self._fault_mask(st, fs.nan_uids(st.rnd))
+
+    def _collapse_mask(self, st: "_SchedState"):
+        fs = st.faults
+        if fs is None:
+            return st.zero_mask
+        return self._fault_mask(st, fs.collapse_uids(st.rnd))
+
+    # ------------------------------------------------------------ recovery
+    def _recover(self, st: "_SchedState", exc: Exception):
+        """Step-restart recovery: release everything, requeue every live
+        request with its generated prefix folded into its prompt (one
+        retry charged; budget exhausted -> FAILED), and rebuild the
+        manager + device pool from scratch.  The wholesale rebuild is
+        deliberate: after an arbitrary mid-step exception the pool, the
+        donated device buffers, and the prefix index cannot be trusted to
+        agree, and a stale index pointing into a reinitialized pool would
+        serve zeroed K/V as if it were cached prefix.  Kernel-backend
+        failures additionally degrade the engine onto the chunked-jnp SW
+        path before the replay."""
+        st.recoveries += 1
+        self.recoveries += 1
+        if isinstance(exc, KernelBackendError) or not isinstance(
+                exc, InjectedFault):
+            # injected non-kernel faults (hard OOM) restart on the same
+            # backends; anything surfacing from a real dispatch — or the
+            # explicit kernel fault — falls back to the SW path
+            self._degrade_to_sw()
+        now = time.perf_counter() - st.t0
+        for slot in sorted(st.live, key=lambda s: st.admit_seq[s],
+                           reverse=True):
+            req = st.live.pop(slot)
+            s = st.stats[req.uid]
+            if s["retries"] >= req.max_retries:
+                s["status"] = STATUS_FAILED
+                s["reason"] = (f"retries exhausted after "
+                               f"{type(exc).__name__}: {exc}")
+                s["finished_s"] = now
+                s["tokens"] = len(req.generated or [])
+                st.spec_hist.pop(req.uid, None)
+                continue
+            s["retries"] += 1
+            resume = dataclasses.replace(
+                req, prompt=list(req.prompt) + req.generated[req.folded:],
+                folded=len(req.generated))
+            st.resumed.add(id(resume))
+            st.queue.appendleft(resume)
+        self._init_mgr(st)
+        self._init_device(st)
+
+    def _degrade_to_sw(self):
+        """Kernel -> SW fallback: rebuild the model on the chunked-jnp
+        decode/attention backends and re-jit every step function.  The
+        params are untouched and sampling keys are model-independent, so
+        outputs stay bit-identical where both paths are exact — the
+        paper's HW/SW interchangeability exercised as a runtime policy."""
+        if self.backend_degraded:
+            return
+        from repro.models.lm import Model
+
+        m = self.model
+        self.model = Model(m.cfg, wf=m.wf, chunk_q=m.chunk_q, remat=m.remat,
+                           param_dtype=m.param_dtype,
+                           compute_dtype=m.compute_dtype,
+                           act_sharding=m.act_sharding,
+                           remat_policy=m.remat_policy,
+                           decode_backend="jnp", attn_backend="jnp")
+        self.verify_backend = "jnp"
+        self._build_steps()
+        self.backend_degraded = True
+
+    def _abort(self, st: "_SchedState", exc: BaseException):
+        """Unwind on an escaping exception: release every live slot, mark
+        everything still in flight FAILED, and leave last_stats /
+        last_pool_stats consistent (the allocator must audit clean — the
+        regression tests assert it)."""
+        for slot in list(st.live):
+            self._terminal(st, st.live[slot], STATUS_FAILED, slot=slot,
+                           reason=f"aborted: {type(exc).__name__}: {exc}")
+        while st.queue:
+            self._terminal(st, st.queue.popleft(), STATUS_FAILED,
+                           reason=f"aborted: {type(exc).__name__}: {exc}")
+        st.stats["stragglers"] = st.stragglers
         if st.mgr is not None:
+            st.mgr.allocator.fault_hook = None  # audit/stats must not trip
             self.last_pool_stats = st.mgr.stats()
-        return st.results
 
     # --------------------------------------------------------------- steps
+    def _timed_step(self, st: "_SchedState"):
+        """One decode step under the watchdog: injected kernel faults and
+        straggler stalls land here, and any step whose wall time blows
+        past ``straggler_factor`` x the recent median is recorded in
+        ``last_stats['stragglers']`` (the trainer's watchdog ported to
+        the serve loop)."""
+        fs = st.faults
+        sleep = 0.0
+        if fs is not None:
+            f = fs.kernel_at(st.rnd)
+            if f is not None:
+                raise KernelBackendError(
+                    f"injected kernel-backend failure at round {st.rnd}",
+                    fatal=f.fatal)
+            sleep = fs.straggler_sleep(st.rnd)
+        live_before = len(st.live)
+        t_start = time.perf_counter()
+        if sleep:
+            time.sleep(sleep)
+        self._step(st)
+        dt = time.perf_counter() - t_start
+        window = st.durations[-self.straggler_window:]
+        if len(window) >= 5:
+            med = statistics.median(window)
+            if dt > self.straggler_factor * med:
+                st.stragglers.append({
+                    "step": st.step_no, "duration_s": dt, "median_s": med,
+                    "live_slots": live_before})
+        st.durations.append(dt)
+        st.step_no += 1
+
     def _step(self, st: "_SchedState"):
         if self.spec_k > 1:
             return self._spec_step_run(st)
         needed = max(st.slot_pos[s] for s in st.live) + 1
         attend = self._attend_len(needed)
+        nan_mask = self._nan_mask(st)
         if self.fused and st.mgr is not None:
             if st.mgr.dirty:
                 st.bt_dev = st.mgr.device_tables()
-            st.pool, st.tok, st.pos, st.remaining, done = self._paged_step(
+            (st.pool, st.tok, st.pos, st.remaining, done,
+             bad) = self._paged_step(
                 self.params, st.pool, st.bt_dev, st.tok, st.pos,
-                st.remaining, st.uids, attend)
-            nxt_h, done_h = jax.device_get((st.tok, done))
+                st.remaining, st.uids, nan_mask, attend)
+            nxt_h, done_h, bad_h = jax.device_get((st.tok, done, bad))
         elif self.fused:
-            st.cache, st.tok, st.pos, st.remaining, done = self._fused_step(
+            (st.cache, st.tok, st.pos, st.remaining, done,
+             bad) = self._fused_step(
                 self.params, st.cache, st.tok, st.pos, st.remaining,
-                st.uids, attend)
+                st.uids, nan_mask, attend)
             # the one host transfer per token: slot-count ints + bools
-            nxt_h, done_h = jax.device_get((st.tok, done))
+            nxt_h, done_h, bad_h = jax.device_get((st.tok, done, bad))
         else:
             logits, st.cache = self.decode_step(st.cache, st.tok, st.pos)
+            logits = jnp.where(nan_mask[:, None],
+                               jnp.asarray(jnp.nan, logits.dtype), logits)
+            bad_h = np.asarray(~jnp.all(jnp.isfinite(logits), axis=-1))
             nxt = self._sample_at(logits, st.pos + 1, st.uids)
             st.pos = st.pos + 1
             st.remaining = st.remaining - 1
@@ -475,6 +903,12 @@ class ServeEngine:
         now = time.perf_counter() - st.t0
         for slot in list(st.live):
             req = st.live[slot]
+            if bool(bad_h[slot]):
+                # NaN quarantine: fail the offending request only — no
+                # token appended, the rest of the batch commits normally
+                self._terminal(st, req, STATUS_FAILED, slot=slot,
+                               reason="nan-logits")
+                continue
             req.generated.append(int(nxt_h[slot]))
             st.slot_pos[slot] += 1
             if bool(done_h[slot]):
@@ -491,27 +925,64 @@ class ServeEngine:
         if st.mgr.dirty:
             st.bt_dev = st.mgr.device_tables()
         (st.pool, st.draft_cache, targets, commit, st.tok, st.pos,
-         st.remaining, done) = self._spec_step(
+         st.remaining, done, bad) = self._spec_step(
             self.params, self.draft_params, st.pool, st.draft_cache,
             st.bt_dev, st.tok, st.pos, st.remaining, st.uids, st.spec_mask,
-            attend)
-        # the one host transfer per window: candidates + counts + done
-        targets_h, commit_h, done_h = jax.device_get((targets, commit, done))
+            self._nan_mask(st), self._collapse_mask(st), attend)
+        # the one host transfer per window: candidates + counts + flags
+        targets_h, commit_h, done_h, bad_h = jax.device_get(
+            (targets, commit, done, bad))
         now = time.perf_counter() - st.t0
         for slot in list(st.live):
             req = st.live[slot]
+            if bool(bad_h[slot]):
+                self._terminal(st, req, STATUS_FAILED, slot=slot,
+                               reason="nan-logits")
+                continue
             c = int(commit_h[slot])
             req.generated.extend(int(x) for x in targets_h[slot, :c])
             st.slot_pos[slot] += c
             s = st.stats[req.uid]
             s["spec_steps"] = s.get("spec_steps", 0) + 1
             s["spec_tokens"] = s.get("spec_tokens", 0) + c
+            self._spec_governor(st, slot, req, c)
             if bool(done_h[slot]):
                 self._finish(st, slot, now)
             else:
                 # write-then-retract: pages mapped for the window whose
                 # rows were all rejected go back to the allocator
                 st.mgr.retract_above(slot, st.slot_pos[slot])
+        self._spec_cooldown_tick(st)
+
+    def _spec_governor(self, st: "_SchedState", slot: int, req: Request,
+                       committed: int):
+        """Per-request acceptance governor: when a spec-active request's
+        last ``spec_disable_window`` windows averaged <= 1 committed
+        token, its draft is wasted work — disable speculation for that
+        request (it rides the batch committing 1 token/step, exactly like
+        spec=False) and re-enable after ``spec_cooldown`` windows."""
+        if not (req.spec and req.uid not in st.spec_disabled):
+            return
+        hist = st.spec_hist.setdefault(
+            req.uid, deque(maxlen=self.spec_disable_window))
+        hist.append(committed)
+        if len(hist) == self.spec_disable_window and sum(hist) <= len(hist):
+            st.spec_mask = st.spec_mask.at[slot].set(False)
+            st.spec_disabled[req.uid] = self.spec_cooldown
+            s = st.stats[req.uid]
+            s["spec_auto_disables"] = s.get("spec_auto_disables", 0) + 1
+            hist.clear()
+
+    def _spec_cooldown_tick(self, st: "_SchedState"):
+        """Advance auto-disable cooldowns; expired ones re-arm their
+        request's speculative flag (if it is still live)."""
+        for uid in list(st.spec_disabled):
+            st.spec_disabled[uid] -= 1
+            if st.spec_disabled[uid] <= 0:
+                del st.spec_disabled[uid]
+                for slot, req in st.live.items():
+                    if req.uid == uid and req.spec:
+                        st.spec_mask = st.spec_mask.at[slot].set(True)
 
     def _finish(self, st: "_SchedState", slot: int, now: float):
         req = st.live.pop(slot)
@@ -519,8 +990,10 @@ class ServeEngine:
         if st.mgr is not None:
             st.mgr.release(slot)
         s = st.stats[req.uid]
+        s["status"] = STATUS_OK
         s["finished_s"] = now
         s["tokens"] = len(req.generated)
+        st.spec_hist.pop(req.uid, None)
         n = len(req.generated)
         # steady-state decode rate: tokens after the first over the decode
         # interval only — admit->first-token (queueing + prefill) is
@@ -534,27 +1007,49 @@ class ServeEngine:
             # dispatch overhead by exactly this factor
             s["accept_rate"] = s["spec_tokens"] / s["spec_steps"]
 
+    def _terminal(self, st: "_SchedState", req: Request, status: str, *,
+                  slot: Optional[int] = None, reason: Optional[str] = None):
+        """Non-OK terminal transition (idempotent): record status/reason,
+        free the slot if the request was live.  Partial output is
+        discarded — only OK requests appear in the returned dict."""
+        s = st.stats[req.uid]
+        if s.get("status") is not None:
+            return
+        s["status"] = status
+        if reason:
+            s["reason"] = reason
+        s["finished_s"] = time.perf_counter() - st.t0
+        s["tokens"] = len(req.generated or [])
+        st.spec_hist.pop(req.uid, None)
+        if slot is not None:
+            st.live.pop(slot, None)
+            if st.mgr is not None:
+                st.mgr.release(slot)
+
     # ------------------------------------------------------------ admission
     def _bookkeep_admit(self, st: "_SchedState", slot: int, req: Request,
                         t_admit: float):
         """Per-request admission bookkeeping, shared by both admission
         paths — they must stay behaviorally identical (the sharing-on ==
         sharing-off parity guarantee rides on it)."""
-        # only a preemption-resume (this serve) keeps its generated
-        # prefix; re-serving the same Request objects starts fresh
+        # only a preemption/recovery resume (this serve) keeps its
+        # generated prefix; re-serving the same Request objects starts
+        # fresh
         if id(req) not in st.resumed:
             req.generated = []
         st.live[slot] = req
         st.admit_seq[slot] = st.next_seq
         st.next_seq += 1
         st.slot_pos[slot] = len(req.prompt)
-        st.stats.setdefault(req.uid, {
-            "admitted_s": t_admit, "preemptions": 0})
+        # first admission only — a resume keeps its original timestamp
+        st.stats[req.uid].setdefault("admitted_s", t_admit)
 
     def _finish_admission(self, st: "_SchedState", slot: int, req: Request):
         """First-token timing + immediate completion of budgets the
         admission sample already exhausted (a decode step would overrun
-        them)."""
+        them).  No-op when prefill already quarantined the request."""
+        if st.stats[req.uid].get("status") is not None:
+            return
         now = time.perf_counter() - st.t0
         s = st.stats[req.uid]
         s.setdefault("first_token_s", now)
@@ -579,7 +1074,8 @@ class ServeEngine:
                 if not st.mgr.can_admit(len(req.prompt),
                                         headroom=len(st.live) + len(taken)):
                     break
-                st.mgr.admit(slot, len(req.prompt))
+                if st.mgr.admit(slot, len(req.prompt)) is None:
+                    break  # denied at alloc (injected OOM) despite the gate
             st.queue.popleft()
             taken.append((slot, req))
         if not taken:
@@ -615,10 +1111,13 @@ class ServeEngine:
             # function of that state, and replanning every decode step
             # would both waste O(prompt + index) host work per token and
             # keep refreshing the blocked prompt's LRU stamps (skewing
-            # eviction toward other, possibly hot, entries)
+            # eviction toward other, possibly hot, entries).  Under fault
+            # injection the gate is additionally a function of the round
+            # (the OOM hook), so the key must not outlive it.
             a = st.mgr.allocator
             key = (id(req), a.alloc_count, a.release_count, a.share_count,
-                   st.mgr.index.version)
+                   st.mgr.index.version,
+                   st.rnd if st.faults is not None else None)
             if st.gate_block == key:
                 break
             plan = st.mgr.plan_admit(req.prompt)
@@ -636,7 +1135,10 @@ class ServeEngine:
                                          plan.cached_tokens)
             st.plans[slot] = plan
             self._prefill_group(st, [(slot, req)])
-            st.mgr.register_prefix(slot, req.prompt)
+            if st.stats[req.uid].get("status") is None:
+                # a quarantined prefill released the slot — its (trash)
+                # table rows must not be published as cached prefix
+                st.mgr.register_prefix(slot, req.prompt)
             self._finish_admission(st, slot, req)
 
     def _prefill_suffix_row(self, st: "_SchedState", slot: int,
@@ -683,12 +1185,15 @@ class ServeEngine:
         behaviorally identical): sample each row's first token at
         position ``len(prompt)`` with its (uid, position) key, scatter
         pos/tok/remaining/uids (+ spec flags) into the slot state, and
-        append the sampled token."""
+        append the sampled token.  Rows whose prefill logits are
+        non-finite (numerical blowup, corrupted shared prefix) are
+        quarantined here — same guard as the decode steps."""
         lens = [len(r.prompt) for r in reqs]
         first = self._sample_at(logits, jnp.asarray(lens, jnp.int32),
                                 jnp.asarray([r.uid for r in reqs],
                                             jnp.int32))
-        first_h = jax.device_get(first)
+        finite = jnp.all(jnp.isfinite(logits), axis=-1)
+        first_h, finite_h = jax.device_get((first, finite))
         slot_idx = jnp.asarray(slots, jnp.int32)
         st.pos = st.pos.at[slot_idx].set(jnp.asarray(lens, jnp.int32))
         st.tok = st.tok.at[slot_idx].set(first)
@@ -699,8 +1204,13 @@ class ServeEngine:
             [r.uid for r in reqs], jnp.int32))
         if self.spec_k > 1:
             st.spec_mask = st.spec_mask.at[slot_idx].set(jnp.asarray(
-                [bool(getattr(r, "spec", True)) for r in reqs]))
-        for req, f in zip(reqs, first_h):
+                [bool(getattr(r, "spec", True))
+                 and r.uid not in st.spec_disabled for r in reqs]))
+        for slot, req, f, ok in zip(slots, reqs, first_h, finite_h):
+            if not bool(ok):
+                self._terminal(st, req, STATUS_FAILED, slot=slot,
+                               reason="nan-logits")
+                continue
             req.generated.append(int(f))
 
     def _prefill_group(self, st: "_SchedState", group: List[tuple]):
@@ -786,9 +1296,11 @@ class ServeEngine:
         # the exact cache the slot held, so greedy output is unchanged and
         # (uid, position) sampling keys line up with the un-preempted run.
         # The caller's Request is not mutated — the resume rides a copy
-        # (sharing the generated list, which is the accumulating output).
+        # (sharing the generated list, which is the accumulating output;
+        # ``folded`` keeps a re-preempted resume from folding it twice).
         resume = dataclasses.replace(
-            req, prompt=list(req.prompt) + req.generated)
+            req, prompt=list(req.prompt) + req.generated[req.folded:],
+            folded=len(req.generated))
         st.resumed.add(id(resume))
         st.queue.appendleft(resume)
         st.stats[req.uid]["preemptions"] += 1
@@ -803,8 +1315,7 @@ class _SchedState:
     t0: float
     live: Dict[int, Request] = dataclasses.field(default_factory=dict)
     results: Dict[int, List[int]] = dataclasses.field(default_factory=dict)
-    stats: Dict[int, Dict[str, float]] = dataclasses.field(
-        default_factory=dict)
+    stats: Dict[Any, Any] = dataclasses.field(default_factory=dict)
     admit_seq: Dict[int, int] = dataclasses.field(default_factory=dict)
     next_seq: int = 0
     resumed: set = dataclasses.field(default_factory=set)
@@ -821,3 +1332,16 @@ class _SchedState:
     uids: Any = None
     draft_cache: Any = None    # speculative decoding: dense draft slot pool
     spec_mask: Any = None      # speculative decoding: per-slot spec flag
+    # ---- lifecycle / fault tolerance
+    faults: Any = None         # FaultSchedule for this call (or None)
+    rnd: int = -1              # scheduler round (fault-injection clock)
+    step_no: int = 0           # decode steps actually dispatched
+    recoveries: int = 0        # step restarts this serve()
+    has_deadlines: bool = False
+    forced_expired: set = dataclasses.field(default_factory=set)
+    arrival: Dict[int, int] = dataclasses.field(default_factory=dict)
+    zero_mask: Any = None      # cached all-false (slots,) injection mask
+    stragglers: List[dict] = dataclasses.field(default_factory=list)
+    durations: List[float] = dataclasses.field(default_factory=list)
+    spec_hist: Dict[int, deque] = dataclasses.field(default_factory=dict)
+    spec_disabled: Dict[int, int] = dataclasses.field(default_factory=dict)

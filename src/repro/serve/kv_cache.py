@@ -110,6 +110,11 @@ class PageAllocator:
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
         self._refs: Dict[int, int] = {}
         self._logical = 0
+        # fault injection (no-op by default): called as fault_hook(n)
+        # before granting an allocation — True means "pretend the pool is
+        # exhausted" (the hook may also raise to model a hard OOM).  The
+        # serving engine installs this per serve() from its FaultSchedule.
+        self.fault_hook = None
         self.alloc_count = 0      # pages ever handed out
         self.free_count = 0       # pages ever returned to the free list
         self.share_count = 0      # refs ever added by sharing
@@ -158,6 +163,8 @@ class PageAllocator:
         (nothing allocated)."""
         if n < 0:
             raise ValueError(f"alloc({n})")
+        if n > 0 and self.fault_hook is not None and self.fault_hook(n):
+            return None  # injected OOM: deny despite free pages
         if n > len(self._free):
             return None
         pages = [self._free.pop() for _ in range(n)]
@@ -199,6 +206,14 @@ class PageAllocator:
         self.release_count += len(pages)
         return freed
 
+    def audit(self) -> List[str]:
+        """Internal invariant sweep (see :mod:`repro.serve.audit`):
+        accounting identity, free-list uniqueness, refcount sanity.
+        Returns the list of violations (empty = clean)."""
+        from repro.serve.audit import audit_allocator
+
+        return audit_allocator(self)
+
 
 @dataclasses.dataclass
 class PagedStats:
@@ -238,6 +253,13 @@ class PagedStats:
     evictions: int = 0
     index_pages: int = 0
     cached_prefix_tokens: int = 0
+    # ---- invariant audit (repro.serve.audit), swept by stats(): leak
+    # freedom is a queryable fact, not something tests reconstruct from
+    # internals.  audit_errors carries the human-readable violations.
+    audit_ok: bool = True
+    audit_orphan_pages: int = 0
+    audit_refcount_mismatches: int = 0
+    audit_errors: List[str] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -559,11 +581,23 @@ class PagedCacheManager:
         idx[:m] = self.tables[slot, :m]
         return idx
 
+    def audit(self):
+        """Cross-layer invariant sweep: allocator internals + block
+        tables + prefix index (see :mod:`repro.serve.audit`)."""
+        from repro.serve.audit import audit_manager
+
+        return audit_manager(self)
+
     def stats(self) -> PagedStats:
         a = self.allocator
         logical = sum(len(o) for o in self.owned)
         distinct = len({p for o in self.owned for p in o})
+        report = self.audit()
         return PagedStats(
+            audit_ok=report.ok,
+            audit_orphan_pages=report.orphan_pages,
+            audit_refcount_mismatches=report.refcount_mismatches,
+            audit_errors=report.errors,
             num_pages=a.num_pages, page_size=self.page_size,
             used_pages=a.used, free_pages=a.free,
             peak_used_pages=a.peak_used,

@@ -70,6 +70,16 @@ class PrefixIndex:
         self._clock += 1
         return self._clock
 
+    def pages(self) -> Iterable[int]:
+        """Every physical page the index currently references, one per
+        node (the audit sweep cross-checks these against refcounts)."""
+        stack = [self._root]
+        while stack:
+            node = stack.pop()
+            for child in node.children.values():
+                yield child.page
+                stack.append(child)
+
     def _page_keys(self, tokens: Sequence[int]) -> Iterable[Tuple[int, ...]]:
         ps = self.page_size
         for j in range(len(tokens) // ps):

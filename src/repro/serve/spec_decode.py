@@ -123,9 +123,19 @@ def build_spec_step(model, draft_model, sample_at, *, max_seq: int,
     Returned callable (jitted, cache/draft-cache/pos/remaining donated):
 
       (params, draft_params, pool, draft_cache, block_tables, tok, pos,
-       remaining, uids, spec_mask, attend_len) ->
+       remaining, uids, spec_mask, nan_mask, collapse_mask, attend_len) ->
       (pool, draft_cache, targets (B, T), commit (B,), tok, pos,
-       remaining, done)
+       remaining, done, bad (B,))
+
+    ``nan_mask`` rows get their verify logits poisoned to NaN (fault
+    injection riding the same guard real numerical blowups hit) and
+    ``bad`` reports rows whose logits are non-finite for any reason —
+    the engine quarantines those requests instead of committing garbage.
+    ``collapse_mask`` rows get their draft proposals perturbed off the
+    target's samples, collapsing acceptance to ~1 token/window without
+    ever changing committed values (the accept rule replaces the first
+    mismatch with the target's own sample) — the injection behind the
+    per-request speculative auto-disable policy.
 
     The draft's T-1 propose steps, the fused T-token verify, the per-
     position target sampling, and the longest-matching-prefix accept all
@@ -137,9 +147,11 @@ def build_spec_step(model, draft_model, sample_at, *, max_seq: int,
     ever attended, exactly like a rejected draft tail.
     """
     t_window = spec_k
+    vocab = model.cfg.vocab
 
     def spec_step_fn(params, draft_params, pool, draft_cache, block_tables,
-                     tok, pos, remaining, uids, spec_mask, attend_len):
+                     tok, pos, remaining, uids, spec_mask, nan_mask,
+                     collapse_mask, attend_len):
         # ---- propose: T-1 draft decode steps, sampled with the SAME
         # (uid, position) keys the target uses — a well-matched draft then
         # reproduces the target's sample and the whole window is accepted
@@ -150,6 +162,9 @@ def build_spec_step(model, draft_model, sample_at, *, max_seq: int,
                 draft_params, draft_cache, dtok, pos + i, attend_len,
                 unroll=True)
             dtok = sample_at(dlogits, pos + i + 1, uids)
+            # acceptance-collapse injection: shove the proposal off the
+            # target's sample so the window rejects at its first draft row
+            dtok = jnp.where(collapse_mask, (dtok + 1) % vocab, dtok)
             window.append(dtok)
         win = jnp.stack(window, axis=1)                        # (B, T)
 
@@ -159,6 +174,11 @@ def build_spec_step(model, draft_model, sample_at, *, max_seq: int,
         logits, cache = model.decode_verify_step(
             params, cache, win, pos, attend_len, verify_backend)
         pool = {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]}
+        logits = jnp.where(nan_mask[:, None, None],
+                           jnp.asarray(jnp.nan, logits.dtype), logits)
+        # NaN guard: a row whose window logits are non-finite anywhere
+        # must not commit — the engine quarantines it host-side
+        bad = ~jnp.all(jnp.isfinite(logits), axis=(1, 2))
 
         # ---- accept: target samples per position, longest matching prefix
         targets = jnp.stack(
@@ -180,7 +200,7 @@ def build_spec_step(model, draft_model, sample_at, *, max_seq: int,
         remaining = remaining - commit
         done = (remaining <= 0) | (pos >= max_seq - 1)
         return (pool, draft_cache, targets, commit, tok, pos, remaining,
-                done)
+                done, bad)
 
-    return jax.jit(spec_step_fn, static_argnums=(10,),
+    return jax.jit(spec_step_fn, static_argnums=(12,),
                    donate_argnums=(2, 3, 6, 7))

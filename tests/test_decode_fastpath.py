@@ -177,8 +177,9 @@ def test_fused_step_cache_buffers_donated():
     cache = jax.eval_shape(lambda: model.init_cache(2, 48))
     arr = jax.ShapeDtypeStruct((2,), jnp.int32)
     pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(1))
+    mask = jax.ShapeDtypeStruct((2,), jnp.bool_)
     compiled = fast._fused_step.lower(pshapes, cache, arr, arr, arr, arr,
-                                      fast.attend_block).compile()
+                                      mask, fast.attend_block).compile()
     hlo = compiled.as_text()
     # XLA records donation as input_output_alias on the entry computation;
     # without it every decode step re-materializes the full KV pool
