@@ -35,11 +35,27 @@ column then shows each request's terminal state.
       --cache-layout paged --prefix-sharing --shared-prefix 32
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
       --cache-layout paged --inject-faults 0 --audit --deadline-ms 5000
+
+Open-loop traffic: ``--workload poisson|bursty`` replays a deterministic
+arrival process (``--arrival-rate`` req/s, ``--burst-factor`` for the
+MMPP-2 burst state) through the async streaming server instead of
+handing the engine one closed batch; ``--clock round`` makes the replay
+fully deterministic in scheduler rounds.  ``--queue-watermark`` /
+``--shed-priority`` shed best-effort work under backlog,
+``--free-page-watermark`` holds back admission near pool exhaustion,
+and ``--prefill-budget`` caps prompt tokens prefilled per round
+(chunked prefill).  Every run ends with the SLA block — TTFT/TBT
+p50/p95/p99, goodput, and the terminal-status census.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
+      --cache-layout paged --workload poisson --arrival-rate 16 \
+      --requests 12 --queue-watermark 4 --shed-priority 2
 """
 
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import jax
@@ -48,8 +64,11 @@ import numpy as np
 
 from repro.configs.registry import reduced_config
 from repro.models.lm import Model
+from repro.serve.async_engine import serve_open_loop
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.faults import FaultSchedule
+from repro.serve.sla import format_summary
+from repro.serve.workload import WORKLOAD_KINDS, describe, make_workload
 
 
 def main():
@@ -124,6 +143,37 @@ def main():
     ap.add_argument("--shed-policy", default="reject-newest",
                     choices=["reject-newest", "reject-largest"],
                     help="overflow victim selection for --max-queue")
+    ap.add_argument("--workload", default="closed",
+                    choices=list(WORKLOAD_KINDS),
+                    help="traffic shape: closed = one batch at t=0 "
+                         "(legacy synchronous path); poisson / bursty "
+                         "replay an open-loop arrival process through "
+                         "the async streaming server")
+    ap.add_argument("--arrival-rate", type=float, default=8.0,
+                    help="mean arrival rate in req/s for open-loop "
+                         "workloads")
+    ap.add_argument("--burst-factor", type=float, default=4.0,
+                    help="MMPP-2 burst intensity for --workload bursty "
+                         "(calm rate/f, burst rate*f)")
+    ap.add_argument("--clock", default="wall",
+                    choices=["wall", "round"],
+                    help="open-loop arrival clock: wall = real sleeps "
+                         "(honest latency), round = deterministic "
+                         "scheduler rounds (reproducible)")
+    ap.add_argument("--queue-watermark", type=int, default=None,
+                    help="soft queue depth: beyond it, queued requests "
+                         "with priority >= --shed-priority are shed")
+    ap.add_argument("--shed-priority", type=int, default=2,
+                    help="lowest priority class the watermark may shed "
+                         "(lower number = more important)")
+    ap.add_argument("--free-page-watermark", type=float, default=0.0,
+                    help="fraction of the page pool held in reserve: "
+                         "admission defers while free pages would drop "
+                         "below it (paged layout)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="max prompt tokens prefilled per scheduler "
+                         "round (chunked prefill; paged layout, "
+                         "spec-k 1, no prefix sharing)")
     ap.add_argument("--audit", action="store_true",
                     help="sweep allocator/index invariants every "
                          "scheduler round (always swept once at the end)")
@@ -154,20 +204,43 @@ def main():
                          else args.verify_backend,
                          max_queue=args.max_queue,
                          shed_policy=args.shed_policy,
+                         queue_watermark=args.queue_watermark,
+                         shed_priority=args.shed_priority,
+                         free_page_watermark=args.free_page_watermark,
+                         prefill_budget=args.prefill_budget,
                          audit=args.audit)
 
     rng = np.random.default_rng(args.seed)
-    shared = rng.integers(
-        0, cfg.vocab, min(args.shared_prefix, args.prompt_len)).tolist()
-    reqs = [Request(uid=i,
-                    prompt=shared + rng.integers(
-                        0, cfg.vocab,
-                        args.prompt_len - len(shared)).tolist(),
-                    max_new_tokens=args.max_new,
-                    deadline_ms=args.deadline_ms,
-                    ttft_deadline_ms=args.ttft_deadline_ms,
-                    max_retries=args.max_retries)
-            for i in range(args.requests)]
+    open_loop = args.workload != "closed"
+    if open_loop:
+        timed = make_workload(
+            args.workload, args.requests, vocab=cfg.vocab,
+            seed=args.seed, rate=args.arrival_rate,
+            burst_factor=args.burst_factor,
+            prompt_median=args.prompt_len, prompt_max=2 * args.prompt_len,
+            out_median=args.max_new, out_max=2 * args.max_new,
+            shared_prefix_frac=0.5 if args.shared_prefix else 0.0,
+            prefix_len=args.shared_prefix,
+            deadline_ms=args.deadline_ms,
+            ttft_deadline_ms=args.ttft_deadline_ms)
+        reqs = [t.request for t in timed]
+        d = describe(timed)
+        print(f"workload: {args.workload} n={d['n']} "
+              f"span={d['span_s']:.2f}s rate={d['mean_rate']:.1f} req/s "
+              f"prompts~{d['prompt_mean']:.0f} (max {d['prompt_max']}), "
+              f"{args.clock} clock")
+    else:
+        shared = rng.integers(
+            0, cfg.vocab, min(args.shared_prefix, args.prompt_len)).tolist()
+        reqs = [Request(uid=i,
+                        prompt=shared + rng.integers(
+                            0, cfg.vocab,
+                            args.prompt_len - len(shared)).tolist(),
+                        max_new_tokens=args.max_new,
+                        deadline_ms=args.deadline_ms,
+                        ttft_deadline_ms=args.ttft_deadline_ms,
+                        max_retries=args.max_retries)
+                for i in range(args.requests)]
     faults = None
     if args.inject_faults is not None:
         faults = FaultSchedule.random(
@@ -177,7 +250,11 @@ def main():
                                     else f"@{f.step}+{f.span}")
                           for f in faults.faults))
     t0 = time.perf_counter()
-    results = engine.serve(reqs, faults=faults)
+    if open_loop:
+        results = asyncio.run(serve_open_loop(
+            engine, timed, faults=faults, clock=args.clock))
+    else:
+        results = engine.serve(reqs, faults=faults)
     dt = time.perf_counter() - t0
     n_tok = sum(len(v) for v in results.values())
     per_req = {u: s for u, s in engine.last_stats.items()
@@ -201,9 +278,12 @@ def main():
               f"{s['e2e_tok_s']:10.1f} {acc} "
               f"{int(s['preemptions']):9d}")
     spec = f", spec-k={args.spec_k}" if args.spec_k > 1 else ""
+    loop = f", {args.workload} open-loop" if open_loop else ""
     print(f"\n{n_tok} tokens in {dt:.2f}s = {n_tok / dt:.1f} tok/s "
-          f"({args.slots} slots, {args.cache_layout} cache{spec}, "
+          f"({args.slots} slots, {args.cache_layout} cache{spec}{loop}, "
           f"{cfg.name})")
+    print("SLA:")
+    print(format_summary(engine.last_stats["sla"]))
     counts = {}
     for s in per_req.values():
         counts[s["status"]] = counts.get(s["status"], 0) + 1

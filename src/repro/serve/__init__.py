@@ -1,3 +1,8 @@
+from repro.serve.async_engine import (  # noqa: F401
+    AsyncServeEngine,
+    TokenStream,
+    serve_open_loop,
+)
 from repro.serve.audit import (  # noqa: F401
     AuditError,
     AuditReport,
@@ -31,8 +36,22 @@ from repro.serve.kv_cache import (  # noqa: F401
     PagedStats,
 )
 from repro.serve.prefix_index import PrefixIndex  # noqa: F401
+from repro.serve.sla import (  # noqa: F401
+    format_summary,
+    percentiles,
+    summarize,
+)
 from repro.serve.spec_decode import (  # noqa: F401
     build_spec_step,
     make_self_draft,
     resolve_draft,
+)
+from repro.serve.workload import (  # noqa: F401
+    WORKLOAD_KINDS,
+    TimedRequest,
+    bursty_arrivals,
+    describe,
+    lognormal_lengths,
+    make_workload,
+    poisson_arrivals,
 )

@@ -102,7 +102,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve import spec_decode
+from repro.serve import sla, spec_decode
 from repro.serve.audit import AuditError
 from repro.serve.faults import InjectedFault, KernelBackendError, poison_pages
 from repro.serve.kv_cache import (
@@ -162,6 +162,11 @@ class Request:
     ttft_deadline_ms: Optional[float] = None
     # step-restart recoveries this request may ride before FAILED
     max_retries: int = 2
+    # SLA priority class: lower admits (and survives shedding /
+    # preemption) first; equal-priority traffic keeps strict FIFO order,
+    # so the default (every request at 1) reproduces the legacy scheduler
+    # exactly
+    priority: int = 1
     # internal resume bookkeeping: how many ``generated`` tokens are
     # already folded into ``prompt``.  A preemption/recovery resume rides
     # a copy whose prompt absorbs the generated-so-far suffix; folding
@@ -190,6 +195,10 @@ class ServeEngine:
                  verify_backend: Optional[str] = None,
                  max_queue: Optional[int] = None,
                  shed_policy: str = "reject-newest",
+                 queue_watermark: Optional[int] = None,
+                 shed_priority: int = 2,
+                 free_page_watermark: float = 0.0,
+                 prefill_budget: Optional[int] = None,
                  audit: bool = False, faults=None,
                  max_recoveries: int = 2,
                  straggler_factor: float = 3.0,
@@ -213,6 +222,16 @@ class ServeEngine:
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue must be >= 1 (or None for "
                              f"unbounded); got {max_queue}")
+        if queue_watermark is not None and queue_watermark < 0:
+            raise ValueError(f"queue_watermark must be >= 0 (or None to "
+                             f"disable soft shedding); got {queue_watermark}")
+        if not 0.0 <= free_page_watermark < 1.0:
+            raise ValueError(f"free_page_watermark must be in [0, 1); "
+                             f"got {free_page_watermark}")
+        if prefill_budget is not None and prefill_budget < 1:
+            raise ValueError(f"prefill_budget must be >= 1 (or None for "
+                             f"unbounded prefill per round); got "
+                             f"{prefill_budget}")
         self.model = model
         self.params = params
         self.max_seq = max_seq
@@ -229,6 +248,23 @@ class ServeEngine:
         # ---- lifecycle / fault-tolerance policy
         self.max_queue = max_queue
         self.shed_policy = shed_policy
+        # ---- SLA-aware scheduling (admission control + TBT bounding)
+        # soft queue bound: depth above it sheds best-effort classes
+        # (priority >= shed_priority) instead of everything, every round
+        self.queue_watermark = queue_watermark
+        self.shed_priority = shed_priority
+        # fraction of the page pool kept free by the admission gate while
+        # anything is running (decode growth headroom under bursts)
+        self.free_page_watermark = free_page_watermark
+        # prompt tokens prefilled per scheduler round: long prompts admit
+        # in chunks interleaved with decode steps, bounding the
+        # time-between-tokens stall a monster prompt inflicts on live
+        # requests.  The chunk is a whole number of prompt_block buckets
+        # so mid-chunks re-use one jit specialization with no padding.
+        self.prefill_budget = prefill_budget
+        self._chunk_tokens = (
+            max(prompt_block, prefill_budget // prompt_block * prompt_block)
+            if prefill_budget is not None else None)
         self.audit = audit
         self.faults = faults            # default FaultSchedule (or None)
         self.max_recoveries = max_recoveries
@@ -405,8 +441,10 @@ class ServeEngine:
 
             self._draft_prefill = jax.jit(draft_prefill_fn)
 
-        # ---- prefix sharing: suffix prefill through the paged cache
-        if self.prefix_sharing:
+        # ---- prefix sharing / chunked prefill: suffix prefill through
+        # the paged cache (chunked admission writes each prompt chunk as
+        # the "suffix" of the chunks already resident)
+        if self.prefix_sharing or self._chunked_capable():
             vb = self.verify_backend
 
             def suffix_prefill_fn(params, pool, block_tables, toks,
@@ -441,6 +479,18 @@ class ServeEngine:
         mask = jnp.zeros(tok.shape, jnp.bool_)
         return self._fused_step(self.params, cache, tok, pos, remaining,
                                 uids, mask, attend_len)
+
+    def _chunked_capable(self) -> bool:
+        """Chunked prefill needs the paged suffix-prefill path: pages for
+        the whole prompt are mapped at admission, then written one
+        bucketed chunk per round.  Spec decoding and prefix sharing drive
+        their own admission prefills, so they opt out (the budget still
+        throttles how many whole prompts admit per round)."""
+        return (self.prefill_budget is not None
+                and self.cache_layout == "paged"
+                and self.spec_k == 1
+                and not self.prefix_sharing
+                and self.model.cfg.family in _PADDED_PREFILL_FAMILIES)
 
     def cancel(self, uid: int):
         """Request cancellation of ``uid``: queued -> CANCELLED at the
@@ -508,22 +558,37 @@ class ServeEngine:
         the jit caches are per-engine, so sweeping many schedules through
         one engine never recompiles.
         """
-        st = _SchedState(queue=deque(requests), mgr=None,
-                         t0=time.perf_counter())
+        st = self._open_session(requests, faults)
+        try:
+            while st.queue or st.live or st.prefilling:
+                self._round(st)
+        except BaseException as exc:
+            # exception safety: whatever escapes, no slot or page stays
+            # held and every in-flight request gets a terminal status —
+            # the next serve() on this engine starts clean
+            self._abort(st, exc)
+            raise
+        return self._finalize_session(st)
+
+    # --------------------------------------------------- session primitives
+    # serve() is the closed-loop driver over three session primitives —
+    # _open_session / _round / _finalize_session — which the async engine
+    # (repro.serve.async_engine) drives open-loop instead: requests join
+    # mid-session via _submit_open and rounds interleave with the event
+    # loop.  Both drivers share every scheduling decision below, which is
+    # what makes streamed output bit-identical to the batch call.
+    def _open_session(self, requests: List[Request],
+                      faults=None) -> "_SchedState":
+        """Register a (possibly empty) request batch and build fresh
+        manager + device state; returns the session state that _round
+        advances."""
+        st = _SchedState(queue=deque(), mgr=None, t0=time.perf_counter())
         st.faults = faults if faults is not None else self.faults
-        for i, req in enumerate(requests):
-            if req.uid in st.stats:
-                raise ValueError(f"duplicate request uid {req.uid}: the "
-                                 "status ledger and sampling keys are "
-                                 "keyed by uid")
-            st.arrival[req.uid] = i
-            st.stats[req.uid] = {"enqueued_s": 0.0, "preemptions": 0,
-                                 "retries": 0, "status": None}
-        st.has_deadlines = any(
-            r.deadline_ms is not None or r.ttft_deadline_ms is not None
-            for r in requests)
         self.last_stats = st.stats
         self.preemptions = 0
+        for req in requests:
+            self._register(st, req)
+            st.queue.append(req)
         self._shed_overflow(st)
         self._init_mgr(st)
         if st.mgr is not None:
@@ -531,61 +596,94 @@ class ServeEngine:
             # fit the pool must not abort a half-served batch later (or,
             # worse, spin in the admission gate forever)
             for req in st.queue:
-                if len(req.prompt) >= self.max_seq:
-                    raise ValueError(
-                        f"request {req.uid}: prompt of {len(req.prompt)} "
-                        f"tokens leaves no decode room in max_seq="
-                        f"{self.max_seq}")
-                # a speculative window transiently maps up to spec_k - 1
-                # positions past the final token; charge them so the
-                # grow-span can always be granted to a lone request
-                if not st.mgr.fits_worst_case(
-                        len(req.prompt),
-                        req.max_new_tokens + self.spec_k - 1,
-                        self.max_seq):
-                    longest = min(
-                        len(req.prompt) + req.max_new_tokens
-                        + self.spec_k - 2, self.max_seq)
-                    raise ValueError(
-                        f"request {req.uid} can never fit: needs "
-                        f"{blocks_for(longest, self.page_size)} pages "
-                        + (f"(incl. the spec_k={self.spec_k} window "
-                           f"overhang) " if self.spec_k > 1 else "")
-                        + f", pool has {st.mgr.allocator.usable}")
+                self._check_fits(st, req)
         self._init_device(st)
+        return st
 
-        try:
-            while st.queue or st.live:
-                st.rnd += 1
-                self._apply_round_faults(st)
-                self._expire_and_cancel(st)
-                if not (st.queue or st.live):
-                    break
-                try:
-                    if self.prefix_sharing:
-                        self._admit_shared(st)
-                    else:
-                        self._admit(st)
+    def _register(self, st: "_SchedState", req: Request, now: float = 0.0):
+        """Status-ledger entry + arrival stamp (one per request, ever)."""
+        if req.uid in st.stats:
+            raise ValueError(f"duplicate request uid {req.uid}: the "
+                             "status ledger and sampling keys are "
+                             "keyed by uid")
+        st.arrival[req.uid] = st.seq_arrival
+        st.seq_arrival += 1
+        st.stats[req.uid] = {"enqueued_s": now, "preemptions": 0,
+                             "retries": 0, "status": None,
+                             "priority": req.priority}
+        if req.deadline_ms is not None or req.ttft_deadline_ms is not None:
+            st.has_deadlines = True
+
+    def _check_fits(self, st: "_SchedState", req: Request):
+        """Raise unless ``req`` could complete alone in the paged pool."""
+        if len(req.prompt) >= self.max_seq:
+            raise ValueError(
+                f"request {req.uid}: prompt of {len(req.prompt)} "
+                f"tokens leaves no decode room in max_seq="
+                f"{self.max_seq}")
+        # a speculative window transiently maps up to spec_k - 1
+        # positions past the final token; charge them so the
+        # grow-span can always be granted to a lone request
+        if not st.mgr.fits_worst_case(
+                len(req.prompt),
+                req.max_new_tokens + self.spec_k - 1,
+                self.max_seq):
+            longest = min(
+                len(req.prompt) + req.max_new_tokens
+                + self.spec_k - 2, self.max_seq)
+            raise ValueError(
+                f"request {req.uid} can never fit: needs "
+                f"{blocks_for(longest, self.page_size)} pages "
+                + (f"(incl. the spec_k={self.spec_k} window "
+                   f"overhang) " if self.spec_k > 1 else "")
+                + f", pool has {st.mgr.allocator.usable}")
+
+    def _submit_open(self, st: "_SchedState", req: Request,
+                     now: float = 0.0):
+        """Open-loop arrival: register + enqueue mid-session.  A request
+        that could never fit fails terminally instead of raising — the
+        server must keep serving everyone else."""
+        self._register(st, req, now=now)
+        if st.mgr is not None:
+            try:
+                self._check_fits(st, req)
+            except ValueError as exc:
+                self._terminal(st, req, STATUS_FAILED,
+                               reason=f"never-fits: {exc}")
+                return
+        st.queue.append(req)
+
+    def _round(self, st: "_SchedState"):
+        """One scheduler round: fault clock, lifecycle sweeps, admission
+        control, admission, growth, one decode step.  Safe to call with
+        nothing to do (the round/fault clock still ticks — the async
+        driver relies on that to reach scheduled arrivals)."""
+        st.rnd += 1
+        self._apply_round_faults(st)
+        self._expire_and_cancel(st)
+        self._admission_control(st)
+        if st.queue or st.live or st.prefilling:
+            try:
+                if self.prefix_sharing:
+                    self._admit_shared(st)
+                else:
+                    self._admit(st)
+                if st.live:
+                    if st.mgr is not None:
+                        self._grow_or_preempt(st)
                     if st.live:
-                        if st.mgr is not None:
-                            self._grow_or_preempt(st)
-                        if st.live:
-                            self._timed_step(st)
-                except Exception as exc:
-                    if (isinstance(exc, AuditError)
-                            or (isinstance(exc, InjectedFault) and exc.fatal)
-                            or st.recoveries >= self.max_recoveries):
-                        raise
-                    self._recover(st, exc)
-                if self.audit and st.mgr is not None:
-                    st.mgr.audit().raise_if_failed()
-        except BaseException as exc:
-            # exception safety: whatever escapes, no slot or page stays
-            # held and every in-flight request gets a terminal status —
-            # the next serve() on this engine starts clean
-            self._abort(st, exc)
-            raise
+                        self._timed_step(st)
+            except Exception as exc:
+                if (isinstance(exc, AuditError)
+                        or (isinstance(exc, InjectedFault) and exc.fatal)
+                        or st.recoveries >= self.max_recoveries):
+                    raise
+                self._recover(st, exc)
+            if self.audit and st.mgr is not None:
+                st.mgr.audit().raise_if_failed()
+        self._sample_timeseries(st)
 
+    def _finalize_session(self, st: "_SchedState") -> Dict[int, List[int]]:
         missing = [uid for uid, s in st.stats.items()
                    if s.get("status") not in TERMINAL_STATUSES]
         if missing:  # the statuses partition the request set, always
@@ -593,32 +691,87 @@ class ServeEngine:
                 f"requests left without a terminal status: {missing}")
         self._cancel_uids -= set(st.stats)
         st.stats["stragglers"] = st.stragglers
+        self._attach_observability(st)
         if st.mgr is not None:
             self.last_pool_stats = st.mgr.stats()
         return st.results
 
+    def _attach_observability(self, st: "_SchedState"):
+        """SLA percentile summary + per-round time series under the
+        string keys of ``last_stats`` (per-request entries stay keyed by
+        int uid)."""
+        st.stats["sla"] = sla.summarize(
+            st.stats, tbt_s=st.tbt,
+            wall_s=time.perf_counter() - st.t0)
+        st.stats["timeseries"] = st.timeseries
+
+    def _sample_timeseries(self, st: "_SchedState"):
+        ts = st.timeseries
+        ts["t_s"].append(time.perf_counter() - st.t0)
+        ts["round"].append(st.rnd)
+        ts["queue_depth"].append(self._queue_depth(st))
+        busy = len(st.live) + len(st.prefilling)
+        ts["live_slots"].append(busy)
+        ts["utilization"].append(busy / max(1, self.slots))
+        if st.mgr is not None:
+            ts["free_pages"].append(st.mgr.allocator.free)
+
     # ----------------------------------------------------- lifecycle setup
+    def _queue_depth(self, st: "_SchedState") -> int:
+        """Waiting-queue depth as the admission-control loop sees it:
+        preemption / retry requeues are exempt (the bound applies at
+        enqueue, not during recovery)."""
+        return sum(1 for r in st.queue if id(r) not in st.resumed)
+
     def _shed_overflow(self, st: "_SchedState"):
-        """Bounded waiting queue: reject down to ``max_queue`` before any
-        device work.  reject-newest drops the latest arrivals (FIFO
-        fairness); reject-largest drops the biggest worst-case footprint
-        (prompt + budget — protect many small requests over one huge
-        one), newest-first among ties.  Requeues (preemption / retry) are
-        exempt: the bound applies at enqueue, not during recovery."""
+        """Bounded waiting queue: reject down to ``max_queue``.
+        reject-newest drops the latest arrivals of the least-important
+        priority class (FIFO fairness within a class); reject-largest
+        drops the biggest worst-case footprint (prompt + budget — protect
+        many small requests over one huge one), newest-first among ties.
+        Requeues (preemption / retry) are exempt."""
         if self.max_queue is None:
             return
-        while len(st.queue) > self.max_queue:
+        while self._queue_depth(st) > self.max_queue:
+            cands = [r for r in st.queue if id(r) not in st.resumed]
             if self.shed_policy == "reject-newest":
-                victim = max(st.queue, key=lambda r: st.arrival[r.uid])
+                victim = max(cands, key=lambda r: (r.priority,
+                                                   st.arrival[r.uid]))
             else:
-                victim = max(st.queue,
-                             key=lambda r: (len(r.prompt) + r.max_new_tokens,
+                victim = max(cands,
+                             key=lambda r: (r.priority,
+                                            len(r.prompt) + r.max_new_tokens,
                                             st.arrival[r.uid]))
             st.queue.remove(victim)
             self._terminal(
                 st, victim, STATUS_SHED,
                 reason=f"queue overflow (max_queue={self.max_queue}, "
                        f"policy={self.shed_policy})")
+
+    def _admission_control(self, st: "_SchedState"):
+        """Closed admission-control loop, every round: the hard
+        ``max_queue`` bound first (open-loop arrivals can overflow it
+        mid-session — in the closed-loop serve() it already ran at
+        enqueue and is a no-op), then the soft ``queue_watermark``: depth
+        above it sheds only best-effort classes (priority >=
+        ``shed_priority``), newest first, so latency-sensitive traffic
+        keeps its queue position while bulk traffic absorbs the
+        overload."""
+        self._shed_overflow(st)
+        if self.queue_watermark is None:
+            return
+        while self._queue_depth(st) > self.queue_watermark:
+            cands = [r for r in st.queue if id(r) not in st.resumed
+                     and r.priority >= self.shed_priority]
+            if not cands:
+                break
+            victim = max(cands, key=lambda r: (r.priority,
+                                               st.arrival[r.uid]))
+            st.queue.remove(victim)
+            self._terminal(
+                st, victim, STATUS_SHED,
+                reason=f"queue watermark (depth > {self.queue_watermark}, "
+                       f"priority >= {self.shed_priority})")
 
     def _init_mgr(self, st: "_SchedState"):
         """Fresh paged-cache manager (+ prefix index) with the OOM fault
@@ -663,6 +816,7 @@ class ServeEngine:
         st.zero_mask = jnp.zeros((self.slots,), jnp.bool_)
         st.slot_pos = [0] * self.slots        # host mirror (no device sync)
         st.plans.clear()
+        st.prefilling.clear()
         st.gate_block = None
         if self.spec_k > 1:
             st.draft_cache = self.draft_model.init_cache(self.slots,
@@ -695,12 +849,16 @@ class ServeEngine:
 
     def _expired(self, st: "_SchedState", req: Request,
                  now_ms: float) -> Optional[str]:
-        """Why this request's deadline is up (None if it is not)."""
+        """Why this request's deadline is up (None if it is not).
+        Deadlines run from the request's own enqueue time — zero for the
+        closed-loop serve(), the arrival timestamp for open-loop
+        submissions."""
         if req.uid in st.forced_expired:
             return "deadline"
-        if req.deadline_ms is not None and now_ms > req.deadline_ms:
+        age_ms = now_ms - st.stats[req.uid]["enqueued_s"] * 1e3
+        if req.deadline_ms is not None and age_ms > req.deadline_ms:
             return "deadline"
-        if (req.ttft_deadline_ms is not None and now_ms > req.ttft_deadline_ms
+        if (req.ttft_deadline_ms is not None and age_ms > req.ttft_deadline_ms
                 and "first_token_s" not in st.stats[req.uid]):
             return "ttft_deadline"
         return None
@@ -724,6 +882,15 @@ class ServeEngine:
         st.queue = keep
         for slot in list(st.live):
             req = st.live[slot]
+            why = self._expired(st, req, now_ms)
+            if req.uid in self._cancel_uids:
+                self._terminal(st, req, STATUS_CANCELLED, slot=slot,
+                               reason="cancelled")
+            elif why is not None:
+                self._terminal(st, req, STATUS_TIMEOUT, slot=slot,
+                               reason=why)
+        for slot in list(st.prefilling):
+            req = st.prefilling[slot].req
             why = self._expired(st, req, now_ms)
             if req.uid in self._cancel_uids:
                 self._terminal(st, req, STATUS_CANCELLED, slot=slot,
@@ -776,9 +943,12 @@ class ServeEngine:
             # explicit kernel fault — falls back to the SW path
             self._degrade_to_sw()
         now = time.perf_counter() - st.t0
-        for slot in sorted(st.live, key=lambda s: st.admit_seq[s],
+        held = {**st.live, **{s: cs.req for s, cs in st.prefilling.items()}}
+        st.live.clear()
+        st.prefilling.clear()
+        for slot in sorted(held, key=lambda s: st.admit_seq[s],
                            reverse=True):
-            req = st.live.pop(slot)
+            req = held[slot]
             s = st.stats[req.uid]
             if s["retries"] >= req.max_retries:
                 s["status"] = STATUS_FAILED
@@ -826,10 +996,15 @@ class ServeEngine:
         for slot in list(st.live):
             self._terminal(st, st.live[slot], STATUS_FAILED, slot=slot,
                            reason=f"aborted: {type(exc).__name__}: {exc}")
+        for slot in list(st.prefilling):
+            self._terminal(st, st.prefilling[slot].req, STATUS_FAILED,
+                           slot=slot,
+                           reason=f"aborted: {type(exc).__name__}: {exc}")
         while st.queue:
             self._terminal(st, st.queue.popleft(), STATUS_FAILED,
                            reason=f"aborted: {type(exc).__name__}: {exc}")
         st.stats["stragglers"] = st.stragglers
+        self._attach_observability(st)
         if st.mgr is not None:
             st.mgr.allocator.fault_hook = None  # audit/stats must not trip
             self.last_pool_stats = st.mgr.stats()
@@ -911,6 +1086,7 @@ class ServeEngine:
                 continue
             req.generated.append(int(nxt_h[slot]))
             st.slot_pos[slot] += 1
+            self._record_tbt(st, req.uid, now, 1)
             if bool(done_h[slot]):
                 self._finish(st, slot, now)
 
@@ -942,6 +1118,7 @@ class ServeEngine:
             c = int(commit_h[slot])
             req.generated.extend(int(x) for x in targets_h[slot, :c])
             st.slot_pos[slot] += c
+            self._record_tbt(st, req.uid, now, c)
             s = st.stats[req.uid]
             s["spec_steps"] = s.get("spec_steps", 0) + 1
             s["spec_tokens"] = s.get("spec_tokens", 0) + c
@@ -984,6 +1161,21 @@ class ServeEngine:
                     if req.uid == uid and req.spec:
                         st.spec_mask = st.spec_mask.at[slot].set(True)
 
+    def _record_tbt(self, st: "_SchedState", uid: int, now: float,
+                    committed: int):
+        """Time-between-tokens samples for ``committed`` tokens delivered
+        at ``now``: one real gap since the last emission, plus a zero per
+        extra token — a speculative window lands its whole burst at once,
+        and the samples should say so."""
+        if committed <= 0:
+            return
+        last = st.last_emit.get(uid)
+        if last is not None:
+            st.tbt.append(now - last)
+            if committed > 1:
+                st.tbt.extend([0.0] * (committed - 1))
+        st.last_emit[uid] = now
+
     def _finish(self, st: "_SchedState", slot: int, now: float):
         req = st.live.pop(slot)
         st.results[req.uid] = req.generated
@@ -994,6 +1186,7 @@ class ServeEngine:
         s["finished_s"] = now
         s["tokens"] = len(req.generated)
         st.spec_hist.pop(req.uid, None)
+        st.last_emit.pop(req.uid, None)
         n = len(req.generated)
         # steady-state decode rate: tokens after the first over the decode
         # interval only — admit->first-token (queueing + prefill) is
@@ -1021,8 +1214,10 @@ class ServeEngine:
         s["finished_s"] = time.perf_counter() - st.t0
         s["tokens"] = len(req.generated or [])
         st.spec_hist.pop(req.uid, None)
+        st.last_emit.pop(req.uid, None)
         if slot is not None:
             st.live.pop(slot, None)
+            st.prefilling.pop(slot, None)
             if st.mgr is not None:
                 st.mgr.release(slot)
 
@@ -1054,31 +1249,68 @@ class ServeEngine:
         s = st.stats[req.uid]
         s.setdefault("first_token_s", now)
         s["admit_to_first_s"] = s["first_token_s"] - s["admitted_s"]
+        # TBT clock starts at the first token; a resume keeps its last
+        # emission so the preemption stall shows up as one honest gap
+        st.last_emit.setdefault(req.uid, s["first_token_s"])
         if req.max_new_tokens - len(req.generated) <= 0:
             self._finish(st, slot, now)
 
+    def _next_candidate(self, st: "_SchedState") -> Request:
+        """Admission order: lowest priority class first, then arrival —
+        equal-priority traffic keeps the legacy FIFO order exactly
+        (head-of-line blocking keeps admission deterministic)."""
+        return min(st.queue, key=lambda r: (r.priority, st.arrival[r.uid]))
+
+    def _headroom(self, st: "_SchedState", extra: int) -> int:
+        """Pages the admission gate must leave free: one growth page per
+        running (and just-taken) slot so admission never hands out the
+        pages an older sequence needs at the next boundary, plus the
+        ``free_page_watermark`` reserve whenever anything is running —
+        never when the pool is idle, so a lone request always admits."""
+        n = len(st.live) + len(st.prefilling) + extra
+        if n and self.free_page_watermark > 0.0:
+            n += int(np.ceil(self.free_page_watermark
+                             * st.mgr.allocator.usable))
+        return n
+
     def _admit(self, st: "_SchedState"):
-        """Admit queued requests into free slots, FIFO.  Dense gating: a
-        free slot.  Paged gating: a free slot and enough free pages for
-        the prompt (head-of-line blocking keeps admission deterministic).
-        """
+        """Admit queued requests into free slots, priority-then-FIFO.
+        Dense gating: a free slot.  Paged gating: a free slot and enough
+        free pages for the prompt.  Under a ``prefill_budget``, at most
+        that many prompt tokens prefill per round (in-flight chunked
+        prompts advance first), and prompts longer than one chunk admit
+        through the chunked path."""
+        used = self._advance_prefilling(st)
+        budget = self.prefill_budget
         taken: List[tuple] = []
         for slot in range(self.slots):
-            if slot in st.live or not st.queue:
+            if slot in st.live or slot in st.prefilling or not st.queue:
                 continue
-            req = st.queue[0]
+            if budget is not None and used >= budget and (
+                    st.live or st.prefilling or taken):
+                break  # budget spent; progress guaranteed when idle
+            req = self._next_candidate(st)
             if st.mgr is not None:
-                # watermark: keep one growth page per already-live (and
-                # just-taken) slot so admission never hands out the pages
-                # an older sequence needs at the next boundary
                 if not st.mgr.can_admit(len(req.prompt),
-                                        headroom=len(st.live) + len(taken)):
+                                        headroom=self._headroom(
+                                            st, len(taken))):
                     break
+                if self._chunkable(req):
+                    # map the whole prompt now; write it one chunk per
+                    # round, interleaved with everyone else's decode
+                    if st.mgr.admit(slot, len(req.prompt)) is None:
+                        break
+                    st.queue.remove(req)
+                    self._bookkeep_chunked(st, slot, req)
+                    used += self._prefill_chunk(st, slot)
+                    continue
                 if st.mgr.admit(slot, len(req.prompt)) is None:
                     break  # denied at alloc (injected OOM) despite the gate
-            st.queue.popleft()
+            st.queue.remove(req)
             taken.append((slot, req))
+            used += len(req.prompt)
         if not taken:
+            self._park_prefilling(st)
             return
         t_admit = time.perf_counter() - st.t0
         for slot, req in taken:
@@ -1093,6 +1325,80 @@ class ServeEngine:
             self._prefill_group(st, group)
         for slot, req in taken:
             self._finish_admission(st, slot, req)
+        self._park_prefilling(st)
+
+    # ----------------------------------------------------- chunked prefill
+    def _chunkable(self, req: Request) -> bool:
+        return (self._chunked_capable()
+                and len(req.prompt) > self._chunk_tokens)
+
+    def _bookkeep_chunked(self, st: "_SchedState", slot: int, req: Request):
+        """Admission bookkeeping for a chunked prompt: the slot is
+        reserved (pages mapped, admit_seq assigned) but not live — it
+        joins the decode batch when its last chunk commits."""
+        if id(req) not in st.resumed:
+            req.generated = []
+        st.prefilling[slot] = _ChunkState(req)
+        st.admit_seq[slot] = st.next_seq
+        st.next_seq += 1
+        st.slot_pos[slot] = len(req.prompt)
+        st.stats[req.uid].setdefault("admitted_s",
+                                     time.perf_counter() - st.t0)
+
+    def _advance_prefilling(self, st: "_SchedState") -> int:
+        """One chunk per in-flight chunked prompt, slot order, until the
+        round's budget is spent (the first always advances — a budget
+        smaller than a chunk must not stall the pipeline).  Returns
+        prompt tokens written."""
+        used = 0
+        for slot in sorted(st.prefilling):
+            if self.prefill_budget is not None and used >= self.prefill_budget:
+                break
+            used += self._prefill_chunk(st, slot)
+        return used
+
+    def _prefill_chunk(self, st: "_SchedState", slot: int) -> int:
+        """Write the next prompt chunk through the slot's block tables
+        (the chunk is the 'suffix' of the chunks already resident — the
+        prefix-sharing suffix path re-aimed at admission).  The final
+        chunk's logits sample the first token, exactly like a one-shot
+        prefill; mid-chunks are whole prompt_block buckets, so their
+        logits are discarded and no padding is computed."""
+        cs = st.prefilling[slot]
+        req = cs.req
+        chunk = req.prompt[cs.done:cs.done + self._chunk_tokens]
+        final = cs.done + len(chunk) >= len(req.prompt)
+        t_b = _round_up(len(chunk), self.prompt_block)
+        toks = np.zeros((1, t_b), np.int32)
+        toks[0, :len(chunk)] = chunk
+        attend = self._attend_len(cs.done + t_b)
+        if st.mgr.dirty:
+            st.bt_dev = st.mgr.device_tables()
+        logits, st.pool = self._suffix_prefill(
+            self.params, st.pool, st.bt_dev[slot:slot + 1],
+            jnp.asarray(toks), jnp.asarray([cs.done], jnp.int32),
+            jnp.asarray([len(chunk) - 1], jnp.int32), attend)
+        cs.done += len(chunk)
+        s = st.stats[req.uid]
+        s["prefill_chunks"] = s.get("prefill_chunks", 0) + 1
+        if final:
+            del st.prefilling[slot]
+            st.live[slot] = req
+            self._commit_prefill(st, [slot], [req], logits)
+            self._finish_admission(st, slot, req)
+        return len(chunk)
+
+    def _park_prefilling(self, st: "_SchedState"):
+        """Pin still-prefilling slots out of the decode step's way:
+        position ``max_seq - 1`` clamps the row's bogus K/V write to a
+        fixed location that is never read before being overwritten, and
+        a huge ``remaining`` keeps its done flag meaningless.  Re-applied
+        every admission round because the step advances pos."""
+        if not st.prefilling:
+            return
+        idx = jnp.asarray(sorted(st.prefilling), jnp.int32)
+        st.pos = st.pos.at[idx].set(self.max_seq - 1)
+        st.remaining = st.remaining.at[idx].set(1 << 30)
 
     def _admit_shared(self, st: "_SchedState"):
         """Prefix-sharing admission: requests admit *sequentially* — each
@@ -1105,7 +1411,7 @@ class ServeEngine:
         for slot in range(self.slots):
             if slot in st.live or not st.queue:
                 continue
-            req = st.queue[0]
+            req = self._next_candidate(st)
             # replan the blocked queue head only when the allocator or the
             # index changed since its gate last failed: the gate is a pure
             # function of that state, and replanning every decode step
@@ -1121,12 +1427,13 @@ class ServeEngine:
             if st.gate_block == key:
                 break
             plan = st.mgr.plan_admit(req.prompt)
-            if (not st.mgr.can_admit_plan(plan, headroom=len(st.live))
+            if (not st.mgr.can_admit_plan(plan,
+                                          headroom=self._headroom(st, 0))
                     or st.mgr.admit_prefix(slot, plan) is None):
                 st.gate_block = key
                 break
             st.gate_block = None
-            st.queue.popleft()
+            st.queue.remove(req)
             self._bookkeep_admit(st, slot, req,
                                  time.perf_counter() - st.t0)
             # first-admission figure (a preemption resume re-matches its
@@ -1275,7 +1582,8 @@ class ServeEngine:
         mapped — one position for plain decode, ``spec_k`` for a
         speculative window (positions past ``max_seq`` need no page; their
         writes land in the trash).  Grow on demand; when the pool
-        exhausts, preempt the newest live request (LIFO — the oldest
+        exhausts, preempt the newest request of the least-important
+        class still holding a slot (LIFO within a class — the oldest
         always makes progress) and requeue it at the queue front with its
         generated tokens folded into its prompt."""
         span = self.spec_k
@@ -1286,11 +1594,23 @@ class ServeEngine:
                 first = st.slot_pos[slot]
                 if st.mgr.ensure_span(slot, first, first + span - 1):
                     break
-                victim = max(st.live, key=lambda s: st.admit_seq[s])
-                self._preempt(st, victim)
+                self._preempt(st, self._preempt_victim(st))
+
+    def _preempt_victim(self, st: "_SchedState") -> int:
+        """Newest of the least-important class, live or mid-chunked-
+        prefill alike (an in-flight chunked prompt holds its whole page
+        span — reclaiming it can unblock several decode slots)."""
+        def key(slot):
+            req = (st.live[slot] if slot in st.live
+                   else st.prefilling[slot].req)
+            return (req.priority, st.admit_seq[slot])
+        return max([*st.live, *st.prefilling], key=key)
 
     def _preempt(self, st: "_SchedState", slot: int):
-        req = st.live.pop(slot)
+        if slot in st.prefilling:
+            req = st.prefilling.pop(slot).req
+        else:
+            req = st.live.pop(slot)
         st.mgr.release(slot)
         # recompute-style resume: re-prefilling prompt+generated recreates
         # the exact cache the slot held, so greedy output is unchanged and
@@ -1308,8 +1628,21 @@ class ServeEngine:
 
 
 @dataclasses.dataclass
+class _ChunkState:
+    """An admitted prompt mid-chunked-prefill: pages mapped, ``done``
+    prompt tokens written, not yet in the decode batch."""
+    req: Request
+    done: int = 0
+
+
+def _empty_timeseries() -> Dict[str, list]:
+    return {"t_s": [], "round": [], "queue_depth": [], "live_slots": [],
+            "utilization": [], "free_pages": []}
+
+
+@dataclasses.dataclass
 class _SchedState:
-    """Mutable per-serve() scheduler state (host-side bookkeeping)."""
+    """Mutable per-session scheduler state (host-side bookkeeping)."""
     queue: deque
     mgr: Optional[PagedCacheManager]
     t0: float
@@ -1341,6 +1674,14 @@ class _SchedState:
     forced_expired: set = dataclasses.field(default_factory=set)
     arrival: Dict[int, int] = dataclasses.field(default_factory=dict)
     zero_mask: Any = None      # cached all-false (slots,) injection mask
+    seq_arrival: int = 0       # next arrival stamp (open-loop submissions)
+    # ---- SLA-aware scheduling / observability
+    prefilling: Dict[int, _ChunkState] = dataclasses.field(
+        default_factory=dict)
+    tbt: List[float] = dataclasses.field(default_factory=list)
+    last_emit: Dict[int, float] = dataclasses.field(default_factory=dict)
+    timeseries: Dict[str, list] = dataclasses.field(
+        default_factory=_empty_timeseries)
     stragglers: List[dict] = dataclasses.field(default_factory=list)
     durations: List[float] = dataclasses.field(default_factory=list)
     spec_hist: Dict[int, deque] = dataclasses.field(default_factory=dict)

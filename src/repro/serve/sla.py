@@ -1,0 +1,96 @@
+"""SLA accounting for the serving engine.
+
+Two latency figures define a serving SLA and neither is a mean:
+
+  TTFT  time-to-first-token, enqueue -> first sampled token.  Queueing
+        + admission + prefill; the number a user staring at a blank
+        screen experiences.
+  TBT   time-between-tokens, the gap between consecutive token
+        emissions of one request.  Decode cadence; the number a user
+        watching tokens stream experiences.  A speculative window that
+        commits k tokens at once contributes one real gap and k-1
+        zeros — the burst is how the tokens actually arrived.
+
+Both are summarized as p50/p95/p99 percentiles (tail latency is the
+SLA), alongside goodput — tokens per second delivered by requests that
+finished ``ok``; shed/timeout/failed work is by definition not good —
+and the terminal-status census.  The engine attaches the summary to
+``last_stats["sla"]`` at the end of every session (and on abort), so
+closed-loop ``serve()`` calls, the async open-loop server, benchmarks,
+and the launch CLI all read one schema.
+
+Host-side and engine-agnostic: the input is the engine's ``last_stats``
+ledger (int keys = per-request entries), not the engine itself.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+PERCENTILES = (50, 95, 99)
+
+
+def percentiles(samples: List[float]) -> Dict[str, Optional[float]]:
+    """p50/p95/p99 + mean/max over ``samples`` (None-filled when empty,
+    so consumers can format a row without special-casing)."""
+    out: Dict[str, Optional[float]] = {f"p{p}": None for p in PERCENTILES}
+    out.update(mean=None, max=None, n=len(samples))
+    if samples:
+        a = np.asarray(samples, np.float64)
+        for p in PERCENTILES:
+            out[f"p{p}"] = float(np.percentile(a, p))
+        out["mean"] = float(a.mean())
+        out["max"] = float(a.max())
+    return out
+
+
+def summarize(stats: Dict[Any, Any], *, tbt_s: List[float],
+              wall_s: float) -> Dict[str, Any]:
+    """One SLA summary from an engine status ledger.
+
+    ``stats``: the engine's per-session ledger — int keys are requests
+    (dicts with ``enqueued_s`` / ``first_token_s`` / ``status`` /
+    ``tokens``), string keys (stragglers, timeseries) are ignored.
+    ``tbt_s``: raw time-between-token gap samples, seconds.
+    ``wall_s``: session wall time, the goodput denominator.
+    """
+    per = {u: s for u, s in stats.items() if isinstance(u, int)}
+    ttft = [s["first_token_s"] - s.get("enqueued_s", 0.0)
+            for s in per.values() if "first_token_s" in s]
+    statuses: Dict[str, int] = {}
+    ok_tokens = 0
+    for s in per.values():
+        key = s.get("status") or "in-flight"
+        statuses[key] = statuses.get(key, 0) + 1
+        if s.get("status") == "ok":
+            ok_tokens += int(s.get("tokens", 0))
+    return {
+        "requests": len(per),
+        "statuses": statuses,
+        "ttft_ms": percentiles([t * 1e3 for t in ttft]),
+        "tbt_ms": percentiles([t * 1e3 for t in tbt_s]),
+        "ok_tokens": ok_tokens,
+        "goodput_tok_s": ok_tokens / max(wall_s, 1e-9),
+        "wall_s": wall_s,
+    }
+
+
+def format_summary(sla: Dict[str, Any]) -> str:
+    """Human-readable SLA block (launch CLI + benchmark stdout)."""
+    def row(name, pct):
+        cells = " ".join(
+            f"{k}={pct[k]:8.2f}ms" if pct[k] is not None else f"{k}=     n/a"
+            for k in ("p50", "p95", "p99"))
+        return f"  {name:<6} {cells}  (n={pct['n']})"
+
+    statuses = " ".join(f"{k}={v}" for k, v in
+                        sorted(sla["statuses"].items()))
+    return "\n".join([
+        row("ttft", sla["ttft_ms"]),
+        row("tbt", sla["tbt_ms"]),
+        f"  goodput {sla['goodput_tok_s']:.1f} tok/s "
+        f"({sla['ok_tokens']} ok tokens / {sla['wall_s']:.2f}s)",
+        f"  statuses: {statuses}",
+    ])

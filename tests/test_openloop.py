@@ -1,0 +1,342 @@
+"""Async open-loop serving: streaming parity, lifecycle races, SLA
+scheduling, and chaos-under-load.
+
+The load-bearing property, inherited from the sync engine: outputs are
+a pure function of (params, prompt, uid, temperature) — so tokens
+streamed by the async iterator must be bit-identical to the batch
+``serve()`` output for the same requests, whatever the arrival process,
+admission order, chunked prefill, preemption, or fault schedule did to
+the execution.  Lifecycle races (cancel vs shed vs deadline) must
+resolve to exactly one terminal status per request.
+
+No pytest-asyncio in the container: each test drives its coroutine with
+``asyncio.run`` directly.
+"""
+
+import asyncio
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import reduced_config
+from repro.models.lm import Model
+from repro.serve import (
+    STATUS_CANCELLED,
+    STATUS_OK,
+    STATUS_SHED,
+    TERMINAL_STATUSES,
+    AsyncServeEngine,
+    Fault,
+    FaultSchedule,
+    Request,
+    ServeEngine,
+    make_workload,
+    serve_open_loop,
+)
+
+_CACHE = {}
+
+
+def _model(arch="qwen2-1.5b"):
+    if arch not in _CACHE:
+        cfg = reduced_config(arch)
+        model = Model(cfg, compute_dtype=jnp.float32)
+        params = model.init(jax.random.PRNGKey(1))
+        _CACHE[arch] = (cfg, model, params)
+    return _CACHE[arch]
+
+
+def _engine(**kw):
+    cfg, model, params = _model()
+    kw = {"max_seq": 48, "batch_slots": 2, "temperature": 0.0, "seed": 0,
+          "cache_layout": "paged", "page_size": 8, **kw}
+    return ServeEngine(model, params, **kw)
+
+
+def _reqs(n, seed=3, plo=3, phi=12, mlo=2, mhi=7, **fields):
+    cfg, _, _ = _model()
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(
+                        0, cfg.vocab,
+                        size=int(rng.integers(plo, phi))).tolist(),
+                    max_new_tokens=int(rng.integers(mlo, mhi)), **fields)
+            for i in range(n)]
+
+
+def _fresh(reqs):
+    """Copies safe to re-serve (serve() mutates ``generated``)."""
+    return [dataclasses.replace(r, generated=None) for r in reqs]
+
+
+def _statuses(eng, uids):
+    return {u: eng.last_stats[u]["status"] for u in uids}
+
+
+# ------------------------------------------------------- streaming parity
+def test_streaming_bit_identical_to_batch_serve():
+    """Satellite: async iterator tokens == batch serve() outputs, and
+    they arrive incrementally with per-stream OK statuses."""
+    ref_eng = _engine()
+    ref = ref_eng.serve(_reqs(5))
+
+    async def run():
+        eng = _engine()
+        async with AsyncServeEngine(eng, clock="round") as srv:
+            streams = [await srv.submit(r, arrival_round=0)
+                       for r in _fresh(_reqs(5))]
+            outs = {s.uid: await s.drain() for s in streams}
+            await srv.close()
+        return eng, streams, outs
+
+    eng, streams, outs = asyncio.run(run())
+    assert outs == ref
+    assert all(s.status == STATUS_OK for s in streams)
+    assert all(s.tokens == ref[s.uid] for s in streams)
+    # SLA summary covers the session
+    sla = eng.last_stats["sla"]
+    assert sla["statuses"] == {"ok": 5}
+    assert sla["ok_tokens"] == sum(len(t) for t in ref.values())
+
+
+def test_streaming_parity_under_forced_preemption():
+    """Satellite: a pool tight enough to preempt mid-stream must not
+    change a single streamed token."""
+    reqs = [Request(uid=0, prompt=list(range(1, 9)), max_new_tokens=12),
+            Request(uid=1, prompt=list(range(9, 17)), max_new_tokens=12)]
+    ref_eng = _engine(num_pages=4)
+    ref = ref_eng.serve(_fresh(reqs))
+    assert ref_eng.preemptions > 0, "pool not tight enough to preempt"
+
+    async def run():
+        eng = _engine(num_pages=4)
+        async with AsyncServeEngine(eng, clock="round") as srv:
+            streams = [await srv.submit(r, arrival_round=0)
+                       for r in _fresh(reqs)]
+            await asyncio.gather(*(s.drain() for s in streams))
+            await srv.close()
+        return eng, {s.uid: s.tokens for s in streams if s.status == STATUS_OK}
+
+    eng, outs = asyncio.run(run())
+    assert eng.preemptions > 0
+    assert outs == ref
+
+
+def test_open_loop_arrivals_match_closed_loop():
+    """Poisson arrivals on the round clock: the OK set's outputs equal a
+    closed-loop serve of the same requests."""
+    cfg, _, _ = _model()
+    wl = make_workload("poisson", 8, vocab=cfg.vocab, seed=5, rate=1.0,
+                       prompt_median=6, prompt_max=12, out_median=4,
+                       out_max=8)
+
+    async def run():
+        eng = _engine(max_queue=16)
+        ok = await serve_open_loop(eng, wl, clock="round")
+        return eng, ok
+
+    eng, ok = asyncio.run(run())
+    ref_eng = _engine()
+    ref = ref_eng.serve([dataclasses.replace(t.request, generated=None)
+                         for t in wl if t.request.uid in ok])
+    assert ok == ref
+
+
+# ------------------------------------------------------- lifecycle races
+def test_cancel_racing_shed_exactly_one_terminal_status():
+    """Satellite: a request cancelled while queued-for-shed resolves to
+    exactly one terminal status — and cancellation wins the same-round
+    race (the lifecycle sweep runs before admission control)."""
+
+    async def run():
+        eng = _engine(max_queue=1, batch_slots=1)
+        async with AsyncServeEngine(eng, clock="round") as srv:
+            streams = [await srv.submit(r, arrival_round=0)
+                       for r in _reqs(4, phi=6, mhi=4)]
+            # uid 3 is the newest queued request — the shed victim the
+            # overflow sweep would pick this very round
+            srv.cancel(3)
+            await asyncio.gather(*(s.drain() for s in streams))
+            await srv.close()
+        return eng, streams
+
+    eng, streams = asyncio.run(run())
+    sts = _statuses(eng, range(4))
+    assert all(s in TERMINAL_STATUSES for s in sts.values())
+    assert sts[3] == STATUS_CANCELLED  # cancel wins the race
+    assert STATUS_SHED in {sts[1], sts[2]}  # overflow still shed someone
+    # stream statuses mirror the ledger, one terminal each
+    assert all(streams[u].status == sts[u] for u in range(4))
+
+
+def test_cancel_racing_deadline_exactly_one_terminal_status():
+    """Forced deadline expiry and cancel landing on the same round must
+    not double-terminalize; the sweep order makes 'cancelled' the
+    deterministic winner."""
+    faults = FaultSchedule([
+        Fault(kind="deadline", step=1, uid=1),
+        Fault(kind="cancel", step=1, uid=1),
+        Fault(kind="deadline", step=1, uid=2),
+    ])
+
+    async def run():
+        eng = _engine(batch_slots=1)
+        async with AsyncServeEngine(eng, faults=faults,
+                                    clock="round") as srv:
+            streams = [await srv.submit(r, arrival_round=0)
+                       for r in _reqs(3, phi=6, mlo=4, mhi=8)]
+            await asyncio.gather(*(s.drain() for s in streams))
+            await srv.close()
+        return eng, streams
+
+    eng, streams = asyncio.run(run())
+    sts = _statuses(eng, range(3))
+    assert all(s in TERMINAL_STATUSES for s in sts.values())
+    assert sts[1] == STATUS_CANCELLED
+    assert sts[2] == "timeout"
+    assert streams[1].status == STATUS_CANCELLED
+
+
+def test_never_fits_fails_without_killing_session():
+    """An impossible open-loop submission fails terminally; the session
+    keeps serving everyone else (the closed-loop serve() raises
+    instead)."""
+
+    async def run():
+        eng = _engine()
+        async with AsyncServeEngine(eng, clock="round") as srv:
+            good = await srv.submit(
+                Request(uid=0, prompt=[1, 2, 3], max_new_tokens=3))
+            bad = await srv.submit(
+                Request(uid=1, prompt=list(range(60)), max_new_tokens=3))
+            await asyncio.gather(good.drain(), bad.drain())
+            await srv.close()
+        return eng, good, bad
+
+    eng, good, bad = asyncio.run(run())
+    assert good.status == STATUS_OK
+    assert bad.status == "failed"
+    assert "never-fits" in eng.last_stats[1]["reason"]
+
+
+def test_duplicate_uid_fails_stream_only():
+    async def run():
+        eng = _engine()
+        async with AsyncServeEngine(eng, clock="round") as srv:
+            a = await srv.submit(
+                Request(uid=7, prompt=[1, 2, 3], max_new_tokens=3))
+            b = await srv.submit(
+                Request(uid=7, prompt=[4, 5, 6], max_new_tokens=3))
+            tokens_a = await a.drain()
+            try:
+                await b.drain()
+                raised = False
+            except ValueError:
+                raised = True
+            await srv.close()
+        return a, tokens_a, raised
+
+    a, tokens_a, raised = asyncio.run(run())
+    assert raised and a.status == STATUS_OK and len(tokens_a) == 3
+
+
+# --------------------------------------------------- SLA-aware scheduling
+def test_priority_classes_schedule_first():
+    """Lower priority value admits first on a single slot; outputs stay
+    bit-identical to the all-default run (priority moves requests in
+    time, never in value)."""
+    base = _engine(batch_slots=1)
+    ref = base.serve(_reqs(3, phi=6, mhi=4))
+
+    eng = _engine(batch_slots=1)
+    rs = _reqs(3, phi=6, mhi=4)
+    rs[0].priority, rs[2].priority = 5, 0
+    out = eng.serve(rs)
+    fin = {u: eng.last_stats[u]["finished_s"] for u in range(3)}
+    assert fin[2] < fin[1] < fin[0]
+    assert out == ref
+
+
+def test_queue_watermark_sheds_best_effort_only():
+    eng = _engine(batch_slots=1, queue_watermark=1, shed_priority=2)
+    rs = _reqs(6, phi=5, mhi=3)
+    for r in rs[3:]:
+        r.priority = 2
+    eng.serve(rs)
+    sts = _statuses(eng, range(6))
+    assert all(sts[u] == STATUS_OK for u in range(3))
+    assert STATUS_SHED in {sts[u] for u in range(3, 6)}
+    assert all(s in (STATUS_OK, STATUS_SHED) for s in sts.values())
+
+
+def test_free_page_watermark_defers_but_preserves_outputs():
+    ref = _engine().serve(_reqs(5))
+    eng = _engine(free_page_watermark=0.3)
+    out = eng.serve(_fresh(_reqs(5)))
+    assert out == ref
+    assert _statuses(eng, range(5)) == {u: STATUS_OK for u in range(5)}
+
+
+def test_chunked_prefill_bit_identical():
+    """A prefill budget slices long prompts into per-round chunks; the
+    logits path is the suffix prefill, so outputs must not move."""
+    reqs = _reqs(4, seed=7, plo=20, phi=40, mlo=3, mhi=6)
+    ref = _engine(max_seq=64).serve(reqs)
+    eng = _engine(max_seq=64, prefill_budget=8, prompt_block=8)
+    out = eng.serve(_fresh(reqs))
+    assert out == ref
+    chunks = [eng.last_stats[u].get("prefill_chunks", 0) for u in range(4)]
+    assert max(chunks) > 1, "chunked path never engaged"
+    # a chunked admission must not stall TBT: time series recorded
+    assert len(eng.last_stats["timeseries"]["round"]) > 0
+
+
+def test_sla_summary_and_timeseries_schema():
+    eng = _engine(queue_watermark=8)
+    eng.serve(_reqs(5))
+    sla = eng.last_stats["sla"]
+    for k in ("p50", "p95", "p99"):
+        assert sla["ttft_ms"][k] is not None and sla["ttft_ms"][k] >= 0
+        assert sla["tbt_ms"][k] is not None and sla["tbt_ms"][k] >= 0
+    assert sla["requests"] == 5
+    assert sum(sla["statuses"].values()) == 5
+    ts = eng.last_stats["timeseries"]
+    n = len(ts["round"])
+    assert n > 0
+    assert all(len(ts[k]) == n for k in
+               ("t_s", "queue_depth", "live_slots", "utilization"))
+    assert len(ts["free_pages"]) == n  # paged layout records the pool
+
+
+# ------------------------------------------------------- chaos under load
+def test_chaos_under_open_loop_burst():
+    """Faults composed with a bursty arrival process: statuses still
+    partition, the allocator audits clean and leak-free, and survivors
+    are bit-identical to a fault-free closed-loop run."""
+    cfg, _, _ = _model()
+    wl = make_workload("bursty", 10, vocab=cfg.vocab, seed=11, rate=2.0,
+                       prompt_median=6, prompt_max=12, out_median=4,
+                       out_max=8)
+    faults = FaultSchedule([
+        Fault(kind="nan", step=4, uid=2),
+        Fault(kind="kernel", step=6),
+        Fault(kind="cancel", step=3, uid=5),
+    ])
+
+    async def run():
+        eng = _engine(max_queue=8, audit=True)
+        ok = await serve_open_loop(eng, wl, faults=faults, clock="round")
+        return eng, ok
+
+    eng, ok = asyncio.run(run())
+    sts = _statuses(eng, range(10))
+    assert all(s in TERMINAL_STATUSES for s in sts.values())
+    assert eng.last_pool_stats.audit_ok
+    assert eng.last_pool_stats.used_pages == 0
+    assert sts[5] == STATUS_CANCELLED
+    ref_eng = _engine()
+    ref = ref_eng.serve([dataclasses.replace(t.request, generated=None)
+                         for t in wl if t.request.uid in ok])
+    assert ok == ref, "surviving outputs diverged under chaos"

@@ -1,0 +1,129 @@
+"""Open-loop workload generators: determinism, process shape, mixtures.
+
+Pure host-side tests (no model, no device): the generators feed the
+bit-parity gates in the open-loop benchmark, so *deterministic* and
+*well-formed* are the properties that matter — the same (kind, n, seed)
+must be the same workload byte for byte."""
+
+import numpy as np
+import pytest
+
+from repro.serve import (
+    WORKLOAD_KINDS,
+    bursty_arrivals,
+    describe,
+    lognormal_lengths,
+    make_workload,
+    poisson_arrivals,
+)
+
+VOCAB = 128
+
+
+def _flat(timed):
+    return [(t.arrival_s, t.request.uid, tuple(t.request.prompt),
+             t.request.max_new_tokens, t.request.priority)
+            for t in timed]
+
+
+@pytest.mark.parametrize("kind", WORKLOAD_KINDS)
+def test_deterministic_same_seed(kind):
+    a = make_workload(kind, 24, vocab=VOCAB, seed=7, rate=4.0)
+    b = make_workload(kind, 24, vocab=VOCAB, seed=7, rate=4.0)
+    assert _flat(a) == _flat(b)
+
+
+def test_different_seeds_differ():
+    a = make_workload("poisson", 24, vocab=VOCAB, seed=1)
+    b = make_workload("poisson", 24, vocab=VOCAB, seed=2)
+    assert _flat(a) != _flat(b)
+
+
+def test_closed_arrivals_at_zero():
+    wl = make_workload("closed", 10, vocab=VOCAB, seed=0)
+    assert all(t.arrival_s == 0.0 for t in wl)
+    assert [t.request.uid for t in wl] == list(range(10))
+
+
+def test_poisson_rate_and_monotonicity():
+    rng = np.random.default_rng(0)
+    arr = poisson_arrivals(4000, 8.0, rng)
+    assert np.all(np.diff(arr) > 0)
+    # mean inter-arrival ~ 1/rate (law of large numbers, loose band)
+    assert 1 / 8.0 * 0.9 < np.diff(arr).mean() < 1 / 8.0 * 1.1
+
+
+def test_bursty_is_bimodal():
+    rng = np.random.default_rng(3)
+    arr = bursty_arrivals(4000, 8.0, rng, burst_factor=8.0, mean_dwell=16)
+    gaps = np.diff(arr)
+    assert np.all(gaps > 0)
+    # two rate regimes: the calm-state mean gap dwarfs the burst-state
+    # one, so the top and bottom gap quartiles are far apart
+    lo, hi = np.percentile(gaps, [25, 75])
+    assert hi > 5 * lo
+
+
+def test_lognormal_lengths_clipped():
+    rng = np.random.default_rng(1)
+    lens = lognormal_lengths(2000, rng, median=12, sigma=0.8, lo=2, hi=64)
+    assert lens.min() >= 2 and lens.max() <= 64
+    assert lens.dtype.kind == "i"
+    # heavy tail: some draws hit the clip ceiling
+    assert (lens == 64).sum() > 0
+
+
+def test_prompt_and_output_bounds():
+    wl = make_workload("poisson", 64, vocab=VOCAB, seed=4,
+                       prompt_min=3, prompt_max=20, out_min=2, out_max=9)
+    for t in wl:
+        assert 3 <= len(t.request.prompt) <= 20
+        assert 2 <= t.request.max_new_tokens <= 9
+        assert all(0 <= tok < VOCAB for tok in t.request.prompt)
+
+
+def test_shared_prefix_mixture():
+    wl = make_workload("poisson", 80, vocab=VOCAB, seed=5,
+                       shared_prefix_frac=0.5, n_prefixes=2, prefix_len=8)
+    heads = {}
+    for t in wl:
+        heads.setdefault(tuple(t.request.prompt[:8]), []).append(
+            t.request.uid)
+    shared = [uids for uids in heads.values() if len(uids) > 1]
+    # a 0.5 mixture over 2 prefixes must produce heavily-shared heads
+    assert sum(len(u) for u in shared) > 20
+    # shared prompts still end with private tokens (longer than prefix)
+    assert all(len(t.request.prompt) > 8 for t in wl
+               if tuple(t.request.prompt[:8]) in
+               {h for h, u in heads.items() if len(u) > 1})
+
+
+def test_priority_mix():
+    wl = make_workload("poisson", 200, vocab=VOCAB, seed=6,
+                       priority_mix=[(0, 0.2), (1, 0.5), (2, 0.3)])
+    counts = {}
+    for t in wl:
+        counts[t.request.priority] = counts.get(t.request.priority, 0) + 1
+    assert set(counts) == {0, 1, 2}
+    assert counts[1] > counts[0]  # 0.5 vs 0.2, n=200 — comfortably apart
+
+
+def test_deadlines_plumbed():
+    wl = make_workload("poisson", 5, vocab=VOCAB, seed=0,
+                       deadline_ms=1234.0, ttft_deadline_ms=99.0)
+    assert all(t.request.deadline_ms == 1234.0 for t in wl)
+    assert all(t.request.ttft_deadline_ms == 99.0 for t in wl)
+
+
+def test_describe_census():
+    wl = make_workload("poisson", 32, vocab=VOCAB, seed=9, rate=4.0)
+    d = describe(wl)
+    assert d["n"] == 32
+    assert d["span_s"] > 0
+    assert 0 < d["mean_rate"] < 100
+    assert d["priorities"] == {1: 32}
+
+
+def test_unknown_kind_rejected():
+    with pytest.raises(ValueError, match="kind"):
+        make_workload("sinusoidal", 4, vocab=VOCAB)
