@@ -530,7 +530,228 @@ def run_faults(smoke: bool = False) -> List[Dict]:
     return rows
 
 
-_SECTIONS = ("fastpath", "layouts", "page_sweep", "shared_prefix", "faults")
+def run_tiered(smoke: bool = False) -> List[Dict]:
+    """Tiered KV memory: int8 pools, swap preemption, eviction policies.
+
+    Four subsections, three of them hard-gated (any break exits
+    non-zero — the CI quantized-serve gate):
+
+      quality    greedy outputs from an int8 page pool must be
+                 bit-identical to the bf16 pool on the smoke model
+      parity     kernel-path quantized attention (fused dequant in the
+                 page gather, decode + verify families) must match the
+                 chunked-``jnp`` SW lowering — the paper's HW-vs-SW
+                 interchangeability extended to the quantized axis
+      capacity   from the SAME pool byte budget, int8 pages must admit
+                 >= 1.8x the concurrent requests bf16 admits (the
+                 area-vs-bandwidth trade measured as admission capacity)
+      swap       swap-tier preemption must resume bit-identical to
+                 requeue-recompute under forced preemption, with and
+                 without an injected mid-serve kernel failure
+
+    Plus an ungated eviction-policy sweep: a seeded Zipf-skewed prefix
+    popularity workload through the radix index under lru / lfu /
+    deepest-subtree-first, reporting cached tokens, evictions, and
+    sharing ratio per policy.
+    """
+    arch = "qwen2-1.5b"
+    if smoke:
+        slots, max_seq, n_req, max_new, plo, phi = 2, 128, 6, 8, 4, 12
+        page_size = 8
+    else:
+        slots, max_seq, n_req, max_new, plo, phi = 4, 256, 10, 16, 8, 33
+        page_size = 16
+    cfg = reduced_config(arch)
+    cfg = dataclasses.replace(cfg, max_seq=max_seq)
+    model = Model(cfg, compute_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    rows: List[Dict] = []
+
+    # ---- quality gate: int8 pool == bf16 pool, greedy, end to end
+    reqs = _requests(n_req, cfg.vocab, plo, phi, max_new, seed=5)
+    outs, engs = {}, {}
+    for kv in ("bf16", "int8"):
+        e = ServeEngine(model, params, max_seq=max_seq, batch_slots=slots,
+                        temperature=0.0, seed=0, cache_layout="paged",
+                        page_size=page_size, kv_dtype=kv, audit=True)
+        outs[kv] = e.serve([dataclasses.replace(r, generated=None)
+                            for r in reqs])
+        engs[kv] = e
+    bad = [u for u in outs["bf16"]
+           if outs["int8"].get(u) != outs["bf16"][u]]
+    match_frac = 1.0 - len(bad) / n_req
+    # smoke shapes (short horizons) must be bit-identical — the CI gate;
+    # the full sweep's longer generations tolerate occasional argmax
+    # flips at quantization-error scale, gated at a match floor instead
+    if smoke and bad:
+        raise SystemExit(f"QUANT QUALITY BROKEN: int8 greedy outputs "
+                         f"differ from bf16 for uids {bad}")
+    if match_frac < 0.5:
+        raise SystemExit(f"QUANT QUALITY BROKEN: only {match_frac:.0%} of "
+                         f"int8 greedy outputs match bf16 (uids {bad})")
+    for kv, e in engs.items():
+        p = e.last_pool_stats
+        if not p.audit_ok:
+            raise SystemExit(f"AUDIT BROKEN ({kv}): {p.audit_errors}")
+    rows.append({"section": "tiered", "mode": "quality",
+                 "requests": n_req, "greedy_identical": not bad,
+                 "match_fraction": match_frac})
+
+    # ---- kernel-vs-SW parity gate on the quantized gather (both
+    # families; interpret mode off-TPU, like every other parity gate)
+    from repro.models.attention import (
+        paged_decode_attention,
+        paged_verify_attention,
+    )
+    from repro.serve.kv_cache import quantize_kv_rows
+
+    hkv, d = cfg.n_kv_heads, cfg.d_model // cfg.n_heads
+    p_pages, nb, b, t_w = 13, 4, 3, 4
+    rng = np.random.default_rng(7)
+    kv_f32 = rng.normal(size=(2, p_pages, page_size, hkv, d)) \
+        .astype(np.float32)
+    kq, ks = quantize_kv_rows(jnp.asarray(kv_f32[0]))
+    vq, vs = quantize_kv_rows(jnp.asarray(kv_f32[1]))
+    tables = jnp.asarray(
+        rng.permutation(np.arange(1, p_pages))[:b * nb].reshape(b, nb),
+        jnp.int32)
+    pos = jnp.asarray(rng.integers(1, nb * page_size - t_w, b), jnp.int32)
+    for fam, q_shape, fn, kw in (
+            ("decode", (b, 1, cfg.n_heads, d), paged_decode_attention, {}),
+            ("verify", (b, t_w, cfg.n_heads, d), paged_verify_attention,
+             {})):
+        q = jnp.asarray(rng.normal(size=q_shape), jnp.float32)
+        got = {be: np.asarray(fn(q, kq, vq, tables, pos, k_scales=ks,
+                                 v_scales=vs, backend=be, **kw))
+               for be in ("kernel", "jnp")}
+        err = float(np.max(np.abs(got["kernel"] - got["jnp"])))
+        if not np.allclose(got["kernel"], got["jnp"], atol=2e-3,
+                           rtol=1e-3):
+            raise SystemExit(f"QUANT PARITY BROKEN ({fam}): kernel vs "
+                             f"SW max |diff| = {err:.2e}")
+        rows.append({"section": "tiered", "mode": f"parity-{fam}",
+                     "max_abs_diff": err, "parity_ok": True})
+
+    # ---- capacity gate: same byte budget, >= 1.8x concurrent admissions
+    def _pool_bytes(kv, num_pages):
+        return _pool_nbytes(jax.eval_shape(
+            lambda: model.init_cache(slots_cap, max_seq, layout="paged",
+                                     page_size=page_size,
+                                     num_pages=num_pages, kv_dtype=kv)))
+
+    slots_cap = 8 if smoke else 12
+    pages_bf16 = 11 if smoke else 17
+    budget = _pool_bytes("bf16", pages_bf16)
+    per_page_int8 = _pool_bytes("int8", pages_bf16) / pages_bf16
+    pages_int8 = int(budget // per_page_int8)
+    prompt_len, cap_new = 2 * page_size, page_size
+    cap_reqs = [Request(uid=i,
+                        prompt=rng.integers(0, cfg.vocab,
+                                            prompt_len).tolist(),
+                        max_new_tokens=cap_new)
+                for i in range(slots_cap)]
+    concurrency = {}
+    for kv, pages in (("bf16", pages_bf16), ("int8", pages_int8)):
+        e = ServeEngine(model, params, max_seq=max_seq,
+                        batch_slots=slots_cap, temperature=0.0, seed=0,
+                        cache_layout="paged", page_size=page_size,
+                        num_pages=pages, kv_dtype=kv, audit=True)
+        out = e.serve([dataclasses.replace(r, generated=None)
+                       for r in cap_reqs])
+        if len(out) != slots_cap:
+            raise SystemExit(f"CAPACITY RUN BROKEN ({kv}): "
+                             f"{slots_cap - len(out)} requests lost")
+        concurrency[kv] = max(e.last_stats["timeseries"]["live_slots"])
+        rows.append({
+            "section": "tiered", "mode": f"capacity-{kv}",
+            "pool_pages": pages, "pool_mb": _pool_bytes(kv, pages) / 1e6,
+            "budget_mb": budget / 1e6,
+            "concurrent_requests": concurrency[kv],
+            "preemptions": e.preemptions,
+        })
+    ratio = concurrency["int8"] / max(concurrency["bf16"], 1)
+    if ratio < 1.8:
+        raise SystemExit(f"CAPACITY GATE BROKEN: int8 admitted only "
+                         f"{ratio:.2f}x the bf16 concurrency "
+                         f"({concurrency}) from a {budget / 1e6:.2f} MB "
+                         f"budget")
+    rows.append({"section": "tiered", "mode": "capacity-ratio",
+                 "int8_over_bf16": ratio, "gate": 1.8})
+
+    # ---- swap-vs-requeue bit-parity under forced preempt (+ recovery)
+    sw_reqs = [Request(uid=0, prompt=list(range(1, 2 * page_size + 1)),
+                       max_new_tokens=2 * page_size),
+               Request(uid=1, prompt=list(range(50, 50 + 2 * page_size)),
+                       max_new_tokens=2 * page_size)]
+    swap_outs = {}
+    for policy in ("requeue", "swap"):
+        for with_fault in (False, True):
+            e = ServeEngine(model, params, max_seq=max_seq, batch_slots=2,
+                            temperature=0.0, seed=0, cache_layout="paged",
+                            page_size=page_size, num_pages=6,
+                            kv_dtype="int8", preempt=policy, audit=True)
+            fs = (FaultSchedule([Fault("kernel", step=3)])
+                  if with_fault else None)
+            swap_outs[(policy, with_fault)] = e.serve(
+                [dataclasses.replace(r, generated=None) for r in sw_reqs],
+                faults=fs)
+            if policy == "swap" and not with_fault \
+                    and e.last_pool_stats.swap_ins == 0:
+                raise SystemExit("SWAP GATE BROKEN: forced-preempt config "
+                                 "never exercised the swap tier")
+    baseline = swap_outs[("requeue", False)]
+    for key, out in swap_outs.items():
+        if out != baseline:
+            raise SystemExit(f"SWAP PARITY BROKEN: {key} outputs differ "
+                             f"from requeue-preemption")
+    rows.append({"section": "tiered", "mode": "swap-parity",
+                 "configs": 4, "bit_identical": True})
+
+    # ---- eviction-policy sweep: Zipf-skewed prefix popularity
+    n_prefix, ev_reqs = (4, 10) if smoke else (6, 18)
+    zipf = 1.0 / np.arange(1, n_prefix + 1)
+    prefixes = [rng.integers(0, cfg.vocab, 2 * page_size).tolist()
+                for _ in range(n_prefix)]
+    picks = rng.choice(n_prefix, size=ev_reqs, p=zipf / zipf.sum())
+    ev_requests = [
+        Request(uid=i,
+                prompt=prefixes[int(k)]
+                + rng.integers(0, cfg.vocab,
+                               int(rng.integers(2, page_size))).tolist(),
+                max_new_tokens=4)
+        for i, k in enumerate(picks)]
+    # pool too small to retain every prefix -> the index must evict;
+    # exact (f32) pages so the sweep is bit-comparable across policies
+    ev_pages = 9
+    ev_baseline = None
+    for policy in ("lru", "lfu", "deepest"):
+        e = ServeEngine(model, params, max_seq=max_seq, batch_slots=2,
+                        temperature=0.0, seed=0, cache_layout="paged",
+                        page_size=page_size, num_pages=ev_pages,
+                        prefix_sharing=True, evict_policy=policy,
+                        min_cached_tokens=page_size, audit=True)
+        out = e.serve([dataclasses.replace(r, generated=None)
+                       for r in ev_requests])
+        if ev_baseline is None:
+            ev_baseline = out
+        elif out != ev_baseline:
+            raise SystemExit(f"EVICTION PARITY BROKEN: policy {policy} "
+                             f"changed greedy outputs")
+        p = e.last_pool_stats
+        rows.append({
+            "section": "tiered", "mode": f"evict-{policy}",
+            "requests": ev_reqs, "distinct_prefixes": n_prefix,
+            "pool_pages": ev_pages,
+            "cached_prompt_tokens": p.cached_prefix_tokens,
+            "evictions": p.evictions,
+            "sharing_ratio": p.sharing_ratio,
+            "preemptions": e.preemptions,
+        })
+    return rows
+
+
+_SECTIONS = ("fastpath", "layouts", "page_sweep", "shared_prefix", "faults",
+             "tiered")
 
 
 def main(argv=None):
@@ -651,6 +872,41 @@ def main(argv=None):
               f"{xrows[1]['failed_uids']}, survivors identical: "
               f"{xrows[1]['survivors_identical']}")
         rows += xrows
+
+    if "tiered" in sections:
+        trows = run_tiered(smoke=args.smoke)
+        by_mode = {r["mode"]: r for r in trows}
+        cap = by_mode["capacity-ratio"]
+        print(f"\n== Tiered KV memory: int8 pages / swap preemption / "
+              f"eviction sweep (quality+parity+capacity+swap gated) ==")
+        print(f"int8 greedy == bf16 greedy: "
+              f"{by_mode['quality']['greedy_identical']} "
+              f"({by_mode['quality']['match_fraction']:.0%} of "
+              f"{by_mode['quality']['requests']} requests)")
+        for fam in ("decode", "verify"):
+            r = by_mode[f"parity-{fam}"]
+            print(f"quantized kernel-vs-SW parity ({fam}): max |diff| "
+                  f"{r['max_abs_diff']:.2e}")
+        for kv in ("bf16", "int8"):
+            r = by_mode[f"capacity-{kv}"]
+            print(f"capacity {kv:5s}: {r['pool_pages']:3d} pages "
+                  f"({r['pool_mb']:.2f} MB of {r['budget_mb']:.2f} MB "
+                  f"budget) -> {r['concurrent_requests']} concurrent, "
+                  f"{r['preemptions']} preemptions")
+        print(f"capacity ratio int8/bf16: {cap['int8_over_bf16']:.2f}x "
+              f"(gate >= {cap['gate']:.1f}x)")
+        print(f"swap-vs-requeue bit-parity: "
+              f"{by_mode['swap-parity']['bit_identical']} "
+              f"({by_mode['swap-parity']['configs']} configs incl. "
+              f"kernel-fault recovery)")
+        print(f"{'evict policy':>12s} {'cached_tok':>11s} {'evictions':>10s} "
+              f"{'share':>6s} {'preempt':>8s}")
+        for pol in ("lru", "lfu", "deepest"):
+            r = by_mode[f"evict-{pol}"]
+            print(f"{pol:>12s} {r['cached_prompt_tokens']:11d} "
+                  f"{r['evictions']:10d} {r['sharing_ratio']:6.2f} "
+                  f"{r['preemptions']:8d}")
+        rows += trows
 
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)

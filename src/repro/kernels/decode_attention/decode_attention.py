@@ -49,7 +49,8 @@ def _row_reduce(x: jnp.ndarray, width: int, op: str) -> jnp.ndarray:
 
 def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
                    m_scr, l_scr, acc_scr, *,
-                   scale: float, block_k: int, kv_steps: int):
+                   scale: float, block_k: int, kv_steps: int,
+                   ks_ref=None, vs_ref=None):
     b = pl.program_id(0)
     kj = pl.program_id(2)
     pos = pos_ref[b]
@@ -66,6 +67,11 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)           # (G, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)     # (bk, D)
+        if ks_ref is not None:
+            # int8 pages: dequant fused into the gather — the block was
+            # streamed at 1 byte/elem, the scale rides its own (bk, 1)
+            # per-row block through the same page index map
+            k = k * ks_ref[0]                         # (bk, 1) row scales
         g = q.shape[0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
@@ -80,6 +86,8 @@ def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
         p = jnp.exp(s - m_new)                        # (G, bk)
         l_scr[...] = alpha * l_scr[...] + _row_reduce(p, block_k, "sum")
         v = v_ref[0, :, 0, :].astype(jnp.float32)     # (bk, Dv)
+        if vs_ref is not None:
+            v = v * vs_ref[0]                         # (bk, 1) row scales
         # zero invalid rows: a partial tail block reads padding (NaN in
         # interpret mode) and 0 * NaN would poison the contraction
         row_ids = kj * block_k + jax.lax.broadcasted_iota(
@@ -157,22 +165,32 @@ def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 # paged variant: KV lives in a shared block pool, gathered via block tables
 # ---------------------------------------------------------------------------
 
-def _paged_decode_kernel(pos_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
-                         m_scr, l_scr, acc_scr, *,
-                         scale: float, page_size: int, kv_steps: int):
+def _paged_decode_kernel(pos_ref, bt_ref, q_ref, *refs,
+                         scale: float, page_size: int, kv_steps: int,
+                         quantized: bool = False):
     """Same online-softmax body as the dense kernel — the *only* paged
     difference is where the KV block came from (the index maps below walk
     the scalar-prefetched block table), which is exactly the paper's
-    HW-contiguous vs SW-indirection split."""
+    HW-contiguous vs SW-indirection split.  Quantized pools interleave a
+    per-row scale block behind each value block (k, k_scales, v,
+    v_scales); the dequant multiply fuses into the same body."""
     del bt_ref  # consumed by the index maps, not the body
+    if quantized:
+        k_ref, ks_ref, v_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
+        ks_ref = vs_ref = None
     _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
                    m_scr, l_scr, acc_scr,
-                   scale=scale, block_k=page_size, kv_steps=kv_steps)
+                   scale=scale, block_k=page_size, kv_steps=kv_steps,
+                   ks_ref=ks_ref, vs_ref=vs_ref)
 
 
 def paged_flash_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
                        v_pages: jnp.ndarray, block_tables: jnp.ndarray,
                        pos: jnp.ndarray, *, scale: Optional[float] = None,
+                       k_scales: Optional[jnp.ndarray] = None,
+                       v_scales: Optional[jnp.ndarray] = None,
                        interpret: Optional[bool] = None) -> jnp.ndarray:
     """q: (B, Hkv, G, D); k_pages/v_pages: (P, page_size, Hkv, Dv);
     block_tables: (B, NB) int32 physical page per logical block; pos: (B,)
@@ -185,11 +203,20 @@ def paged_flash_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
     prefix clamp their index to the last valid block — the Pallas pipeline
     only streams a block when its index *changes*, so dead blocks cost no
     memory traffic (and ``pl.when`` skips their compute).
+
+    ``k_scales`` / ``v_scales`` ((P, page_size) float32, both or neither)
+    mark the pages int8-quantized: each value block streams at 1
+    byte/element and its per-row scale block follows the same page index
+    map, so dequant happens after the gather, inside the kernel — the
+    capacity-for-bandwidth trade measured by the roofline replay.
     """
     from repro.kernels.common import default_interpret
 
     if interpret is None:
         interpret = default_interpret()
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("pass both k_scales and v_scales or neither")
+    quantized = k_scales is not None
     b, hkv, g, d = q.shape
     page_size = k_pages.shape[1]
     dv = v_pages.shape[-1]
@@ -198,25 +225,39 @@ def paged_flash_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
         scale = d ** -0.5
 
     kernel = functools.partial(_paged_decode_kernel, scale=scale,
-                               page_size=page_size, kv_steps=nb)
+                               page_size=page_size, kv_steps=nb,
+                               quantized=quantized)
 
     def kv_map(bi, h, j, pos_ref, bt_ref):
         # clamp at the last live block: no fresh fetch past the prefix
         jc = jnp.minimum(j, pos_ref[bi] // page_size)
         return (bt_ref[bi, jc], 0, h, 0)
 
+    def scale_map(bi, h, j, pos_ref, bt_ref):
+        jc = jnp.minimum(j, pos_ref[bi] // page_size)
+        return (bt_ref[bi, jc], 0, 0)
+
+    q_spec = pl.BlockSpec((1, 1, g, d),
+                          lambda bi, h, j, pos_ref, bt_ref: (bi, h, 0, 0),
+                          memory_space=pltpu.VMEM)
+    k_spec = pl.BlockSpec((1, page_size, 1, d), kv_map,
+                          memory_space=pltpu.VMEM)
+    v_spec = pl.BlockSpec((1, page_size, 1, dv), kv_map,
+                          memory_space=pltpu.VMEM)
+    s_spec = pl.BlockSpec((1, page_size, 1), scale_map,
+                          memory_space=pltpu.VMEM)
+    if quantized:
+        in_specs = [q_spec, k_spec, s_spec, v_spec, s_spec]
+        operands = (q, k_pages, k_scales[..., None], v_pages,
+                    v_scales[..., None])
+    else:
+        in_specs = [q_spec, k_spec, v_spec]
+        operands = (q, k_pages, v_pages)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, hkv, nb),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, d),
-                         lambda bi, h, j, pos_ref, bt_ref: (bi, h, 0, 0),
-                         memory_space=pltpu.VMEM),
-            pl.BlockSpec((1, page_size, 1, d), kv_map,
-                         memory_space=pltpu.VMEM),
-            pl.BlockSpec((1, page_size, 1, dv), kv_map,
-                         memory_space=pltpu.VMEM),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, dv),
                                lambda bi, h, j, pos_ref, bt_ref:
                                (bi, h, 0, 0),
@@ -235,5 +276,4 @@ def paged_flash_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(pos.astype(jnp.int32), block_tables.astype(jnp.int32), q,
-      k_pages, v_pages)
+    )(pos.astype(jnp.int32), block_tables.astype(jnp.int32), *operands)

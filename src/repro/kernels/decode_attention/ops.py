@@ -42,18 +42,23 @@ def decode_attention_op(q: jnp.ndarray, k_cache: jnp.ndarray,
 def paged_decode_attention_op(q: jnp.ndarray, k_pages: jnp.ndarray,
                               v_pages: jnp.ndarray,
                               block_tables: jnp.ndarray, pos: jnp.ndarray,
+                              k_scales: Optional[jnp.ndarray] = None,
+                              v_scales: Optional[jnp.ndarray] = None,
                               interpret: Optional[bool] = None
                               ) -> jnp.ndarray:
     """q: (B, 1, Hq, D); pages (P, page_size, Hkv, Dv); block_tables
     (B, NB) physical page per logical block; pos (B,).
 
     Returns (B, 1, Hq, Dv).  The kv block size is the page size — one
-    page per grid step, gathered through the scalar-prefetched table."""
+    page per grid step, gathered through the scalar-prefetched table.
+    ``k_scales``/``v_scales`` ((P, page_size) float32) mark int8 pages;
+    dequant fuses into the kernel's gather."""
     b, _, hq, d = q.shape
     hkv = k_pages.shape[2]
     dv = v_pages.shape[-1]
     g = hq // hkv
     qg = q.reshape(b, hkv, g, d)
     o = paged_flash_decode(qg, k_pages, v_pages, block_tables, pos,
+                           k_scales=k_scales, v_scales=v_scales,
                            interpret=interpret)
     return o.reshape(b, 1, hq, dv)

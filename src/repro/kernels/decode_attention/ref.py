@@ -33,16 +33,24 @@ def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 def paged_decode_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                                v_pages: jnp.ndarray,
                                block_tables: jnp.ndarray,
-                               pos: jnp.ndarray) -> jnp.ndarray:
+                               pos: jnp.ndarray,
+                               k_scales=None, v_scales=None) -> jnp.ndarray:
     """Paged oracle: gather every logical block through the table into a
     dense (B, NB*page_size, H, D) view, then run the dense oracle.  This
     *is* the paper-analogue SW path — the indirection is a materialized
-    ``jnp.take`` instead of a prefetched address."""
+    ``jnp.take`` instead of a prefetched address.  ``k_scales``/``v_scales``
+    ((P, page_size) float32) mark int8 pages: the per-row scales ride the
+    same gather and dequantize the dense view before scoring."""
     b, nb = block_tables.shape
     p_, ps, h, d = k_pages.shape
     dv = v_pages.shape[-1]
     k = jnp.take(k_pages, block_tables.reshape(-1), axis=0)
     v = jnp.take(v_pages, block_tables.reshape(-1), axis=0)
+    if k_scales is not None:
+        ks = jnp.take(k_scales, block_tables.reshape(-1), axis=0)
+        vs = jnp.take(v_scales, block_tables.reshape(-1), axis=0)
+        k = k.astype(jnp.float32) * ks[..., None, None]
+        v = v.astype(jnp.float32) * vs[..., None, None]
     k = k.reshape(b, nb * ps, h, d)
     v = v.reshape(b, nb * ps, h, dv)
     return decode_attention_ref(q, k, v, pos)

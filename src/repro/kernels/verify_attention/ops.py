@@ -26,10 +26,14 @@ from repro.kernels.verify_attention.verify_attention import (
 def paged_verify_attention_op(q: jnp.ndarray, k_pages: jnp.ndarray,
                               v_pages: jnp.ndarray,
                               block_tables: jnp.ndarray, pos: jnp.ndarray,
+                              k_scales: Optional[jnp.ndarray] = None,
+                              v_scales: Optional[jnp.ndarray] = None,
                               interpret: Optional[bool] = None
                               ) -> jnp.ndarray:
     """q: (B, T, Hq, D); pages (P, page_size, Hkv, Dv); block_tables
-    (B, NB); pos (B,) first window position.  Returns (B, T, Hq, Dv)."""
+    (B, NB); pos (B,) first window position.  Returns (B, T, Hq, Dv).
+    ``k_scales``/``v_scales`` ((P, page_size) float32) mark int8 pages;
+    dequant fuses into the kernel's gather."""
     b, t, hq, d = q.shape
     hkv = k_pages.shape[2]
     dv = v_pages.shape[-1]
@@ -38,7 +42,8 @@ def paged_verify_attention_op(q: jnp.ndarray, k_pages: jnp.ndarray,
           .transpose(0, 2, 1, 3, 4)           # (B, Hkv, T, G, D)
           .reshape(b, hkv, t * g, d))
     o = paged_flash_verify(qg, k_pages, v_pages, block_tables, pos,
-                           t_window=t, interpret=interpret)
+                           t_window=t, k_scales=k_scales,
+                           v_scales=v_scales, interpret=interpret)
     return (o.reshape(b, hkv, t, g, dv)
             .transpose(0, 2, 1, 3, 4)
             .reshape(b, t, hq, dv))

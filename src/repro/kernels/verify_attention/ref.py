@@ -39,14 +39,23 @@ def verify_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 def paged_verify_attention_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                                v_pages: jnp.ndarray,
                                block_tables: jnp.ndarray,
-                               pos: jnp.ndarray) -> jnp.ndarray:
+                               pos: jnp.ndarray,
+                               k_scales=None, v_scales=None) -> jnp.ndarray:
     """Paged oracle: materialized ``jnp.take`` block gather, then the dense
-    oracle — the SW memory-indirection path, batched over the window."""
+    oracle — the SW memory-indirection path, batched over the window.
+    ``k_scales``/``v_scales`` ((P, page_size) float32) mark int8 pages:
+    the per-row scales ride the same gather and dequantize the dense view
+    before scoring."""
     b, nb = block_tables.shape
     _, ps, h, d = k_pages.shape
     dv = v_pages.shape[-1]
     k = jnp.take(k_pages, block_tables.reshape(-1), axis=0)
     v = jnp.take(v_pages, block_tables.reshape(-1), axis=0)
+    if k_scales is not None:
+        ks = jnp.take(k_scales, block_tables.reshape(-1), axis=0)
+        vs = jnp.take(v_scales, block_tables.reshape(-1), axis=0)
+        k = k.astype(jnp.float32) * ks[..., None, None]
+        v = v.astype(jnp.float32) * vs[..., None, None]
     k = k.reshape(b, nb * ps, h, d)
     v = v.reshape(b, nb * ps, h, dv)
     return verify_attention_ref(q, k, v, pos)

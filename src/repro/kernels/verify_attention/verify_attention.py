@@ -48,11 +48,15 @@ from repro.kernels.decode_attention.decode_attention import (
 )
 
 
-def _verify_kernel(pos_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
-                   m_scr, l_scr, acc_scr, *,
+def _verify_kernel(pos_ref, bt_ref, q_ref, *refs,
                    scale: float, page_size: int, kv_steps: int,
-                   t_window: int, group: int):
+                   t_window: int, group: int, quantized: bool = False):
     del bt_ref  # consumed by the index maps, not the body
+    if quantized:
+        k_ref, ks_ref, v_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr = refs
+        ks_ref = vs_ref = None
     b = pl.program_id(0)
     kj = pl.program_id(2)
     pos = pos_ref[b]                       # first window position
@@ -70,6 +74,10 @@ def _verify_kernel(pos_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)           # (T*G, D)
         k = k_ref[0, :, 0, :].astype(jnp.float32)     # (ps, D)
+        if ks_ref is not None:
+            # int8 pages: fused dequant — per-row scales gathered through
+            # the same page index map as the value block
+            k = k * ks_ref[0]                         # (ps, 1)
         tg = q.shape[0]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32) * scale
@@ -88,6 +96,8 @@ def _verify_kernel(pos_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
         p = jnp.exp(s - m_new)                        # (T*G, ps)
         l_scr[...] = alpha * l_scr[...] + _row_reduce(p, page_size, "sum")
         v = v_ref[0, :, 0, :].astype(jnp.float32)     # (ps, Dv)
+        if vs_ref is not None:
+            v = v * vs_ref[0]                         # (ps, 1)
         # zero rows past the window: a fresh growth page reads garbage
         # (NaN in interpret mode) and 0 * NaN would poison the contraction
         row_ids = kj * page_size + jax.lax.broadcasted_iota(
@@ -109,6 +119,8 @@ def paged_flash_verify(q: jnp.ndarray, k_pages: jnp.ndarray,
                        v_pages: jnp.ndarray, block_tables: jnp.ndarray,
                        pos: jnp.ndarray, *, t_window: int,
                        scale: Optional[float] = None,
+                       k_scales: Optional[jnp.ndarray] = None,
+                       v_scales: Optional[jnp.ndarray] = None,
                        interpret: Optional[bool] = None) -> jnp.ndarray:
     """q: (B, Hkv, T*G, D) — T window rows x G grouped queries, row-major;
     k_pages/v_pages: (P, page_size, Hkv, Dv); block_tables: (B, NB) int32;
@@ -119,11 +131,19 @@ def paged_flash_verify(q: jnp.ndarray, k_pages: jnp.ndarray,
     row t*G+g masks keys past ``pos+t`` (causal within the window), blocks
     past ``pos+T-1`` are neither fetched (index-map clamp) nor computed
     (``pl.when``).
+
+    ``k_scales`` / ``v_scales`` ((P, page_size) float32, both or neither)
+    mark the pages int8-quantized: per-row scale blocks ride the same
+    page index map and dequant fuses into the gather, exactly as in the
+    paged flash-decode kernel.
     """
     from repro.kernels.common import default_interpret
 
     if interpret is None:
         interpret = default_interpret()
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("pass both k_scales and v_scales or neither")
+    quantized = k_scales is not None
     b, hkv, tg, d = q.shape
     if tg % t_window:
         raise ValueError(f"q rows {tg} not a multiple of t_window={t_window}")
@@ -136,7 +156,8 @@ def paged_flash_verify(q: jnp.ndarray, k_pages: jnp.ndarray,
 
     kernel = functools.partial(_verify_kernel, scale=scale,
                                page_size=page_size, kv_steps=nb,
-                               t_window=t_window, group=group)
+                               t_window=t_window, group=group,
+                               quantized=quantized)
 
     def kv_map(bi, h, j, pos_ref, bt_ref):
         # clamp at the window's last live block: no fetch past it (dead
@@ -145,18 +166,32 @@ def paged_flash_verify(q: jnp.ndarray, k_pages: jnp.ndarray,
             j, (pos_ref[bi] + t_window - 1) // page_size), nb - 1)
         return (bt_ref[bi, jc], 0, h, 0)
 
+    def scale_map(bi, h, j, pos_ref, bt_ref):
+        jc = jnp.minimum(jnp.minimum(
+            j, (pos_ref[bi] + t_window - 1) // page_size), nb - 1)
+        return (bt_ref[bi, jc], 0, 0)
+
+    q_spec = pl.BlockSpec((1, 1, tg, d),
+                          lambda bi, h, j, pos_ref, bt_ref: (bi, h, 0, 0),
+                          memory_space=pltpu.VMEM)
+    k_spec = pl.BlockSpec((1, page_size, 1, d), kv_map,
+                          memory_space=pltpu.VMEM)
+    v_spec = pl.BlockSpec((1, page_size, 1, dv), kv_map,
+                          memory_space=pltpu.VMEM)
+    s_spec = pl.BlockSpec((1, page_size, 1), scale_map,
+                          memory_space=pltpu.VMEM)
+    if quantized:
+        in_specs = [q_spec, k_spec, s_spec, v_spec, s_spec]
+        operands = (q, k_pages, k_scales[..., None], v_pages,
+                    v_scales[..., None])
+    else:
+        in_specs = [q_spec, k_spec, v_spec]
+        operands = (q, k_pages, v_pages)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, hkv, nb),
-        in_specs=[
-            pl.BlockSpec((1, 1, tg, d),
-                         lambda bi, h, j, pos_ref, bt_ref: (bi, h, 0, 0),
-                         memory_space=pltpu.VMEM),
-            pl.BlockSpec((1, page_size, 1, d), kv_map,
-                         memory_space=pltpu.VMEM),
-            pl.BlockSpec((1, page_size, 1, dv), kv_map,
-                         memory_space=pltpu.VMEM),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, tg, dv),
                                lambda bi, h, j, pos_ref, bt_ref:
                                (bi, h, 0, 0),
@@ -175,5 +210,4 @@ def paged_flash_verify(q: jnp.ndarray, k_pages: jnp.ndarray,
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
-    )(pos.astype(jnp.int32), block_tables.astype(jnp.int32), q,
-      k_pages, v_pages)
+    )(pos.astype(jnp.int32), block_tables.astype(jnp.int32), *operands)

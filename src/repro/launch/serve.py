@@ -15,6 +15,17 @@ physical pages (refcounted, copy-on-write) and prefill only their
 suffix — the per-request ``cached`` column shows how many prompt
 tokens came from the radix index instead of compute.
 
+Tiered KV memory (paged layout): ``--kv-dtype int8`` stores the page
+pool as int8 values + per-row float32 scales (half the bytes, ~2x the
+resident tokens per pool; dequant fused into the attention gather),
+``--preempt swap|auto`` pages preemption victims to host buffers and
+restores them with no recompute instead of requeue-and-recompute, and
+``--evict-policy`` / ``--min-cached-tokens`` tune the prefix index's
+eviction order and admission threshold.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \\
+      --cache-layout paged --kv-dtype int8 --num-pages 12 --preempt swap
+
 Fault tolerance: ``--deadline-ms`` / ``--ttft-deadline-ms`` attach
 per-request deadlines (expired requests end TIMEOUT), ``--max-queue``
 bounds the waiting queue with ``--shed-policy`` picking the victim
@@ -98,6 +109,31 @@ def main():
     ap.add_argument("--num-pages", type=int, default=None,
                     help="pool pages incl. the trash page (default: "
                          "dense-capacity parity)")
+    ap.add_argument("--kv-dtype", default="auto",
+                    choices=["auto", "bf16", "int8"],
+                    help="paged pool storage: bf16 values, or int8 values "
+                         "with per-row float32 scales dequantized inside "
+                         "the attention gather — half the pool bytes, so "
+                         "the same pages hold ~2x the tokens (auto: the "
+                         "model's cache dtype)")
+    ap.add_argument("--preempt", default="requeue",
+                    choices=["requeue", "swap", "auto"],
+                    help="pool-exhaustion preemption: requeue recomputes "
+                         "the victim's cache at re-admission; swap pages "
+                         "it to host buffers and restores it with no "
+                         "recompute; auto compares the two costs per "
+                         "token (paged layout)")
+    ap.add_argument("--evict-policy", default="lru",
+                    choices=["lru", "lfu", "deepest"],
+                    help="prefix-index eviction under allocation "
+                         "pressure: least-recently-used, least-frequently-"
+                         "used, or deepest-subtree-first (longest cached "
+                         "prefixes go first)")
+    ap.add_argument("--min-cached-tokens", type=int, default=0,
+                    help="admission threshold for the prefix index: "
+                         "prompts shorter than this are not published as "
+                         "cached prefix (keeps tiny prefixes from "
+                         "polluting the radix cache)")
     ap.add_argument("--prefix-sharing", default=False,
                     action=argparse.BooleanOptionalAction,
                     help="share page-aligned prompt prefixes: identical "
@@ -198,7 +234,12 @@ def main():
                          cache_layout=args.cache_layout,
                          page_size=args.page_size,
                          num_pages=args.num_pages,
+                         kv_dtype=None if args.kv_dtype == "auto"
+                         else args.kv_dtype,
+                         preempt=args.preempt,
                          prefix_sharing=args.prefix_sharing,
+                         evict_policy=args.evict_policy,
+                         min_cached_tokens=args.min_cached_tokens,
                          spec_k=args.spec_k, draft=args.draft,
                          verify_backend=None if args.verify_backend == "auto"
                          else args.verify_backend,
@@ -303,6 +344,11 @@ def main():
               f"({100 * p.peak_utilization:.0f}% util high-water), "
               f"{p.allocs} allocs / {p.frees} frees / {p.retracts} "
               f"retracts, {engine.preemptions} preemptions")
+        if p.kv_dtype is not None or p.swap_outs or p.swap_ins:
+            print(f"tiered: kv_dtype={p.kv_dtype or 'auto'}, "
+                  f"{p.swap_outs} swap-outs / {p.swap_ins} swap-ins "
+                  f"({p.swapped_out_bytes / 1e6:.2f} MB out, "
+                  f"{p.swapped_in_bytes / 1e6:.2f} MB in)")
         if args.prefix_sharing:
             print(f"sharing: {p.peak_logical_pages} logical pages peak vs "
                   f"{p.peak_used_pages} physical "

@@ -165,6 +165,8 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
                            v_pages: jnp.ndarray,
                            block_tables: jnp.ndarray, pos: jnp.ndarray, *,
                            attend_len: Optional[int] = None,
+                           k_scales: Optional[jnp.ndarray] = None,
+                           v_scales: Optional[jnp.ndarray] = None,
                            backend: Optional[str] = None) -> jnp.ndarray:
     """One-token decode against a *paged* cache: q (B, 1, Hq, D), page
     pools (P, page_size, Hkv, D), block_tables (B, NB) mapping logical
@@ -185,9 +187,19 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
 
     attend_len: static bound on the valid prefix; only the first
     ceil(attend_len / page_size) table columns are visited.
+
+    k_scales/v_scales ((P, page_size) float32, both or neither): the pages
+    are int8-quantized with per-row symmetric scales.  Both lowerings
+    dequantize inside the gather — the kernel multiplies the scale block
+    streamed through the same table index map; the jnp path ``jnp.take``s
+    the scales with the same truncated table and broadcasts them over the
+    gathered rows — so the kernel-vs-SW parity axis extends unchanged to
+    the quantized tier.
     """
     page_size = k_pages.shape[1]
     nb = block_tables.shape[1]
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("pass both k_scales and v_scales or neither")
     if attend_len is not None:
         nb = min(nb, -(-attend_len // page_size))
         block_tables = block_tables[:, :nb]
@@ -199,12 +211,18 @@ def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
         )
 
         return paged_decode_attention_op(q, k_pages, v_pages, block_tables,
-                                         pos)
+                                         pos, k_scales=k_scales,
+                                         v_scales=v_scales)
     b = q.shape[0]
     hkv, d = k_pages.shape[2], k_pages.shape[3]
     dv = v_pages.shape[-1]
     k = jnp.take(k_pages, block_tables.reshape(-1), axis=0)
     v = jnp.take(v_pages, block_tables.reshape(-1), axis=0)
+    if k_scales is not None:
+        ks = jnp.take(k_scales, block_tables.reshape(-1), axis=0)
+        vs = jnp.take(v_scales, block_tables.reshape(-1), axis=0)
+        k = k.astype(jnp.float32) * ks[..., None, None]
+        v = v.astype(jnp.float32) * vs[..., None, None]
     k = k.reshape(b, nb * page_size, hkv, d)
     v = v.reshape(b, nb * page_size, hkv, dv)
     return decode_attention(q, k, v, pos, backend="jnp")
@@ -214,6 +232,8 @@ def paged_verify_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
                            v_pages: jnp.ndarray,
                            block_tables: jnp.ndarray, pos: jnp.ndarray, *,
                            attend_len: Optional[int] = None,
+                           k_scales: Optional[jnp.ndarray] = None,
+                           v_scales: Optional[jnp.ndarray] = None,
                            backend: Optional[str] = None) -> jnp.ndarray:
     """k-token speculative verify against the paged cache: q (B, T, Hq, D)
     is the draft window's queries at absolute positions pos..pos+T-1 (whose
@@ -239,9 +259,15 @@ def paged_verify_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
 
     attend_len: static bound on ``pos + T`` (engine-side bucketing); only
     the first ceil(attend_len / page_size) table columns are visited.
+
+    k_scales/v_scales ((P, page_size) float32, both or neither): int8
+    pages with per-row symmetric scales, dequantized inside the gather on
+    both lowerings (see :func:`paged_decode_attention`).
     """
     page_size = k_pages.shape[1]
     nb = block_tables.shape[1]
+    if (k_scales is None) != (v_scales is None):
+        raise ValueError("pass both k_scales and v_scales or neither")
     if attend_len is not None:
         nb = min(nb, -(-attend_len // page_size))
         block_tables = block_tables[:, :nb]
@@ -253,13 +279,19 @@ def paged_verify_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
         )
 
         return paged_verify_attention_op(q, k_pages, v_pages, block_tables,
-                                         pos)
+                                         pos, k_scales=k_scales,
+                                         v_scales=v_scales)
     b, t, hq, d = q.shape
     hkv = k_pages.shape[2]
     dv = v_pages.shape[-1]
     g = hq // hkv
     k = jnp.take(k_pages, block_tables.reshape(-1), axis=0)
     v = jnp.take(v_pages, block_tables.reshape(-1), axis=0)
+    if k_scales is not None:
+        ks = jnp.take(k_scales, block_tables.reshape(-1), axis=0)
+        vs = jnp.take(v_scales, block_tables.reshape(-1), axis=0)
+        k = k.astype(jnp.float32) * ks[..., None, None]
+        v = v.astype(jnp.float32) * vs[..., None, None]
     k = k.reshape(b, nb * page_size, hkv, d)
     v = v.reshape(b, nb * page_size, hkv, dv)
     qg = q.reshape(b, t, hkv, g, d)

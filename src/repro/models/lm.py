@@ -390,7 +390,8 @@ class Model:
 
     def init_cache(self, batch_size: int, max_seq: int, dtype=None, *,
                    layout: str = "dense", page_size: int = 16,
-                   num_pages: Optional[int] = None) -> Dict[str, Any]:
+                   num_pages: Optional[int] = None,
+                   kv_dtype: Optional[str] = None) -> Dict[str, Any]:
         """Decode cache in the requested ``CacheLayout``.
 
         'dense': the classic (L, B, max_seq, H, D) pool — every slot
@@ -398,11 +399,18 @@ class Model:
         {"k_pages"/"v_pages": (L, num_pages, page_size, H, D)} plus
         per-slot block tables (B, ceil(max_seq/page_size)) initialized to
         the trash page; the serving engine's allocator populates them.
+
+        kv_dtype (paged only): 'bf16' | 'int8' | None.  'int8' stores the
+        pool symmetric-quantized with per-row scale leaves
+        (``k_scales``/``v_scales``) — see ``repro.serve.kv_cache``.
         """
         cfg = self.cfg
         dtype = dtype or self.compute_dtype
         L = self._n_scan_layers
         b = batch_size
+        if kv_dtype is not None and layout != "paged":
+            raise ValueError("kv_dtype is a paged-layout axis; "
+                             f"got layout={layout!r}")
         if layout == "paged":
             if not self.supports_paged():
                 raise ValueError(
@@ -415,7 +423,7 @@ class Model:
                 # capacity parity with dense: one page set per slot-block
                 num_pages = b * cdiv(max_seq, page_size) + 1
             cache = init_page_pool(L, num_pages, page_size, cfg.n_kv_heads,
-                                   cfg.d_head, dtype)
+                                   cfg.d_head, dtype, kv_dtype=kv_dtype)
             cache["block_tables"] = jnp.full(
                 (b, cdiv(max_seq, page_size)), TRASH_PAGE, jnp.int32)
             return cache
@@ -647,17 +655,39 @@ class Model:
         a donated pool the compiled step still updates B rows in place.
         Dead slots' table rows point at the trash page, so their writes
         are harmless by construction.
+
+        Quantized pools (scale leaves present) quantize each fresh row on
+        write — value scatter plus a scalar scale scatter per row — and
+        hand the scales to the attention gather for fused dequant.  The
+        per-row scale makes the stored bytes a pure function of the row's
+        values, so incremental writes and recompute/swap replay produce
+        identical pages.
         """
         from repro.models.attention import paged_decode_attention
+        from repro.serve.kv_cache import quantize_kv_rows
 
         kp, vp, bt = cache["k_pages"], cache["v_pages"], cache["block_tables"]
+        quantized = "k_scales" in cache
+        ks = cache.get("k_scales")
+        vs = cache.get("v_scales")
         page_size = kp.shape[2]
         bidx = jnp.arange(x.shape[0])
         page = bt[bidx, jnp.minimum(pos // page_size, bt.shape[1] - 1)]
         off = pos % page_size
 
         def write_attend(l, q, k, v):
-            nonlocal kp, vp
+            nonlocal kp, vp, ks, vs
+            if quantized:
+                qk, sk = quantize_kv_rows(k[:, 0])
+                qv, sv = quantize_kv_rows(v[:, 0])
+                kp = kp.at[l, page, off].set(qk.astype(kp.dtype))
+                vp = vp.at[l, page, off].set(qv.astype(vp.dtype))
+                ks = ks.at[l, page, off].set(sk)
+                vs = vs.at[l, page, off].set(sv)
+                return paged_decode_attention(q, kp[l], vp[l], bt, pos,
+                                              attend_len=attend_len,
+                                              k_scales=ks[l], v_scales=vs[l],
+                                              backend=self.decode_backend)
             kp = kp.at[l, page, off].set(k[:, 0].astype(kp.dtype))
             vp = vp.at[l, page, off].set(v[:, 0].astype(vp.dtype))
             return paged_decode_attention(q, kp[l], vp[l], bt, pos,
@@ -665,7 +695,10 @@ class Model:
                                           backend=self.decode_backend)
 
         logits = self._gqa_decode_loop(params, x, pos, write_attend)
-        return logits, {"k_pages": kp, "v_pages": vp, "block_tables": bt}
+        out = {"k_pages": kp, "v_pages": vp, "block_tables": bt}
+        if quantized:
+            out["k_scales"], out["v_scales"] = ks, vs
+        return logits, out
 
     # ------------------------------------------------------ speculative verify
     def decode_verify_step(self, params, cache, tokens: jnp.ndarray,
@@ -709,9 +742,12 @@ class Model:
         Returns (hidden (B, T, d), new cache)."""
         from repro.models.attention import paged_verify_attention
 
-        from repro.serve.kv_cache import TRASH_PAGE
+        from repro.serve.kv_cache import TRASH_PAGE, quantize_kv_rows
 
         kp, vp, bt = cache["k_pages"], cache["v_pages"], cache["block_tables"]
+        quantized = "k_scales" in cache
+        ks = cache.get("k_scales")
+        vs = cache.get("v_scales")
         page_size = kp.shape[2]
         t = x.shape[1]
         positions = pos[:, None] + jnp.arange(t)[None, :]      # (B, T)
@@ -728,7 +764,18 @@ class Model:
                    else self.decode_backend)
 
         def write_attend(l, q, k, v):
-            nonlocal kp, vp
+            nonlocal kp, vp, ks, vs
+            if quantized:
+                qk, sk = quantize_kv_rows(k)          # (B,T,H,D) -> (B,T)
+                qv, sv = quantize_kv_rows(v)
+                kp = kp.at[l, page, off].set(qk.astype(kp.dtype))
+                vp = vp.at[l, page, off].set(qv.astype(vp.dtype))
+                ks = ks.at[l, page, off].set(sk)
+                vs = vs.at[l, page, off].set(sv)
+                return paged_verify_attention(q, kp[l], vp[l], bt, pos,
+                                              attend_len=attend_len,
+                                              k_scales=ks[l], v_scales=vs[l],
+                                              backend=backend)
             kp = kp.at[l, page, off].set(k.astype(kp.dtype))
             vp = vp.at[l, page, off].set(v.astype(vp.dtype))
             return paged_verify_attention(q, kp[l], vp[l], bt, pos,
@@ -736,7 +783,10 @@ class Model:
                                           backend=backend)
 
         x = self._gqa_decode_layers(params, x, positions, write_attend)
-        return x, {"k_pages": kp, "v_pages": vp, "block_tables": bt}
+        out = {"k_pages": kp, "v_pages": vp, "block_tables": bt}
+        if quantized:
+            out["k_scales"], out["v_scales"] = ks, vs
+        return x, out
 
     def _gqa_verify_paged(self, params, cache, x, pos,
                           attend_len: Optional[int],

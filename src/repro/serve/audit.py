@@ -17,7 +17,14 @@ one pass so a leak is caught *at the step that caused it*:
   * refcount cross-check: for every allocated page, refcount ==
     (number of slots mapping it) + (1 if the prefix index references
     it) — a mismatch in either direction is a leak or a double-count;
-  * orphans: allocated pages with no holder at all.
+  * orphans: allocated pages with no holder at all;
+  * quantized-pool metadata (:func:`audit_pool`): int8 value leaves must
+    travel with float32 per-row scale leaves of the matching shape, the
+    manager's ``kv_dtype`` must agree with the pool, and (under the
+    opt-in value sweep) every mapped page's scales must be finite and
+    non-negative — a scale leaf dropped by a donated step rebuild or a
+    negative/NaN scale is exactly the kind of metadata corruption no
+    layer below the audit would ever notice.
 
 The sweep is host-side, O(pages + slots x blocks), and touches no device
 state — cheap enough to run at every step boundary under the engine's
@@ -32,6 +39,10 @@ from __future__ import annotations
 import dataclasses
 from collections import Counter
 from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
 
 
 class AuditError(AssertionError):
@@ -138,3 +149,64 @@ def audit_manager(mgr) -> AuditReport:
     return AuditReport(ok=not errors, errors=errors,
                        orphan_pages=orphans,
                        refcount_mismatches=mismatches)
+
+
+def audit_pool(mgr, pool, *, check_values: bool = False) -> AuditReport:
+    """Quantized-pool metadata sweep: structure always, values opt-in.
+
+    Structural checks (cheap, host-side, no device reads):
+
+      * the pool's quantization state matches the manager's ``kv_dtype``
+        (an int8 manager over a pool whose scale leaves were dropped by
+        a donated-step rebuild is exactly the silent-corruption bug this
+        exists to catch);
+      * int8 pools: value leaves are int8, each ``k_pages``/``v_pages``
+        leaf travels with a float32 scale leaf shaped like its leading
+        ``(layers, pages, page_size)`` dims.
+
+    ``check_values=True`` additionally pulls the scale leaves to host and
+    requires every *mapped* page's scales to be finite and >= 0.  That
+    sweep is deliberately opt-in: the engine's per-round audit must keep
+    passing while a fault schedule deliberately poisons live pages — the
+    corruption is supposed to surface as NaN logits in the guarded step,
+    not as an audit failure.
+    """
+    from repro.serve.kv_cache import TRASH_PAGE, pool_is_quantized
+
+    errors: List[str] = []
+    quantized = pool_is_quantized(pool)
+    want_quant = getattr(mgr, "kv_dtype", None) == "int8"
+    if quantized != want_quant:
+        errors.append(f"pool quantization {quantized} disagrees with "
+                      f"manager kv_dtype {getattr(mgr, 'kv_dtype', None)!r}")
+    if quantized:
+        for name in ("k_pages", "v_pages"):
+            leaf = pool.get(name)
+            sname = name[0] + "_scales"
+            scales = pool.get(sname)
+            if leaf is None or scales is None:
+                errors.append(f"quantized pool missing {name}/{sname}")
+                continue
+            if leaf.dtype != jnp.int8:
+                errors.append(f"{name}: quantized pool holds "
+                              f"{leaf.dtype}, expected int8")
+            if scales.dtype != jnp.float32:
+                errors.append(f"{sname}: scales are {scales.dtype}, "
+                              f"expected float32")
+            if tuple(scales.shape) != tuple(leaf.shape[:3]):
+                errors.append(f"{sname}: shape {tuple(scales.shape)} != "
+                              f"value leading dims {tuple(leaf.shape[:3])}")
+        if check_values and not errors:
+            mapped = sorted({int(p) for owned in mgr.owned for p in owned
+                             if p != TRASH_PAGE})
+            if mapped:
+                idx = np.asarray(mapped, np.int64)
+                for sname in ("k_scales", "v_scales"):
+                    s = np.asarray(jax.device_get(pool[sname]))[:, idx]
+                    if not np.all(np.isfinite(s)):
+                        errors.append(f"{sname}: non-finite scale on a "
+                                      f"mapped page")
+                    elif np.any(s < 0):
+                        errors.append(f"{sname}: negative scale on a "
+                                      f"mapped page")
+    return AuditReport(ok=not errors, errors=errors)

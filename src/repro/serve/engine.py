@@ -55,6 +55,24 @@ linger in the index as reclaimable cache (LRU-evicted under allocation
 pressure).  Greedy outputs are bit-identical to sharing-disabled paged
 serving — sharing is invisible below the block tables.
 
+Tiered KV memory (paged layout).  ``kv_dtype='int8'`` stores the page
+pools quantized: int8 values plus a float32 per-row (per cached
+position) symmetric scale, quantized on every cache write and
+dequantized inside the fused attention gathers — kernel and chunked-jnp
+SW path alike, so the HW-vs-SW parity gates extend to the quantized
+axis unchanged.  Half the pool bytes means the same physical pages hold
+~2x the resident tokens, which is admission capacity, not just memory.
+``preempt='swap'`` replaces preempt-and-recompute with a host-swap
+tier: the victim's pages are snapshotted to host buffers *before* its
+slot releases, and re-admission restores them into fresh private pages
+with zero recompute — the resume is bit-identical to the requeue-
+recompute resume, because per-row quantization makes the stored page
+bytes a pure function of the cached values.  ``preempt='auto'`` picks
+per configuration by comparing transfer cost against recompute cost per
+resident token.  The prefix index additionally takes an eviction policy
+(``evict_policy``: lru / lfu / deepest-subtree-first) and a
+``min_cached_tokens`` admission threshold for short prompts.
+
 Fault tolerance — every request leaves ``serve()`` with exactly one
 terminal status in ``last_stats[uid]["status"]``:
 
@@ -103,20 +121,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.serve import sla, spec_decode
-from repro.serve.audit import AuditError
+from repro.serve.audit import AuditError, audit_pool
 from repro.serve.faults import InjectedFault, KernelBackendError, poison_pages
 from repro.serve.kv_cache import (
     CACHE_LAYOUTS,
     AdmitPlan,
     PagedCacheManager,
+    SwapHandle,
     blocks_for,
     cdiv,
     copy_pages,
+    resolve_kv_dtype,
     scatter_prefill,
+    swap_in_pages,
     write_slot,
     write_slots,
 )
-from repro.serve.prefix_index import PrefixIndex
+from repro.serve.prefix_index import EVICT_POLICIES, PrefixIndex
 
 # terminal request statuses (last_stats[uid]["status"]) — every request
 # handed to serve() ends in exactly one of these
@@ -131,6 +152,19 @@ TERMINAL_STATUSES = (STATUS_OK, STATUS_SHED, STATUS_TIMEOUT,
 # bounded-queue shed policies: who gets rejected when the waiting queue
 # overflows max_queue
 SHED_POLICIES = ("reject-newest", "reject-largest")
+
+# preemption-resume policies: requeue recomputes the victim's cache from
+# its folded prompt at re-admission; swap pages it to host buffers and
+# restores it with no recompute; auto picks per configuration by
+# comparing the two per-token costs (both linear in resident tokens)
+PREEMPT_POLICIES = ("requeue", "swap", "auto")
+
+# auto-preempt cost model: assumed host-link bandwidth for the swap tier
+# and assumed decode throughput for recompute.  Coarse on purpose — the
+# two costs differ by orders of magnitude for most (model, pool) pairs,
+# so the decision is robust to both constants.
+_SWAP_GBPS = 8e9
+_RECOMPUTE_FLOPS_S = 5e10
 
 
 def _round_up(x: int, block: int) -> int:
@@ -190,7 +224,11 @@ class ServeEngine:
                  attend_block: int = 64, prompt_block: int = 16,
                  cache_layout: str = "dense", page_size: int = 16,
                  num_pages: Optional[int] = None,
+                 kv_dtype: Optional[str] = None,
+                 preempt: str = "requeue",
                  prefix_sharing: bool = False,
+                 evict_policy: str = "lru",
+                 min_cached_tokens: int = 0,
                  spec_k: int = 1, draft=None,
                  verify_backend: Optional[str] = None,
                  max_queue: Optional[int] = None,
@@ -219,6 +257,22 @@ class ServeEngine:
         if shed_policy not in SHED_POLICIES:
             raise ValueError(f"shed_policy must be one of {SHED_POLICIES}; "
                              f"got {shed_policy!r}")
+        resolve_kv_dtype(kv_dtype, jnp.bfloat16)  # validate the flag early
+        if kv_dtype not in (None, "auto") and cache_layout != "paged":
+            raise ValueError("kv_dtype selects the paged pool's storage "
+                             "format; pass cache_layout='paged'")
+        if preempt not in PREEMPT_POLICIES:
+            raise ValueError(f"preempt must be one of {PREEMPT_POLICIES}; "
+                             f"got {preempt!r}")
+        if preempt != "requeue" and cache_layout != "paged":
+            raise ValueError("swap-tier preemption pages the paged pool "
+                             "to host; pass cache_layout='paged'")
+        if evict_policy not in EVICT_POLICIES:
+            raise ValueError(f"evict_policy must be one of {EVICT_POLICIES}; "
+                             f"got {evict_policy!r}")
+        if min_cached_tokens < 0:
+            raise ValueError(f"min_cached_tokens must be >= 0; "
+                             f"got {min_cached_tokens}")
         if max_queue is not None and max_queue < 1:
             raise ValueError(f"max_queue must be >= 1 (or None for "
                              f"unbounded); got {max_queue}")
@@ -242,7 +296,14 @@ class ServeEngine:
         self.prompt_block = prompt_block
         self.cache_layout = cache_layout
         self.page_size = page_size
+        self.kv_dtype = kv_dtype
+        self.preempt = preempt
         self.prefix_sharing = prefix_sharing
+        self.evict_policy = evict_policy
+        self.min_cached_tokens = min_cached_tokens
+        # auto-preempt cost model input: recompute cost per token is
+        # ~2 * params FLOPs (one forward pass)
+        self._n_params = sum(int(x.size) for x in jax.tree.leaves(params))
         self.spec_k = spec_k
         self.verify_backend = verify_backend
         # ---- lifecycle / fault-tolerance policy
@@ -398,7 +459,10 @@ class ServeEngine:
             cache = dict(pool, block_tables=block_tables)
             logits, cache = model.decode_step(params, cache, tok, pos,
                                               attend_len)
-            pool = {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]}
+            # rebuild generically: quantized pools carry k_scales/v_scales
+            # alongside the value leaves, and the donated step must hand
+            # all of them back
+            pool = {name: cache[name] for name in pool}
             logits = jnp.where(nan_mask[:, None],
                                jnp.asarray(jnp.nan, logits.dtype), logits)
             bad = ~jnp.all(jnp.isfinite(logits), axis=-1)
@@ -458,8 +522,7 @@ class ServeEngine:
                 logits, cache = model.prefill_suffix(
                     params, cache, toks, start_pos, last_idx, attend_len,
                     vb)
-                return logits, {"k_pages": cache["k_pages"],
-                                "v_pages": cache["v_pages"]}
+                return logits, {name: cache[name] for name in pool}
 
             self._suffix_prefill = jax.jit(suffix_prefill_fn,
                                            static_argnums=(6,),
@@ -681,6 +744,10 @@ class ServeEngine:
                 self._recover(st, exc)
             if self.audit and st.mgr is not None:
                 st.mgr.audit().raise_if_failed()
+                if st.pool is not None:
+                    # structural only: injected page corruption must
+                    # surface as NaN logits, not as an audit failure
+                    audit_pool(st.mgr, st.pool).raise_if_failed()
         self._sample_timeseries(st)
 
     def _finalize_session(self, st: "_SchedState") -> Dict[int, List[int]]:
@@ -782,8 +849,11 @@ class ServeEngine:
             return
         st.mgr = PagedCacheManager(
             self.num_pages, self.page_size, self.slots, self.max_seq,
-            prefix_index=PrefixIndex(self.page_size)
-            if self.prefix_sharing else None)
+            prefix_index=PrefixIndex(
+                self.page_size, policy=self.evict_policy,
+                min_cached_tokens=self.min_cached_tokens)
+            if self.prefix_sharing else None,
+            kv_dtype=self.kv_dtype)
         if st.faults is not None:
             fs = st.faults
 
@@ -803,7 +873,8 @@ class ServeEngine:
         if st.mgr is not None:
             st.pool = self.model.init_cache(
                 self.slots, self.max_seq, layout="paged",
-                page_size=self.page_size, num_pages=self.num_pages)
+                page_size=self.page_size, num_pages=self.num_pages,
+                kv_dtype=self.kv_dtype)
             st.pool.pop("block_tables")  # the manager owns the mapping
             st.bt_dev = st.mgr.device_tables()
             st.cache = None
@@ -1215,6 +1286,7 @@ class ServeEngine:
         s["tokens"] = len(req.generated or [])
         st.spec_hist.pop(req.uid, None)
         st.last_emit.pop(req.uid, None)
+        st.swaps.pop(req.uid, None)  # host snapshot of a dead request
         if slot is not None:
             st.live.pop(slot, None)
             st.prefilling.pop(slot, None)
@@ -1290,6 +1362,12 @@ class ServeEngine:
                     st.live or st.prefilling or taken):
                 break  # budget spent; progress guaranteed when idle
             req = self._next_candidate(st)
+            if st.mgr is not None and req.uid in st.swaps:
+                # a host-swapped resume restores its pages instead of
+                # prefilling; blocked exactly like a too-big prompt
+                if not self._admit_swapped_row(st, slot, req):
+                    break
+                continue
             if st.mgr is not None:
                 if not st.mgr.can_admit(len(req.prompt),
                                         headroom=self._headroom(
@@ -1412,6 +1490,12 @@ class ServeEngine:
             if slot in st.live or not st.queue:
                 continue
             req = self._next_candidate(st)
+            if req.uid in st.swaps:
+                # swap resumes bypass the prefix planner: their pages are
+                # restored verbatim, private, outside the sharing graph
+                if not self._admit_swapped_row(st, slot, req):
+                    break
+                continue
             # replan the blocked queue head only when the allocator or the
             # index changed since its gate last failed: the gate is a pure
             # function of that state, and replanning every decode step
@@ -1606,15 +1690,48 @@ class ServeEngine:
             return (req.priority, st.admit_seq[slot])
         return max([*st.live, *st.prefilling], key=key)
 
+    def _swap_wins(self, st: "_SchedState") -> bool:
+        """Should this preemption take the swap tier?  Both resume costs
+        are linear in the victim's resident tokens, so the policy is a
+        static per-configuration comparison: host-transfer seconds per
+        token (pool bytes per token over the assumed link bandwidth)
+        against recompute seconds per token (~2 * params FLOPs over the
+        assumed decode throughput)."""
+        if self.preempt == "requeue":
+            return False
+        if self.preempt == "swap":
+            return True
+        bytes_per_token = sum(leaf.nbytes for leaf in st.pool.values()) / (
+            st.pool["k_pages"].shape[1] * self.page_size)
+        return (bytes_per_token / _SWAP_GBPS
+                < 2.0 * self._n_params / _RECOMPUTE_FLOPS_S)
+
     def _preempt(self, st: "_SchedState", slot: int):
         if slot in st.prefilling:
+            # a mid-chunk prompt has no complete page image worth
+            # snapshotting — chunked admissions always resume by recompute
             req = st.prefilling.pop(slot).req
+            swap = False
         else:
             req = st.live.pop(slot)
-        st.mgr.release(slot)
+            swap = self._swap_wins(st)
+        if swap:
+            # swap-tier resume: snapshot the slot's page contents to host
+            # (the device-to-host copy precedes the release inside
+            # swap_out, so a same-round admission cannot overwrite them),
+            # then restore into fresh pages at re-admission — no recompute
+            st.swaps[req.uid] = st.mgr.swap_out(slot, st.pool,
+                                                st.slot_pos[slot])
+            s = st.stats[req.uid]
+            s["swap_outs"] = s.get("swap_outs", 0) + 1
+        else:
+            st.mgr.release(slot)
         # recompute-style resume: re-prefilling prompt+generated recreates
         # the exact cache the slot held, so greedy output is unchanged and
         # (uid, position) sampling keys line up with the un-preempted run.
+        # A swap resume rides the same folded copy (the queue entry and
+        # the ledger stay identical across policies); admission just
+        # restores its pages instead of prefilling them.
         # The caller's Request is not mutated — the resume rides a copy
         # (sharing the generated list, which is the accumulating output;
         # ``folded`` keeps a re-preempted resume from folding it twice).
@@ -1625,6 +1742,59 @@ class ServeEngine:
         st.queue.appendleft(resume)
         st.stats[req.uid]["preemptions"] += 1
         self.preemptions += 1
+
+    # ------------------------------------------------------- swap admission
+    def _admit_swapped_row(self, st: "_SchedState", slot: int,
+                           req: Request) -> bool:
+        """Resume a host-swapped request: map fresh private pages under
+        the same headroom gate normal admission honors, scatter the saved
+        page contents back, and rebuild the exact slot state the request
+        held at preemption — no prefill, no sampling.  The preemption-
+        pending token (``generated[-1]``, which folding placed at the
+        resume prompt's last position) re-arms as ``tok`` at position
+        ``handle.n_tokens``, so the next decode step replays precisely
+        the step the preemption interrupted; the requeue path reaches the
+        identical state by re-prefilling those positions instead.
+        Returns False when the pool cannot grant the handle's pages yet
+        (the caller blocks admission, exactly like a too-big prompt)."""
+        handle = st.swaps[req.uid]
+        if st.mgr.allocator.free - self._headroom(st, 0) < handle.n_blocks:
+            return False
+        pages = st.mgr.admit_swapped(slot, handle)
+        if pages is None:
+            return False  # denied at alloc (injected OOM) despite the gate
+        del st.swaps[req.uid]
+        st.queue.remove(req)
+        st.pool = swap_in_pages(st.pool, handle.data,
+                                jnp.asarray(pages, jnp.int32))
+        self._bookkeep_admit(st, slot, req, time.perf_counter() - st.t0)
+        n = handle.n_tokens
+        st.slot_pos[slot] = n  # _bookkeep_admit assumed a full prefill
+        st.pos = st.pos.at[slot].set(n)
+        st.tok = st.tok.at[slot].set(int(req.prompt[-1]))
+        # no token samples at a swap resume, so no -1 here: the requeue
+        # path's prefill charges its sample against this same budget
+        st.remaining = st.remaining.at[slot].set(
+            req.max_new_tokens - len(req.generated))
+        st.uids = st.uids.at[slot].set(req.uid)
+        if self.spec_k > 1:
+            st.spec_mask = st.spec_mask.at[slot].set(
+                bool(req.spec) and req.uid not in st.spec_disabled)
+            # the dense draft cache died with the slot: re-prefill it from
+            # the folded prompt (draft state only steers acceptance, never
+            # committed values — the window overwrites its own rows)
+            full_b = min(self.max_seq,
+                         _round_up(len(req.prompt), self.prompt_block))
+            full = np.zeros((1, full_b), np.int32)
+            full[0, :len(req.prompt)] = req.prompt
+            _, dcache = self._draft_prefill(
+                self.draft_params, {"tokens": jnp.asarray(full)},
+                jnp.asarray([len(req.prompt) - 1], jnp.int32))
+            st.draft_cache = write_slot(st.draft_cache, dcache, slot)
+        s = st.stats[req.uid]
+        s["swap_ins"] = s.get("swap_ins", 0) + 1
+        self._finish_admission(st, slot, req)
+        return True
 
 
 @dataclasses.dataclass
@@ -1657,7 +1827,13 @@ class _SchedState:
     gate_block: Any = None     # (req, allocator, index) state of the last
     #                            failed sharing-admission gate
     cache: Any = None          # dense layout
-    pool: Any = None           # paged layout: {"k_pages", "v_pages"}
+    pool: Any = None           # paged layout: {"k_pages", "v_pages"} plus
+    #                            {"k_scales", "v_scales"} when quantized
+    # host-swapped requests awaiting re-admission, keyed by uid.  The
+    # handles record page *contents* in logical block order, not page
+    # numbers, so they survive the wholesale pool rebuild of step-restart
+    # recovery (the resume restores into whatever fresh pages it gets).
+    swaps: Dict[int, SwapHandle] = dataclasses.field(default_factory=dict)
     bt_dev: Any = None         # paged layout: uploaded block tables
     pos: Any = None
     tok: Any = None

@@ -218,12 +218,17 @@ class FaultSchedule:
 @functools.partial(jax.jit, donate_argnums=(0,))
 def poison_pages(pool, page_idx: jnp.ndarray):
     """Overwrite physical pages ``page_idx`` ((n,) int32) with NaN across
-    every layer of the donated pool — the page-corruption injection.
+    every leaf of the donated pool — the page-corruption injection.
     Whoever reads the page next sees NaN attention scores, hence NaN
-    logits, hence the engine's quarantine path."""
+    logits, hence the engine's quarantine path.
+
+    Generic over pool leaves on purpose: int8 value pages cannot hold a
+    NaN (the float->int convert is a harmless defined cast), but their
+    float32 ``k_scales``/``v_scales`` rows can — poisoning every leaf
+    makes the corruption surface through the fused dequant exactly like
+    it does through float pages."""
+    poison = jnp.asarray(jnp.nan, jnp.float32)
     out = dict(pool)
-    for name in ("k_pages", "v_pages"):
-        leaf = out[name]
-        out[name] = leaf.at[:, page_idx].set(jnp.asarray(jnp.nan,
-                                                         leaf.dtype))
+    for name, leaf in pool.items():
+        out[name] = leaf.at[:, page_idx].set(poison.astype(leaf.dtype))
     return out

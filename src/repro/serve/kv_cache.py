@@ -49,6 +49,31 @@ The allocator itself is deliberately host-side and synchronous: pages
 move at *step boundaries* (admission, growth, preemption, completion),
 never inside the jitted token step, so the hot loop stays one dispatch
 per token with the block tables uploaded only when they change.
+
+Tiered memory (the same HW-vs-SW axis applied to data *width* and
+*placement*):
+
+  kv_dtype  ``bf16`` stores pages at bfloat16; ``int8`` stores them
+            symmetric-quantized with per-page scale vectors
+            (``k_scales`` / ``v_scales``, one float32 scale per cache
+            row of every page) riding in the pool dict as allocator
+            metadata.  Quantization is per *row* within the page —
+            ``scale = absmax(row)/127`` over the row's (H, D) values —
+            so a row's stored bytes depend only on that row's values:
+            prefill, incremental decode writes, requeue-recompute, and
+            swap-in all produce bit-identical page bytes, which is what
+            keeps the engine's replay/parity gates exact under
+            quantization.  Dequant (`q * scale`) fuses into the page
+            gather of both decode/verify kernels and their ``jnp.take``
+            SW lowerings; int8 halves the gather bytes per token, the
+            measured capacity-vs-bandwidth trade.
+  swap      preempted slots can page out to host buffers instead of
+            being recomputed: :meth:`PagedCacheManager.swap_out` copies
+            the slot's mapped pages (values + scales) device-to-host and
+            releases them; :func:`swap_in_pages` scatters them back into
+            freshly allocated pages on resume.  The swapped bytes are an
+            exact snapshot, so a swap-resume is bit-identical to never
+            having been preempted.
 """
 
 from __future__ import annotations
@@ -65,6 +90,10 @@ from repro.serve.prefix_index import PrefixIndex
 
 CACHE_LAYOUTS = ("dense", "paged")
 
+# storage tiers for the paged pool; None / "auto" keeps the model's
+# compute dtype (the pre-tiering behavior)
+KV_DTYPES = ("bf16", "int8")
+
 # page index every dead / unmapped block-table entry points at; the
 # allocator never hands it out
 TRASH_PAGE = 0
@@ -72,6 +101,41 @@ TRASH_PAGE = 0
 
 def cdiv(a: int, b: int) -> int:
     return -(-a // b)
+
+
+def resolve_kv_dtype(kv_dtype, default):
+    """``kv_dtype`` flag -> (pool value dtype, quantized?)."""
+    if kv_dtype in (None, "auto"):
+        return jnp.dtype(default), False
+    if kv_dtype == "bf16":
+        return jnp.dtype(jnp.bfloat16), False
+    if kv_dtype == "int8":
+        return jnp.dtype(jnp.int8), True
+    raise ValueError(f"kv_dtype must be one of {KV_DTYPES} or None/'auto'; "
+                     f"got {kv_dtype!r}")
+
+
+def quantize_kv_rows(x: jnp.ndarray):
+    """Symmetric int8 quantization of K/V rows: ``x`` is (..., H, D); each
+    leading-index row quantizes independently with its own absmax scale.
+
+    Returns ``(q int8 (..., H, D), scale float32 (...))`` with
+    ``q * scale ~= x``.  Row independence is a correctness contract, not a
+    convenience: the engine's preemption-replay and swap-vs-requeue parity
+    gates require that writing row r via prefill, via an incremental
+    decode step, or via recompute after preemption yields the *same*
+    stored bytes.  All-zero rows keep scale 0 (dequant gives exact 0)."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=(-2, -1))
+    scale = amax * (1.0 / 127.0)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(xf / safe[..., None, None]), -127.0, 127.0)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """Inverse of :func:`quantize_kv_rows`: q (..., H, D), scale (...)."""
+    return q.astype(jnp.float32) * scale[..., None, None]
 
 
 def blocks_for(n_tokens: int, page_size: int) -> int:
@@ -253,6 +317,12 @@ class PagedStats:
     evictions: int = 0
     index_pages: int = 0
     cached_prefix_tokens: int = 0
+    # ---- tiered memory: storage dtype + host-swap traffic
+    kv_dtype: Optional[str] = None
+    swap_outs: int = 0
+    swap_ins: int = 0
+    swapped_out_bytes: int = 0
+    swapped_in_bytes: int = 0
     # ---- invariant audit (repro.serve.audit), swept by stats(): leak
     # freedom is a queryable fact, not something tests reconstruct from
     # internals.  audit_errors carries the human-readable violations.
@@ -299,13 +369,15 @@ class PagedCacheManager:
     """
 
     def __init__(self, num_pages: int, page_size: int, slots: int,
-                 max_seq: int, prefix_index: Optional[PrefixIndex] = None):
+                 max_seq: int, prefix_index: Optional[PrefixIndex] = None,
+                 kv_dtype: Optional[str] = None):
         self.page_size = page_size
         self.max_blocks = cdiv(max_seq, page_size)
         self.allocator = PageAllocator(num_pages)
         self.tables = np.full((slots, self.max_blocks), TRASH_PAGE, np.int32)
         self.owned: List[List[int]] = [[] for _ in range(slots)]
         self.index = prefix_index
+        self.kv_dtype = kv_dtype
         self.dirty = True
         self.retract_count = 0    # pages taken back by speculative rollback
         self.cow_forks = 0
@@ -313,6 +385,10 @@ class PagedCacheManager:
         self.cached_tokens_total = 0
         self.peak_logical_pages = 0
         self.peak_sharing_ratio = 1.0
+        self.swap_outs = 0
+        self.swap_ins = 0
+        self.swapped_out_bytes = 0
+        self.swapped_in_bytes = 0
 
     # ----------------------------------------------------------- internals
     def _evictable_pred(self, page: int) -> bool:
@@ -563,6 +639,47 @@ class PagedCacheManager:
             self.dirty = True
             self._probe()
 
+    # ----------------------------------------------------- host-swap tier
+    def swap_out(self, slot: int, pool: Dict[str, jnp.ndarray],
+                 n_tokens: int) -> "SwapHandle":
+        """Page a slot out to host buffers: copy every mapped page of the
+        slot (values *and* scale metadata) device-to-host, then release
+        the slot's references — the pages return to the pool for other
+        requests while the evicted request waits in host memory.
+
+        The copy happens strictly before the release: releasing first
+        would let a same-round admission reuse (and overwrite) the very
+        pages being copied.  Shared pages are snapshotted like private
+        ones — a swap-in restores the data into fresh *private* pages, so
+        a resumed request never re-enters the sharing graph (correct, at
+        the cost of de-duplication until its prefix is re-published)."""
+        blocks = [int(p) for p in self.tables[slot] if p != TRASH_PAGE]
+        data = swap_out_pages(pool, np.asarray(blocks, np.int32))
+        handle = SwapHandle(n_blocks=len(blocks), n_tokens=n_tokens,
+                            data=data)
+        self.swap_outs += 1
+        self.swapped_out_bytes += handle.nbytes
+        self.release(slot)
+        return handle
+
+    def admit_swapped(self, slot: int,
+                      handle: "SwapHandle") -> Optional[List[int]]:
+        """Map fresh private pages for a swapped-out slot (the engine then
+        scatters ``handle.data`` into them via :func:`swap_in_pages`).
+        All-or-nothing like :meth:`admit`: None when pages lack."""
+        pages = self._alloc(handle.n_blocks)
+        if pages is None:
+            return None
+        assert not self.owned[slot], f"slot {slot} already mapped"
+        for j, p in enumerate(pages):
+            self.tables[slot, j] = p
+        self.owned[slot] = list(pages)
+        self.swap_ins += 1
+        self.swapped_in_bytes += handle.nbytes
+        self.dirty = True
+        self._probe()
+        return pages
+
     def device_tables(self) -> jnp.ndarray:
         self.dirty = False
         return jnp.asarray(self.tables)
@@ -614,7 +731,11 @@ class PagedCacheManager:
             shares=a.share_count, cow_forks=self.cow_forks,
             evictions=self.evictions,
             index_pages=len(self.index) if self.index is not None else 0,
-            cached_prefix_tokens=self.cached_tokens_total)
+            cached_prefix_tokens=self.cached_tokens_total,
+            kv_dtype=self.kv_dtype,
+            swap_outs=self.swap_outs, swap_ins=self.swap_ins,
+            swapped_out_bytes=self.swapped_out_bytes,
+            swapped_in_bytes=self.swapped_in_bytes)
 
 
 # ---------------------------------------------------------------------------
@@ -622,11 +743,28 @@ class PagedCacheManager:
 # ---------------------------------------------------------------------------
 
 def init_page_pool(n_layers: int, num_pages: int, page_size: int,
-                   n_kv_heads: int, d_head: int, dtype) -> Dict[str, Any]:
-    """The shared block pool: (L, P, page_size, Hkv, D) per K and V."""
+                   n_kv_heads: int, d_head: int, dtype,
+                   kv_dtype: Optional[str] = None) -> Dict[str, Any]:
+    """The shared block pool: (L, P, page_size, Hkv, D) per K and V.
+
+    ``kv_dtype='bf16'`` stores values at bfloat16; ``'int8'`` stores them
+    symmetric-quantized and adds the per-page scale metadata —
+    ``k_scales`` / ``v_scales`` of shape (L, P, page_size), one float32
+    scale per cache row of every page (zero-initialized: an unwritten row
+    dequantizes to exact 0, matching the float pools' zero init)."""
+    val_dtype, quantized = resolve_kv_dtype(kv_dtype, dtype)
     shape = (n_layers, num_pages, page_size, n_kv_heads, d_head)
-    return {"k_pages": jnp.zeros(shape, dtype),
-            "v_pages": jnp.zeros(shape, dtype)}
+    pool = {"k_pages": jnp.zeros(shape, val_dtype),
+            "v_pages": jnp.zeros(shape, val_dtype)}
+    if quantized:
+        pool["k_scales"] = jnp.zeros(shape[:3], jnp.float32)
+        pool["v_scales"] = jnp.zeros(shape[:3], jnp.float32)
+    return pool
+
+
+def pool_is_quantized(pages: Dict[str, Any]) -> bool:
+    """True when the pool carries int8 values + per-page scale leaves."""
+    return "k_scales" in pages
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -646,6 +784,7 @@ def scatter_prefill(pages: Dict[str, jnp.ndarray],
     the already-cached pages entirely and prefills only its suffix.
     """
     ps = pages["k_pages"].shape[2]
+    quantized = pool_is_quantized(pages)
     out = dict(pages)
     flat_idx = page_idx.reshape(-1)
     for name, src_name in (("k_pages", "k"), ("v_pages", "v")):
@@ -657,7 +796,13 @@ def scatter_prefill(pages: Dict[str, jnp.ndarray],
             src = jnp.pad(src, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
         nb = src.shape[2] // ps
         src = src.reshape(l, b * nb, ps, h, d)
-        out[name] = pool.at[:, flat_idx].set(src.astype(pool.dtype))
+        if quantized:
+            q, scale = quantize_kv_rows(src)        # scale: (l, b*nb, ps)
+            out[name] = pool.at[:, flat_idx].set(q)
+            sname = name[0] + "_scales"
+            out[sname] = pages[sname].at[:, flat_idx].set(scale)
+        else:
+            out[name] = pool.at[:, flat_idx].set(src.astype(pool.dtype))
     return out
 
 
@@ -667,10 +812,11 @@ def copy_pages(pages: Dict[str, jnp.ndarray], src_idx: jnp.ndarray,
     """Copy-on-write fork: duplicate physical pages ``src_idx`` into
     ``dst_idx`` (both (n,) int32) across every layer of the donated pool.
     One page copy per fork — the price of making a write frontier private
-    — versus re-prefilling the whole prefix without sharing."""
+    — versus re-prefilling the whole prefix without sharing.  Every pool
+    leaf is copied, so quantized pools fork their scale metadata along
+    with the values."""
     out = dict(pages)
-    for name in ("k_pages", "v_pages"):
-        pool = out[name]
+    for name, pool in pages.items():
         out[name] = pool.at[:, dst_idx].set(pool[:, src_idx])
     return out
 
@@ -714,13 +860,76 @@ def gather_slot(pages: Dict[str, jnp.ndarray], table_row: jnp.ndarray,
     rows pointing at the trash page) are *poisoned* with NaN so a debug
     view can never mistake trash-page garbage for cached data; note this
     means positions past the live prefix inside a *mapped* page show
-    stale-but-real rows, exactly what the device sees."""
+    stale-but-real rows, exactly what the device sees.
+
+    Quantized pools come back *dequantized* (float32): the view is the
+    logical cache, and the logical cache is ``q * scale`` — poison still
+    lands on unmapped entries because the dequantized view is float even
+    when the stored values are int8."""
     unmapped = table_row == TRASH_PAGE                      # (NB,)
+    quantized = pool_is_quantized(pages)
     out = {}
     for name, dense in (("k_pages", "k"), ("v_pages", "v")):
         g = jnp.take(pages[name], table_row, axis=1)  # (L, NB, ps, H, D)
+        if quantized:
+            s = jnp.take(pages[name[0] + "_scales"], table_row, axis=1)
+            g = dequantize_kv(g, s)                   # (L, NB, ps, H, D) f32
         l, nb, ps, h, d = g.shape
         g = jnp.where(unmapped[None, :, None, None, None],
                       jnp.asarray(jnp.nan, g.dtype), g)
         out[dense] = g.reshape(l, nb * ps, h, d)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# host-swap tier: page-out / page-in between the device pool and host RAM
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SwapHandle:
+    """A slot's cache, resident in host memory while preempted.
+
+    ``data`` maps every pool leaf name to a host array sliced along the
+    page axis in *logical block order* — ``data["k_pages"][:, j]`` is the
+    page holding positions [j*page_size, (j+1)*page_size).  Restoring the
+    handle into any n fresh pages reproduces the slot's cache bytes
+    exactly (values and scale metadata together), which is what makes a
+    swap-resume bit-identical to an uninterrupted run.  ``n_tokens`` is
+    the valid prefix length at swap time — the requeue-vs-swap cost
+    estimate reads it, the restore does not need it."""
+    n_blocks: int
+    n_tokens: int
+    data: Dict[str, np.ndarray]
+
+    @property
+    def nbytes(self) -> int:
+        return sum(a.nbytes for a in self.data.values())
+
+
+def swap_out_pages(pool: Dict[str, jnp.ndarray],
+                   page_idx: np.ndarray) -> Dict[str, np.ndarray]:
+    """Copy physical pages ``page_idx`` of every pool leaf to host
+    buffers (device-to-host; on accelerators the destination is pinned
+    host memory via the transfer path, on CPU it is a plain copy).  The
+    result is placement-independent: it records page *contents*, not page
+    numbers, so it survives pool rebuilds (fault recovery) and restores
+    into any later allocation."""
+    idx = np.asarray(page_idx, np.int32)
+    return {name: np.asarray(jax.device_get(leaf[:, idx]))
+            for name, leaf in pool.items()}
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def swap_in_pages(pool: Dict[str, jnp.ndarray],
+                  host: Dict[str, np.ndarray],
+                  page_idx: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Scatter host buffers from :func:`swap_out_pages` into pages
+    ``page_idx`` ((n,) int32) of the donated pool — the resume half of
+    swap-tier preemption.  One executable per (n, shapes): the page
+    indices are traced, so which pages the allocator handed out does not
+    recompile anything."""
+    out = dict(pool)
+    for name, leaf in pool.items():
+        out[name] = leaf.at[:, page_idx].set(
+            jnp.asarray(host[name], leaf.dtype))
     return out

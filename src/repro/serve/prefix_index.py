@@ -26,37 +26,66 @@ drives this; the index never touches the allocator itself):
     Existing nodes keep their page (the caller shared that same page at
     admission, so there is nothing to register).
   * Entries whose page refcount has dropped to the index's own single
-    reference are *evictable*: ``evict_lru`` releases them leaf-first in
-    least-recently-matched order, cascading so a parent becomes a
-    candidate once its children are gone.  Released requests' prefixes
-    therefore linger as reusable cache instead of being freed — free
-    pages are reclaimed lazily, under allocation pressure.
+    reference are *evictable*: ``evict_lru`` releases them leaf-first,
+    cascading so a parent becomes a candidate once its children are
+    gone.  Released requests' prefixes therefore linger as reusable
+    cache instead of being freed — free pages are reclaimed lazily,
+    under allocation pressure.
+
+Victim selection among evictable leaves is *pluggable* (``policy``):
+
+  lru      least-recently-matched first — the default, favors whatever
+           traffic touched last.
+  lfu      least-frequently-matched first (ties broken LRU) — popular
+           system prompts survive a burst of one-off prompts.
+  deepest  deepest leaf first (ties broken LRU) — prunes long private
+           tails before shallow widely-shared prefixes, on the radix
+           intuition that a node's share probability decays with depth.
+
+``min_cached_tokens`` is the admission threshold: prompts whose
+full-page prefix is shorter than this many tokens are never registered —
+tiny prefixes would pollute the tree with entries whose hit value cannot
+repay the pages they pin.
 """
 
 from __future__ import annotations
 
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
+EVICT_POLICIES = ("lru", "lfu", "deepest")
+
 
 class _Node:
-    __slots__ = ("children", "page", "last_used")
+    __slots__ = ("children", "page", "last_used", "hits", "depth")
 
-    def __init__(self, page: int = -1):
+    def __init__(self, page: int = -1, depth: int = 0):
         self.children: Dict[Tuple[int, ...], _Node] = {}
         self.page = page
         self.last_used = 0
+        self.hits = 0
+        self.depth = depth
 
 
 class PrefixIndex:
     """Radix tree: one edge per full page of token ids -> physical page."""
 
-    def __init__(self, page_size: int):
+    def __init__(self, page_size: int, policy: str = "lru",
+                 min_cached_tokens: int = 0):
         if page_size < 1:
             raise ValueError(f"page_size must be >= 1; got {page_size}")
+        if policy not in EVICT_POLICIES:
+            raise ValueError(f"policy must be one of {EVICT_POLICIES}; "
+                             f"got {policy!r}")
+        if min_cached_tokens < 0:
+            raise ValueError("min_cached_tokens must be >= 0; "
+                             f"got {min_cached_tokens}")
         self.page_size = page_size
+        self.policy = policy
+        self.min_cached_tokens = min_cached_tokens
         self._root = _Node()
         self._clock = 0          # LRU clock: bumped on match/insert
         self._n_pages = 0
+        self.rejected_inserts = 0   # prompts below min_cached_tokens
         # bumped whenever the page set changes (insert/evict) — lets the
         # scheduler skip replanning a blocked admission until the answer
         # could differ (matching alone only moves LRU stamps)
@@ -96,6 +125,7 @@ class PrefixIndex:
             if child is None:
                 break
             child.last_used = t
+            child.hits += 1
             pages.append(child.page)
             node = child
         return pages
@@ -111,12 +141,21 @@ class PrefixIndex:
         is kept (by protocol the caller mapped that same page at
         admission; a private duplicate such as a CoW fork is simply not
         registered).
+
+        Prompts whose full-page prefix holds fewer than
+        ``min_cached_tokens`` tokens are rejected outright (nothing
+        registered, nothing returned): the admission threshold that keeps
+        one-page one-off prompts from pinning pool pages.
         """
+        full_tokens = (len(tokens) // self.page_size) * self.page_size
+        if full_tokens < self.min_cached_tokens:
+            self.rejected_inserts += 1
+            return []
         node, new, t = self._root, [], self._tick()
         for key, page in zip(self._page_keys(tokens), pages):
             child = node.children.get(key)
             if child is None:
-                child = _Node(int(page))
+                child = _Node(int(page), depth=node.depth + 1)
                 node.children[key] = child
                 new.append(int(page))
                 self._n_pages += 1
@@ -152,22 +191,31 @@ class PrefixIndex:
 
         return walk(self._root)[0]
 
-    def evict_lru(self, n: int, can_evict: Callable[[int], bool]) -> List[int]:
-        """Drop up to ``n`` entries, least-recently-matched first, leaves
+    def _victim_key(self, node: _Node):
+        """Victim ordering among evictable leaves (min wins)."""
+        if self.policy == "lfu":
+            return (node.hits, node.last_used)
+        if self.policy == "deepest":
+            return (-node.depth, node.last_used)
+        return (node.last_used,)                              # lru
+
+    def evict(self, n: int, can_evict: Callable[[int], bool]) -> List[int]:
+        """Drop up to ``n`` entries under the configured policy, leaves
         only (evicting a leaf may expose its parent next round).  Returns
         the freed pages; the caller releases them to the allocator."""
         freed: List[int] = []
         while len(freed) < n:
-            best = None  # (last_used, parent, key, node)
+            best = None  # (victim_key, parent, key, node)
             stack: List[_Node] = [self._root]
             while stack:
                 node = stack.pop()
                 for key, child in node.children.items():
                     if child.children:
                         stack.append(child)
-                    elif can_evict(child.page) and (
-                            best is None or child.last_used < best[0]):
-                        best = (child.last_used, node, key, child)
+                    elif can_evict(child.page):
+                        vk = self._victim_key(child)
+                        if best is None or vk < best[0]:
+                            best = (vk, node, key, child)
             if best is None:
                 break
             _, parent, key, node = best
@@ -176,3 +224,7 @@ class PrefixIndex:
             self.version += 1
             freed.append(node.page)
         return freed
+
+    # historical name (the policy used to be hardwired LRU); the manager
+    # and older tests call this
+    evict_lru = evict

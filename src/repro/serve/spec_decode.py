@@ -173,7 +173,10 @@ def build_spec_step(model, draft_model, sample_at, *, max_seq: int,
         cache = dict(pool, block_tables=block_tables)
         logits, cache = model.decode_verify_step(
             params, cache, win, pos, attend_len, verify_backend)
-        pool = {"k_pages": cache["k_pages"], "v_pages": cache["v_pages"]}
+        # rebuild generically: quantized pools carry k_scales/v_scales
+        # alongside the value leaves, and the donated step must hand all
+        # of them back
+        pool = {name: cache[name] for name in pool}
         logits = jnp.where(nan_mask[:, None, None],
                            jnp.asarray(jnp.nan, logits.dtype), logits)
         # NaN guard: a row whose window logits are non-finite anywhere

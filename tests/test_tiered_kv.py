@@ -1,0 +1,517 @@
+"""Tiered KV memory: int8 quantized pages (quantize-on-write, fused
+dequant gather, kernel-vs-SW parity), host-swap preemption (round-trip
+bit-exactness, swap == requeue greedy parity incl. fault recovery),
+pluggable prefix-index eviction policies + min_cached_tokens, roofline
+int8-width gather accounting, quantized-pool audit, and empty-session
+stats regressions."""
+
+import copy
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import reduced_config
+from repro.models.attention import (
+    paged_decode_attention,
+    paged_verify_attention,
+)
+from repro.models.lm import Model
+from repro.roofline.jaxpr_cost import trace_cost
+from repro.serve.audit import audit_pool
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.faults import Fault, FaultSchedule
+from repro.serve.kv_cache import (
+    TRASH_PAGE,
+    PagedCacheManager,
+    dequantize_kv,
+    gather_slot,
+    pool_is_quantized,
+    quantize_kv_rows,
+    resolve_kv_dtype,
+    scatter_prefill,
+    swap_in_pages,
+    swap_out_pages,
+)
+from repro.serve.prefix_index import EVICT_POLICIES, PrefixIndex
+
+_CACHE = {}
+
+
+def _model(arch="qwen2-1.5b"):
+    if arch not in _CACHE:
+        cfg = reduced_config(arch)
+        model = Model(cfg, compute_dtype=jnp.float32)
+        params = model.init(jax.random.PRNGKey(1))
+        _CACHE[arch] = (cfg, model, params)
+    return _CACHE[arch]
+
+
+def _engine(arch="qwen2-1.5b", **kw):
+    cfg, model, params = _model(arch)
+    kw = {"max_seq": 48, "batch_slots": 2, "temperature": 0.0, "seed": 0,
+          "cache_layout": "paged", "page_size": 8, **kw}
+    return ServeEngine(model, params, **kw)
+
+
+def _reqs(n, prompt_len=12, max_new=5, seed=3):
+    cfg, _, _ = _model()
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(0, cfg.vocab,
+                                        prompt_len + i).tolist(),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def _serve(engine, reqs):
+    return engine.serve(copy.deepcopy(reqs))
+
+
+def _quantized_pool(rng, n_layers=2, n_pages=7, page_size=4, hkv=2, d=8):
+    """Random float K/V quantized into an int8 pool (+ the float source)."""
+    kv = rng.normal(size=(2, n_layers, n_pages, page_size, hkv, d)) \
+        .astype(np.float32)
+    kq, ks = quantize_kv_rows(jnp.asarray(kv[0]))
+    vq, vs = quantize_kv_rows(jnp.asarray(kv[1]))
+    return {"k_pages": kq, "v_pages": vq, "k_scales": ks, "v_scales": vs}, kv
+
+
+# ---------------------------------------------------------------------------
+# quantization primitives
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(3, 5, 2, 8)) * 4.0, jnp.float32)
+    q, s = quantize_kv_rows(x)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+    assert s.shape == x.shape[:-2]
+    back = dequantize_kv(q, s)
+    # symmetric absmax: per-element error <= scale/2 = absmax/254
+    bound = np.asarray(jnp.max(jnp.abs(x), axis=(-2, -1))) / 254.0
+    err = np.asarray(jnp.max(jnp.abs(back - x), axis=(-2, -1)))
+    assert np.all(err <= bound + 1e-7)
+
+
+def test_quantize_zero_rows_exact():
+    x = jnp.zeros((2, 3, 2, 4), jnp.float32)
+    q, s = quantize_kv_rows(x)
+    assert np.all(np.asarray(s) == 0.0)
+    assert np.all(np.asarray(dequantize_kv(q, s)) == 0.0)
+
+
+def test_quantize_row_independence():
+    """The swap/replay contract: a row's stored bytes depend only on that
+    row, never on its neighbors."""
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(2, 6, 2, 8)), jnp.float32)
+    q_all, s_all = quantize_kv_rows(x)
+    q_one, s_one = quantize_kv_rows(x[:, 2:3])
+    np.testing.assert_array_equal(np.asarray(q_all[:, 2:3]),
+                                  np.asarray(q_one))
+    np.testing.assert_array_equal(np.asarray(s_all[:, 2:3]),
+                                  np.asarray(s_one))
+
+
+def test_resolve_kv_dtype():
+    assert resolve_kv_dtype(None, jnp.float32) == (jnp.dtype(jnp.float32),
+                                                   False)
+    assert resolve_kv_dtype("auto", jnp.bfloat16) == (
+        jnp.dtype(jnp.bfloat16), False)
+    assert resolve_kv_dtype("bf16", jnp.float32) == (
+        jnp.dtype(jnp.bfloat16), False)
+    assert resolve_kv_dtype("int8", jnp.float32) == (jnp.dtype(jnp.int8),
+                                                     True)
+    with pytest.raises(ValueError):
+        resolve_kv_dtype("fp4", jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# quantized scatter/gather (dequant debug view + NaN poison)
+# ---------------------------------------------------------------------------
+
+def test_gather_slot_quantized_matches_dense():
+    L, B, S, H, D, ps, P = 2, 2, 10, 2, 8, 4, 12
+    m = PagedCacheManager(num_pages=P, page_size=ps, slots=B, max_seq=16,
+                          kv_dtype="int8")
+    lens = [10, 7]
+    for s, ln in enumerate(lens):
+        m.admit(s, ln)
+    pool = {"k_pages": jnp.zeros((L, P, ps, H, D), jnp.int8),
+            "v_pages": jnp.zeros((L, P, ps, H, D), jnp.int8),
+            "k_scales": jnp.zeros((L, P, ps), jnp.float32),
+            "v_scales": jnp.zeros((L, P, ps), jnp.float32)}
+    assert pool_is_quantized(pool)
+    rng = np.random.default_rng(2)
+    pcache = {"k": jnp.asarray(rng.normal(size=(L, B, S, H, D)),
+                               jnp.float32),
+              "v": jnp.asarray(rng.normal(size=(L, B, S, H, D)),
+                               jnp.float32)}
+    nb = -(-S // ps)
+    page_idx = jnp.asarray(np.stack([m.prefill_page_idx(s, nb)
+                                     for s in range(B)]))
+    pool = scatter_prefill(pool, pcache, page_idx)
+    for s, ln in enumerate(lens):
+        view = gather_slot(pool, jnp.asarray(m.tables[s]), ps)
+        for name in ("k", "v"):
+            got = np.asarray(view[name][:, :ln])
+            want = np.asarray(pcache[name][:, s, :ln])
+            assert got.dtype == np.float32
+            # dequantized view is within the per-row absmax/254 bound
+            bound = np.abs(want).max(axis=(-2, -1), keepdims=True) / 254.0
+            assert np.all(np.abs(got - want) <= bound + 1e-6)
+            # unmapped blocks come back NaN-poisoned even though the
+            # stored values are int8 (the view is float)
+            n_mapped = -(-ln // ps)
+            tail = np.asarray(view[name][:, n_mapped * ps:])
+            assert tail.size and np.all(np.isnan(tail))
+
+
+# ---------------------------------------------------------------------------
+# quantized kernel-vs-SW attention parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("family", ["decode", "verify"])
+def test_quantized_kernel_vs_sw_parity(family):
+    rng = np.random.default_rng(4)
+    hq, hkv, d, ps, nb, b = 4, 2, 16, 8, 3, 2
+    pool, _ = _quantized_pool(rng, n_layers=1, n_pages=1 + b * nb,
+                              page_size=ps, hkv=hkv, d=d)
+    tables = jnp.asarray(np.arange(1, 1 + b * nb).reshape(b, nb), jnp.int32)
+    pos = jnp.asarray([ps + 3, 2 * ps + 1], jnp.int32)
+    t_w = 1 if family == "decode" else 3
+    q = jnp.asarray(rng.normal(size=(b, t_w, hq, d)), jnp.float32)
+    fn = (paged_decode_attention if family == "decode"
+          else paged_verify_attention)
+    outs = {be: np.asarray(fn(q, pool["k_pages"][0], pool["v_pages"][0],
+                              tables, pos, k_scales=pool["k_scales"][0],
+                              v_scales=pool["v_scales"][0], backend=be))
+            for be in ("kernel", "jnp")}
+    np.testing.assert_allclose(outs["kernel"], outs["jnp"],
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_quantized_attention_matches_dequantized_reference():
+    """Fused dequant in the gather == dequantize-then-attend: the scale
+    operand changes where the multiply happens, never the math."""
+    rng = np.random.default_rng(5)
+    hq, hkv, d, ps, nb, b = 2, 1, 8, 4, 2, 1
+    pool, _ = _quantized_pool(rng, n_layers=1, n_pages=1 + nb,
+                              page_size=ps, hkv=hkv, d=d)
+    tables = jnp.asarray([[1, 2]], jnp.int32)
+    pos = jnp.asarray([ps + 1], jnp.int32)
+    q = jnp.asarray(rng.normal(size=(b, 1, hq, d)), jnp.float32)
+    got = np.asarray(paged_decode_attention(
+        q, pool["k_pages"][0], pool["v_pages"][0], tables, pos,
+        k_scales=pool["k_scales"][0], v_scales=pool["v_scales"][0],
+        backend="jnp"))
+    k_f = dequantize_kv(pool["k_pages"][0], pool["k_scales"][0])
+    v_f = dequantize_kv(pool["v_pages"][0], pool["v_scales"][0])
+    want = np.asarray(paged_decode_attention(q, k_f, v_f, tables, pos,
+                                             backend="jnp"))
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# roofline: quantized gathers are charged at int8 width
+# ---------------------------------------------------------------------------
+
+def test_roofline_charges_int8_gather_width():
+    hq, hkv, d, ps, nb, b = 4, 2, 16, 8, 4, 2
+    n_pages = 1 + b * nb
+    tables = jax.ShapeDtypeStruct((b, nb), jnp.int32)
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
+    q = jax.ShapeDtypeStruct((b, 1, hq, d), jnp.float32)
+    val = lambda dt: jax.ShapeDtypeStruct((n_pages, ps, hkv, d), dt)
+    sc = jax.ShapeDtypeStruct((n_pages, ps), jnp.float32)
+
+    def run_f32(q, kp, vp, tables, pos):
+        return paged_decode_attention(q, kp, vp, tables, pos,
+                                      backend="jnp")
+
+    def run_q(q, kp, vp, ks, vs, tables, pos):
+        return paged_decode_attention(q, kp, vp, tables, pos, k_scales=ks,
+                                      v_scales=vs, backend="jnp")
+
+    # the page gather itself is charged at storage width: the int8 read
+    # (plus its int8 result) costs 1/4 of f32, 1/2 of bf16 — the ~2x
+    # bandwidth claim of the ISSUE, seen directly by the cost walker
+    def bare_gather(kp, tables):
+        return jnp.take(kp, tables.reshape(-1), axis=0)
+
+    g_f32 = trace_cost(bare_gather, val(jnp.float32),
+                       tables)["bytes_total"]
+    g_bf16 = trace_cost(bare_gather, val(jnp.bfloat16),
+                        tables)["bytes_total"]
+    g_q = trace_cost(bare_gather, val(jnp.int8), tables)["bytes_total"]
+    assert 3.5 < g_f32 / g_q < 4.5, g_f32 / g_q
+    assert 1.8 < g_bf16 / g_q < 2.2, g_bf16 / g_q
+
+    # end to end the quantized step still reads materially fewer bytes,
+    # even with the dtype-independent softmax traffic riding along
+    bytes_f32 = trace_cost(run_f32, q, val(jnp.float32), val(jnp.float32),
+                           tables, pos)["bytes_total"]
+    bytes_q = trace_cost(run_q, q, val(jnp.int8), val(jnp.int8), sc, sc,
+                         tables, pos)["bytes_total"]
+    assert bytes_f32 / bytes_q > 1.5, bytes_f32 / bytes_q
+
+
+# ---------------------------------------------------------------------------
+# host-swap tier
+# ---------------------------------------------------------------------------
+
+def test_swap_pages_roundtrip_bit_exact():
+    rng = np.random.default_rng(7)
+    pool, _ = _quantized_pool(rng)
+    before = {n: np.asarray(v).copy() for n, v in pool.items()}
+    host = swap_out_pages(pool, np.asarray([1, 4, 5]))
+    assert set(host) == set(pool)
+    # scatter back into *different* pages: contents are placement-free
+    pool = swap_in_pages(pool, host, jnp.asarray([2, 3, 6], jnp.int32))
+    after = {n: np.asarray(v) for n, v in pool.items()}
+    for name in before:
+        np.testing.assert_array_equal(after[name][:, [2, 3, 6]],
+                                      before[name][:, [1, 4, 5]])
+
+
+def test_manager_swap_out_admit_roundtrip():
+    mgr = PagedCacheManager(8, 4, 2, 16, kv_dtype="int8")
+    pages = mgr.admit(0, 6)
+    assert pages is not None and len(pages) == 2
+    rng = np.random.default_rng(8)
+    pool, _ = _quantized_pool(rng, n_layers=1, n_pages=8, page_size=4)
+    handle = mgr.swap_out(0, pool, 6)
+    assert handle.n_blocks == 2 and handle.n_tokens == 6
+    assert handle.nbytes == sum(a.nbytes for a in handle.data.values())
+    # slot released: pages back in the pool, stats counted
+    assert mgr.allocator.free == 7
+    assert mgr.stats().swap_outs == 1
+    got = mgr.admit_swapped(1, handle)
+    assert got is not None and len(got) == 2
+    assert mgr.stats().swap_ins == 1
+    mgr.audit().raise_if_failed()
+
+
+def test_admit_swapped_all_or_nothing():
+    mgr = PagedCacheManager(4, 4, 2, 16, kv_dtype="int8")
+    mgr.admit(0, 6)                              # 2 of 3 usable pages
+    rng = np.random.default_rng(9)
+    pool, _ = _quantized_pool(rng, n_layers=1, n_pages=4, page_size=4)
+    handle = mgr.swap_out(0, pool, 6)
+    assert mgr.admit(0, 9) is not None           # re-take all 3 pages
+    assert mgr.admit_swapped(1, handle) is None  # needs 2, none free
+    mgr.audit().raise_if_failed()
+
+
+@pytest.mark.parametrize("preempt", ["swap", "auto"])
+def test_swap_preemption_matches_requeue(preempt):
+    """Forced preemption on a tiny pool: swap-tier resume must produce the
+    same greedy tokens as recompute-requeue, int8 pool included."""
+    reqs = [Request(uid=0, prompt=list(range(1, 17)), max_new_tokens=16),
+            Request(uid=1, prompt=list(range(40, 56)), max_new_tokens=16)]
+    base = _engine(num_pages=6, kv_dtype="int8", preempt="requeue",
+                   audit=True)
+    want = _serve(base, reqs)
+    assert base.preemptions > 0
+    eng = _engine(num_pages=6, kv_dtype="int8", preempt=preempt,
+                  audit=True)
+    got = _serve(eng, reqs)
+    assert got == want
+    if preempt == "swap":
+        assert eng.last_pool_stats.swap_outs > 0
+        assert eng.last_pool_stats.swap_ins > 0
+        assert eng.last_pool_stats.swapped_out_bytes > 0
+
+
+def test_swap_survives_kernel_fault_recovery():
+    """A handle taken before a mid-serve kernel failure restores into the
+    rebuilt pool: it records contents, not page numbers."""
+    reqs = [Request(uid=0, prompt=list(range(1, 17)), max_new_tokens=16),
+            Request(uid=1, prompt=list(range(40, 56)), max_new_tokens=16)]
+    want = _serve(_engine(num_pages=6, kv_dtype="int8"), reqs)
+    eng = _engine(num_pages=6, kv_dtype="int8", preempt="swap", audit=True)
+    got = eng.serve(copy.deepcopy(reqs),
+                    faults=FaultSchedule([Fault("kernel", step=4)]))
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# eviction policies + min_cached_tokens
+# ---------------------------------------------------------------------------
+
+def test_prefix_index_validation():
+    with pytest.raises(ValueError):
+        PrefixIndex(4, policy="mru")
+    with pytest.raises(ValueError):
+        PrefixIndex(4, min_cached_tokens=-1)
+    assert set(EVICT_POLICIES) == {"lru", "lfu", "deepest"}
+
+
+def test_min_cached_tokens_rejects_short_prompts():
+    ix = PrefixIndex(4, min_cached_tokens=8)
+    assert ix.insert([1, 2, 3, 4, 5], [10]) == []     # 1 full page < 8
+    assert len(ix) == 0 and ix.rejected_inserts == 1
+    assert ix.match([1, 2, 3, 4]) == []
+    # two full pages meet the threshold
+    assert ix.insert([1, 2, 3, 4, 5, 6, 7, 8], [10, 11]) == [10, 11]
+    assert len(ix) == 2 and ix.rejected_inserts == 1
+
+
+def test_lfu_evicts_least_hit_leaf():
+    ix = PrefixIndex(2, policy="lfu")
+    ix.insert([1, 1], [3])
+    ix.insert([2, 2], [4])
+    ix.match([1, 1])          # page 3: 1 hit
+    ix.match([1, 1])          # page 3: 2 hits
+    ix.match([2, 2])          # page 4: 1 hit, more recent
+    assert ix.evict(1, lambda p: True) == [4]
+
+
+def test_deepest_evicts_long_tails_first():
+    # the shallow leaf is the LRU victim, but deepest prunes the tail
+    ix = PrefixIndex(2, policy="deepest")
+    ix.insert([9, 9], [8])                     # oldest leaf, depth 1
+    ix.insert([1, 1, 2, 2, 3, 3], [5, 6, 7])   # newest, depth-3 chain
+    assert ix.evict(1, lambda p: True) == [7]
+    lru = PrefixIndex(2, policy="lru")
+    lru.insert([9, 9], [8])
+    lru.insert([1, 1, 2, 2, 3, 3], [5, 6, 7])
+    assert lru.evict(1, lambda p: True) == [8]
+
+
+def test_engine_eviction_policies_greedy_identical():
+    """Policies change which pages linger, never the computed tokens."""
+    cfg, _, _ = _model()
+    rng = np.random.default_rng(11)
+    prefixes = [rng.integers(0, cfg.vocab, 16).tolist() for _ in range(3)]
+    reqs = [Request(uid=i,
+                    prompt=prefixes[i % 3]
+                    + rng.integers(0, cfg.vocab, 3 + i).tolist(),
+                    max_new_tokens=4)
+            for i in range(6)]
+    outs = {}
+    for policy in EVICT_POLICIES:
+        eng = _engine(num_pages=9, prefix_sharing=True,
+                      evict_policy=policy, min_cached_tokens=8, audit=True)
+        outs[policy] = _serve(eng, reqs)
+        assert eng.last_pool_stats.audit_ok
+    assert outs["lru"] == outs["lfu"] == outs["deepest"]
+
+
+# ---------------------------------------------------------------------------
+# quantized-pool audit
+# ---------------------------------------------------------------------------
+
+def test_audit_pool_passes_consistent_quantized_pool():
+    mgr = PagedCacheManager(8, 4, 2, 16, kv_dtype="int8")
+    mgr.admit(0, 6)
+    pool, _ = _quantized_pool(np.random.default_rng(12), n_layers=1,
+                              n_pages=8, page_size=4)
+    assert audit_pool(mgr, pool).ok
+    assert audit_pool(mgr, pool, check_values=True).ok
+
+
+def test_audit_pool_catches_metadata_corruption():
+    mgr = PagedCacheManager(8, 4, 2, 16, kv_dtype="int8")
+    mgr.admit(0, 6)
+    pool, _ = _quantized_pool(np.random.default_rng(13), n_layers=1,
+                              n_pages=8, page_size=4)
+    # manager says int8, pool lost its scale leaves
+    bare = {n: pool[n] for n in ("k_pages", "v_pages")}
+    assert not audit_pool(mgr, bare).ok
+    # scale leaf with the wrong shape
+    assert not audit_pool(mgr, dict(pool,
+                                    k_scales=pool["k_scales"][:, :4])).ok
+    # scale leaf with the wrong dtype
+    assert not audit_pool(
+        mgr, dict(pool, v_scales=pool["v_scales"].astype(jnp.float16))).ok
+    # NaN scale on a mapped page: structural pass, value sweep fails
+    mapped = mgr.owned[0][0]
+    poisoned = dict(pool, k_scales=pool["k_scales"]
+                    .at[:, mapped].set(jnp.nan))
+    assert audit_pool(mgr, poisoned).ok
+    assert not audit_pool(mgr, poisoned, check_values=True).ok
+
+
+def test_audit_pool_float_pool_vs_int8_manager():
+    mgr = PagedCacheManager(8, 4, 2, 16)         # kv_dtype None
+    pool, _ = _quantized_pool(np.random.default_rng(14), n_layers=1,
+                              n_pages=8, page_size=4)
+    assert not audit_pool(mgr, pool).ok          # quantized pool, f32 mgr
+
+
+# ---------------------------------------------------------------------------
+# engine integration: int8 end-to-end, ctor validation, empty sessions
+# ---------------------------------------------------------------------------
+
+def test_int8_engine_greedy_matches_dense():
+    reqs = _reqs(4, max_new=5)
+    cfg, model, params = _model()
+    dense = ServeEngine(model, params, max_seq=48, batch_slots=2,
+                        temperature=0.0, seed=0)
+    want = _serve(dense, reqs)
+    for kv in ("bf16", "int8"):
+        eng = _engine(num_pages=13, kv_dtype=kv, audit=True)
+        assert _serve(eng, reqs) == want
+        assert eng.last_pool_stats.kv_dtype == kv
+        assert eng.last_pool_stats.audit_ok
+
+
+def test_int8_pool_bytes_near_half_bf16():
+    _, model, _ = _model()
+
+    def nbytes(kv):
+        shapes = jax.eval_shape(lambda: model.init_cache(
+            2, 48, layout="paged", page_size=8, num_pages=13, kv_dtype=kv))
+        return sum(int(np.prod(l.shape)) * jnp.dtype(l.dtype).itemsize
+                   for l in jax.tree.leaves(shapes)
+                   if l.dtype != jnp.int32)      # exclude block tables
+
+    ratio = nbytes("bf16") / nbytes("int8")
+    assert 1.8 <= ratio <= 2.0, ratio
+
+
+def test_engine_ctor_validation():
+    _, model, params = _model()
+    with pytest.raises(ValueError):
+        _engine(kv_dtype="fp8")
+    with pytest.raises(ValueError):
+        ServeEngine(model, params, max_seq=48, batch_slots=2,
+                    kv_dtype="int8")             # dense layout
+    with pytest.raises(ValueError):
+        _engine(preempt="steal")
+    with pytest.raises(ValueError):
+        ServeEngine(model, params, max_seq=48, batch_slots=2,
+                    preempt="swap")              # dense layout
+    with pytest.raises(ValueError):
+        _engine(evict_policy="mru")
+    with pytest.raises(ValueError):
+        _engine(min_cached_tokens=-1)
+
+
+@pytest.mark.parametrize("layout", ["dense", "paged", "shared", "int8"])
+def test_empty_session_stats_defined(layout):
+    """serve([]) regression: percentile helpers and sharing ratio must
+    come back defined (None-filled / 1.0), never raise or NaN."""
+    _, model, params = _model()
+    kw = {"max_seq": 48, "batch_slots": 2, "temperature": 0.0, "seed": 0}
+    if layout != "dense":
+        kw.update(cache_layout="paged", page_size=8)
+    if layout == "shared":
+        kw.update(prefix_sharing=True)
+    if layout == "int8":
+        kw.update(kv_dtype="int8")
+    eng = ServeEngine(model, params, **kw)
+    assert eng.serve([]) == {}
+    sla = eng.last_stats["sla"]
+    assert sla["requests"] == 0 and sla["statuses"] == {}
+    assert sla["ok_tokens"] == 0 and np.isfinite(sla["goodput_tok_s"])
+    for key in ("ttft_ms", "tbt_ms"):
+        assert sla[key]["n"] == 0
+        assert sla[key]["p50"] is None and sla[key]["p99"] is None
+    if layout != "dense":
+        p = eng.last_pool_stats
+        assert p.sharing_ratio == 1.0 and np.isfinite(p.sharing_ratio)
+        assert p.audit_ok and p.swap_outs == 0 and p.swap_ins == 0
