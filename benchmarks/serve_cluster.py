@@ -1,0 +1,332 @@
+"""Disaggregated multi-replica serving benchmark: scaling, routing, chaos.
+
+Three sections over the ``serve.cluster`` layer (engine workers behind a
+router + controller), all on the deterministic fleet round clock:
+
+  scaling  1/2/4 replicas under round-robin (plus a disaggregated
+           prefill/decode split): per-request outputs must stay
+           bit-identical to a single direct engine at every fleet size
+           — the tentpole parity gate — while fleet tokens/round
+           reports how replication actually scales.
+  routing  a multi-tenant Zipf workload (few hot tenants sharing long
+           system prompts) routed round-robin vs cache-aware.  The
+           router's prefix affinity must *show up in the allocator*:
+           the hard gates require cache-aware to allocate <= 0.8x the
+           pages per request of round-robin (tenant prefixes pinned to
+           their warm replica instead of re-prefilled fleet-wide) and
+           to reach a strictly lower mean admit-to-first-token round
+           count (cached prefixes skip prefill rounds).
+  chaos    a replica killed mid-serve plus per-worker scoped fault
+           schedules: lost requests must drain through the router's
+           retry path onto survivors, bit-identical, with the whole
+           fleet (dead replica's pool included) auditing clean.
+
+Every section hard-gates (SystemExit, non-zero) on:
+
+  PARITY     OK outputs bit-identical to a fault-free single-engine
+             closed-loop serve of the same requests — routing,
+             handoff, and retry move *where* work runs, never what it
+             produces
+  PARTITION  every submitted request reaches exactly one terminal
+             status at the fleet level
+  LEAK       every replica's allocator audits clean and holds no pages
+             beyond its prefix-index cache after drain
+
+  PYTHONPATH=src python benchmarks/serve_cluster.py           # full
+  PYTHONPATH=src python benchmarks/serve_cluster.py --smoke   # CI
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import reduced_config
+from repro.models.lm import Model
+from repro.serve import (Request, ServeEngine, make_cluster,
+                         make_tenant_workload)
+
+_SECTIONS = ("scaling", "routing", "chaos")
+
+_EKW = {"max_seq": 64, "batch_slots": 2, "temperature": 0.0, "seed": 0,
+        "cache_layout": "paged", "page_size": 8}
+
+
+def _model():
+    cfg = reduced_config("qwen2-1.5b")
+    model = Model(cfg, compute_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(1))
+    return cfg, model, params
+
+
+def _reqs(cfg, n, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(
+                        0, cfg.vocab,
+                        size=int(rng.integers(4, 16))).tolist(),
+                    max_new_tokens=int(rng.integers(2, 8)))
+            for i in range(n)]
+
+
+def _fresh(reqs):
+    return [dataclasses.replace(r, generated=None) for r in reqs]
+
+
+def _reference(model, params, reqs, **kw) -> Dict[int, List[int]]:
+    """Fault-free single-engine closed-loop outputs: the parity oracle
+    for any topology (outputs are (uid, position)-keyed)."""
+    eng = ServeEngine(model, params, **{**_EKW, **kw})
+    return eng.serve(_fresh(reqs))
+
+
+def _gate(tag: str, cluster, ok: Dict[int, List[int]],
+          ref: Dict[int, List[int]]):
+    """PARITY / PARTITION / LEAK for one cluster run.  PARTITION is
+    enforced twice: close() raises on a statusless request, and the
+    fleet audit re-checks every replica's pool."""
+    for u, toks in ok.items():
+        if toks != ref[u]:
+            raise SystemExit(f"PARITY BROKEN ({tag}, uid {u}): "
+                             f"{toks} != {ref[u]}")
+    rep = cluster.audit_report
+    if rep is None or not rep.ok:
+        raise SystemExit(f"FLEET AUDIT BROKEN ({tag}): "
+                         f"{rep.errors if rep else 'no report'}")
+    for wid, pool in cluster.last_pool_stats.items():
+        if not pool.audit_ok or pool.used_pages != pool.index_pages:
+            raise SystemExit(
+                f"ALLOCATOR LEAK ({tag}, worker {wid}): audit_ok="
+                f"{pool.audit_ok} used_pages={pool.used_pages} "
+                f"index_pages={pool.index_pages}")
+
+
+def _row(cluster, ok) -> Dict:
+    router = cluster.last_stats["router"]
+    sla = cluster.last_stats["sla"]
+    rounds = max(router["rounds"], 1)
+    return {
+        "rounds": router["rounds"],
+        "ok": len(ok),
+        "ok_tokens": sla["ok_tokens"],
+        "tokens_per_round": sla["ok_tokens"] / rounds,
+        "handoffs": router["handoffs"],
+        "reroutes": router["reroutes"],
+        "decisions": router["decisions"],
+        "affinity_hits": router["affinity_hits"],
+    }
+
+
+# ---------------------------------------------------------------- scaling
+def run_scaling(smoke: bool = False) -> List[Dict]:
+    cfg, model, params = _model()
+    n = 10 if smoke else 24
+    reqs = _reqs(cfg, n)
+    ref = _reference(model, params, reqs)
+    ladder = [(1, False), (2, False)] if smoke else \
+             [(1, False), (2, False), (4, False)]
+    ladder.append((2 if smoke else 3, True))    # prefill/decode split
+    rows: List[Dict] = []
+    for replicas, disagg in ladder:
+        c = make_cluster(model, params, replicas=replicas,
+                         router_policy="round-robin",
+                         disaggregate=disagg, **_EKW)
+        ok = c.serve(_fresh(reqs))
+        tag = f"scaling replicas={replicas} disagg={disagg}"
+        _gate(tag, c, ok, ref)
+        if len(ok) != n:
+            raise SystemExit(f"SCALING GATE BROKEN ({tag}): only "
+                             f"{len(ok)}/{n} requests finished ok")
+        if disagg and c.handoffs < n:
+            raise SystemExit(f"SCALING GATE BROKEN ({tag}): expected a "
+                             f"handoff per request, saw {c.handoffs}/{n}")
+        rows.append({"section": "cluster_scaling", "replicas": replicas,
+                     "disaggregate": disagg, "n": n, **_row(c, ok)})
+    return rows
+
+
+# ---------------------------------------------------------------- routing
+# long shared system prompts (6 pages) are the affinity signal.  The
+# prefill budget charges by un-cached suffix tokens, so a cold prefix
+# consumes a whole admission round while a warm one admits nearly free
+# — round-robin pays tenants x replicas cold rounds, cache-aware pays
+# tenants.  Slots are generous so decode capacity never binds, and the
+# flat-ish Zipf keeps the hot replica from queueing on raw volume: the
+# comparison isolates prefix locality, not load-imbalance noise.
+_ROUTING_EKW = {"prefix_sharing": True, "num_pages": 128, "max_seq": 96,
+                "prefill_budget": 16, "batch_slots": 6}
+
+
+def _tenant_workload(cfg, n, seed=29):
+    # high rate = one burst: every request is queued before round 1, so
+    # admit-to-first-token measures the admission schedule alone
+    return make_tenant_workload(
+        "poisson", n, vocab=cfg.vocab, n_tenants=8, zipf_s=0.5,
+        system_len=48, seed=seed, rate=50.0,
+        suffix_median=5.0, suffix_sigma=0.4, suffix_min=2, suffix_max=12,
+        out_median=4.0, out_sigma=0.4, out_min=2, out_max=8)
+
+
+def _ttft_rounds(cluster) -> float:
+    spans = [e["first_token_round"] - e["enqueued_round"]
+             for u, e in cluster.fleet.items()
+             if isinstance(u, int) and "first_token_round" in e]
+    return float(np.mean(spans)) if spans else float("inf")
+
+
+def run_routing(smoke: bool = False) -> List[Dict]:
+    cfg, model, params = _model()
+    n = 20 if smoke else 32
+    replicas = 3 if smoke else 4
+    timed, tenant_of = _tenant_workload(cfg, n)
+    ref = _reference(model, params, [t.request for t in timed],
+                     **_ROUTING_EKW)
+    rows: List[Dict] = []
+    by_policy: Dict[str, Dict] = {}
+    for policy in ("round-robin", "cache-aware"):
+        c = make_cluster(model, params, replicas=replicas,
+                         router_policy=policy,
+                         **{**_EKW, **_ROUTING_EKW})
+        wl = [dataclasses.replace(
+                  t, request=dataclasses.replace(t.request, generated=None))
+              for t in timed]
+        ok = c.run_workload(wl)
+        c.close()
+        _gate(f"routing policy={policy}", c, ok, ref)
+        allocs = sum(p.allocs for p in c.last_pool_stats.values())
+        row = {"section": "cluster_routing", "policy": policy,
+               "replicas": replicas, "n": n, "tenants": 8,
+               "pages_allocated": allocs,
+               "pages_per_request": allocs / n,
+               "ttft_rounds_mean": _ttft_rounds(c), **_row(c, ok)}
+        rows.append(row)
+        by_policy[policy] = row
+    rr, ca = by_policy["round-robin"], by_policy["cache-aware"]
+    if ca["pages_per_request"] > 0.8 * rr["pages_per_request"]:
+        raise SystemExit(
+            f"ROUTING GATE BROKEN: cache-aware allocated "
+            f"{ca['pages_per_request']:.2f} pages/request vs round-robin "
+            f"{rr['pages_per_request']:.2f} — affinity must cut page "
+            f"traffic to <= 0.8x (tenant prefixes re-prefilled fleet-wide)")
+    if ca["ttft_rounds_mean"] >= rr["ttft_rounds_mean"]:
+        raise SystemExit(
+            f"ROUTING GATE BROKEN: cache-aware admit-to-first-token "
+            f"{ca['ttft_rounds_mean']:.2f} rounds vs round-robin "
+            f"{rr['ttft_rounds_mean']:.2f} — cached prefixes must skip "
+            f"prefill rounds")
+    return rows
+
+
+# ------------------------------------------------------------------ chaos
+def run_chaos(smoke: bool = False) -> List[Dict]:
+    cfg, model, params = _model()
+    n = 10 if smoke else 20
+    replicas = 3
+    reqs = _reqs(cfg, n, seed=11)
+    ref = _reference(model, params, reqs)
+    cases = [("kill-replica", None), ("kill+worker-faults", 13)]
+    rows: List[Dict] = []
+    for tag, faults_seed in cases:
+        c = make_cluster(model, params, replicas=replicas,
+                         router_policy="round-robin",
+                         faults_seed=faults_seed, **_EKW)
+        for r in _fresh(reqs):
+            c.submit(r)
+        c.step()
+        c.step()
+        c.fail_worker(1)
+        c.drain()
+        ok = c.close()
+        _gate(f"chaos {tag}", c, ok, ref)
+        if not ok:
+            raise SystemExit(f"CHAOS GATE BROKEN ({tag}): no request "
+                             f"survived — the fleet gave up instead of "
+                             f"re-routing")
+        if c.reroutes < 1:
+            raise SystemExit(f"CHAOS GATE BROKEN ({tag}): the killed "
+                             f"replica lost nothing — the case is not "
+                             f"exercising the retry path")
+        statuses: Dict[str, int] = {}
+        for u, e in c.fleet.items():
+            if isinstance(u, int):
+                statuses[e["status"]] = statuses.get(e["status"], 0) + 1
+        rows.append({"section": "cluster_chaos", "case": tag,
+                     "replicas": replicas, "n": n,
+                     "statuses": statuses, **_row(c, ok)})
+    return rows
+
+
+# ------------------------------------------------------------------- main
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for CI (no perf claims)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the result rows as JSON")
+    ap.add_argument("--section", default="all",
+                    help="comma-separated subset of "
+                         f"{', '.join(_SECTIONS)} (default: all)")
+    args = ap.parse_args(argv)
+    sections = (set(_SECTIONS) if args.section == "all"
+                else set(args.section.split(",")))
+    unknown = sections - set(_SECTIONS)
+    if unknown:
+        ap.error(f"unknown section(s) {sorted(unknown)}; "
+                 f"pick from {_SECTIONS}")
+    rows: List[Dict] = []
+
+    if "scaling" in sections:
+        srows = run_scaling(smoke=args.smoke)
+        print("\n== Cluster scaling: replicas under round-robin "
+              "(parity/partition/leak gated at every size) ==")
+        print(f"{'replicas':>8s} {'disagg':>7s} {'ok':>4s} {'rounds':>7s} "
+              f"{'tok/round':>10s} {'handoffs':>9s}")
+        for r in srows:
+            print(f"{r['replicas']:8d} {str(r['disaggregate']):>7s} "
+                  f"{r['ok']:4d} {r['rounds']:7d} "
+                  f"{r['tokens_per_round']:10.2f} {r['handoffs']:9d}")
+        print("gate PASSED: bit-identical outputs at every fleet size")
+        rows += srows
+
+    if "routing" in sections:
+        rrows = run_routing(smoke=args.smoke)
+        print("\n== Cache-aware routing vs round-robin: multi-tenant "
+              "Zipf workload (page traffic + TTFT gated) ==")
+        print(f"{'policy':>12s} {'pages/req':>10s} {'ttft_rounds':>12s} "
+              f"{'affinity':>9s} {'decisions'}")
+        for r in rrows:
+            print(f"{r['policy']:>12s} {r['pages_per_request']:10.2f} "
+                  f"{r['ttft_rounds_mean']:12.2f} {r['affinity_hits']:9d} "
+                  f"{r['decisions']}")
+        print("gate PASSED: cache-aware <= 0.8x pages/request and lower "
+              "admit-to-first-token")
+        rows += rrows
+
+    if "chaos" in sections:
+        crows = run_chaos(smoke=args.smoke)
+        print("\n== Cluster chaos: replica killed mid-serve "
+              "(+ per-worker fault schedules; retry path gated) ==")
+        print(f"{'case':>20s} {'ok':>4s} {'reroutes':>9s} {'statuses'}")
+        for r in crows:
+            print(f"{r['case']:>20s} {r['ok']:4d} {r['reroutes']:9d} "
+                  f"{r['statuses']}")
+        print("gate PASSED: lost requests drained through retry, "
+              "bit-identical, fleet audit clean")
+        rows += crows
+
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"\nwrote {len(rows)} rows to {args.json}")
+
+
+if __name__ == "__main__":
+    main()

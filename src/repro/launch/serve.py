@@ -61,6 +61,22 @@ p50/p95/p99, goodput, and the terminal-status census.
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
       --cache-layout paged --workload poisson --arrival-rate 16 \
       --requests 12 --queue-watermark 4 --shed-priority 2
+
+Multi-replica serving: ``--replicas N`` runs the batch through N engine
+workers behind a router (``--router round-robin|least-loaded|
+cache-aware``; cache-aware scores content-addressed prompt-prefix
+overlap against load), and ``--disaggregate`` splits roles — the first
+replica only prefills, the rest only decode, joined by cross-replica KV
+handoff on swap handles.  Outputs are bit-identical to ``--replicas 1``
+for any topology; the run ends with the fleet SLA, per-replica census,
+and router decision counts.  With ``--inject-faults`` each worker runs
+its own deterministically derived fault schedule.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
+      --cache-layout paged --replicas 3 --router cache-aware \
+      --prefix-sharing --shared-prefix 32
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
+      --cache-layout paged --replicas 3 --disaggregate
 """
 
 from __future__ import annotations
@@ -76,10 +92,68 @@ import numpy as np
 from repro.configs.registry import reduced_config
 from repro.models.lm import Model
 from repro.serve.async_engine import serve_open_loop
+from repro.serve.cluster import ROUTER_POLICIES, make_cluster
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.faults import FaultSchedule
 from repro.serve.sla import format_summary
 from repro.serve.workload import WORKLOAD_KINDS, describe, make_workload
+
+
+def _serve_cluster(args, model, params, cfg, engine_kw, open_loop,
+                   timed, reqs):
+    """Fleet path: N engine workers behind the router; ends with the
+    fleet SLA, per-replica census, and router decision counts."""
+    if args.inject_faults is not None:
+        print(f"injecting: per-worker schedules derived from seed "
+              f"{args.inject_faults}")
+    roles = (f"1 prefill + {args.replicas - 1} decode"
+             if args.disaggregate else f"{args.replicas} mixed")
+    print(f"cluster: {roles}, router={args.router}")
+    cluster = make_cluster(model, params, replicas=args.replicas,
+                           router_policy=args.router,
+                           disaggregate=args.disaggregate,
+                           faults_seed=args.inject_faults, **engine_kw)
+    t0 = time.perf_counter()
+    if open_loop:
+        results = cluster.run_workload(timed)
+        cluster.close()
+    else:
+        results = cluster.serve(reqs)
+    dt = time.perf_counter() - t0
+    n_tok = sum(len(v) for v in results.values())
+    fleet = {u: e for u, e in cluster.fleet.items() if isinstance(u, int)}
+    print(f"{'req':>4s} {'status':>9s} {'tokens':>7s} {'replica':>8s} "
+          f"{'handoffs':>9s} {'reroutes':>9s} {'first_tok@':>11s}")
+    for uid in sorted(fleet):
+        e = fleet[uid]
+        first = (f"round {e['first_token_round']}"
+                 if "first_token_round" in e else "—")
+        print(f"{uid:4d} {e['status']:>9s} {e['tokens']:7d} "
+              f"{str(e['worker']):>8s} {e['handoffs']:9d} "
+              f"{e['reroutes']:9d} {first:>11s}")
+    router = cluster.last_stats["router"]
+    print(f"\n{n_tok} tokens in {dt:.2f}s = {n_tok / dt:.1f} tok/s "
+          f"({args.replicas} replicas x {args.slots} slots, "
+          f"{router['rounds']} fleet rounds, {cfg.name})")
+    print(f"router: decisions={router['decisions']} "
+          f"affinity_hits={router['affinity_hits']} "
+          f"handoffs={router['handoffs']} reroutes={router['reroutes']}")
+    sla = cluster.last_stats["sla"]
+    print("fleet SLA:")
+    print(format_summary(sla))
+    for wid, census in sorted(sla["replicas"].items()):
+        statuses = " ".join(f"{k}={v}" for k, v in
+                            sorted(census["statuses"].items()))
+        pool = cluster.last_pool_stats.get(int(wid))
+        pool_s = (f", pool peak {pool.peak_used_pages}/{pool.num_pages} "
+                  f"pages, {pool.allocs} allocs"
+                  if pool is not None else "")
+        print(f"  replica {wid}: {census['requests']} requests "
+              f"({statuses or 'idle'}){pool_s}")
+    rep = cluster.audit_report
+    print(f"fleet audit: {'clean' if rep.ok else rep.errors}")
+    for uid in sorted(results):
+        print(f"req {uid}: {results[uid]}")
 
 
 def main():
@@ -217,39 +291,63 @@ def main():
                     metavar="SEED",
                     help="run a seeded random fault schedule against the "
                          "batch (OOM, NaN, kernel failure, stragglers, "
-                         "spec collapse, cancels, page corruption)")
+                         "spec collapse, cancels, page corruption); with "
+                         "--replicas, each worker derives its own "
+                         "schedule from this seed")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine workers behind the router; outputs stay "
+                         "bit-identical to --replicas 1 (requires "
+                         "--cache-layout paged)")
+    ap.add_argument("--router", default="cache-aware",
+                    choices=list(ROUTER_POLICIES),
+                    help="replica placement policy: classic rotation, "
+                         "min queue+slots, or prefix-affinity scoring "
+                         "over content-addressed prompt hashes")
+    ap.add_argument("--disaggregate", action="store_true",
+                    help="split roles: replica 0 only prefills, the rest "
+                         "only decode, joined by cross-replica KV "
+                         "handoff (requires --replicas >= 2)")
     args = ap.parse_args()
+    cluster_mode = args.replicas > 1 or args.disaggregate
+    if cluster_mode and args.cache_layout != "paged":
+        ap.error("--replicas > 1 / --disaggregate move KV as pages; "
+                 "pass --cache-layout paged")
+    if args.disaggregate and args.replicas < 2:
+        ap.error("--disaggregate needs --replicas >= 2 (at least one "
+                 "prefill and one decode worker)")
 
     cfg = reduced_config(args.arch)
     model = Model(cfg, compute_dtype=jnp.float32,
                   attn_backend=None if args.attn_backend == "auto"
                   else args.attn_backend)
     params = model.init(jax.random.PRNGKey(args.seed))
-    engine = ServeEngine(model, params, max_seq=args.max_seq,
-                         batch_slots=args.slots,
-                         temperature=args.temperature, seed=args.seed,
-                         fused=not args.no_fused,
-                         attend_block=args.attend_block,
-                         prompt_block=args.prompt_block,
-                         cache_layout=args.cache_layout,
-                         page_size=args.page_size,
-                         num_pages=args.num_pages,
-                         kv_dtype=None if args.kv_dtype == "auto"
-                         else args.kv_dtype,
-                         preempt=args.preempt,
-                         prefix_sharing=args.prefix_sharing,
-                         evict_policy=args.evict_policy,
-                         min_cached_tokens=args.min_cached_tokens,
-                         spec_k=args.spec_k, draft=args.draft,
-                         verify_backend=None if args.verify_backend == "auto"
-                         else args.verify_backend,
-                         max_queue=args.max_queue,
-                         shed_policy=args.shed_policy,
-                         queue_watermark=args.queue_watermark,
-                         shed_priority=args.shed_priority,
-                         free_page_watermark=args.free_page_watermark,
-                         prefill_budget=args.prefill_budget,
-                         audit=args.audit)
+    engine_kw = dict(max_seq=args.max_seq,
+                     batch_slots=args.slots,
+                     temperature=args.temperature, seed=args.seed,
+                     fused=not args.no_fused,
+                     attend_block=args.attend_block,
+                     prompt_block=args.prompt_block,
+                     cache_layout=args.cache_layout,
+                     page_size=args.page_size,
+                     num_pages=args.num_pages,
+                     kv_dtype=None if args.kv_dtype == "auto"
+                     else args.kv_dtype,
+                     preempt=args.preempt,
+                     prefix_sharing=args.prefix_sharing,
+                     evict_policy=args.evict_policy,
+                     min_cached_tokens=args.min_cached_tokens,
+                     spec_k=args.spec_k, draft=args.draft,
+                     verify_backend=None if args.verify_backend == "auto"
+                     else args.verify_backend,
+                     max_queue=args.max_queue,
+                     shed_policy=args.shed_policy,
+                     queue_watermark=args.queue_watermark,
+                     shed_priority=args.shed_priority,
+                     free_page_watermark=args.free_page_watermark,
+                     prefill_budget=args.prefill_budget,
+                     audit=args.audit)
+    engine = (None if cluster_mode
+              else ServeEngine(model, params, **engine_kw))
 
     rng = np.random.default_rng(args.seed)
     open_loop = args.workload != "closed"
@@ -282,6 +380,10 @@ def main():
                         ttft_deadline_ms=args.ttft_deadline_ms,
                         max_retries=args.max_retries)
                 for i in range(args.requests)]
+    if cluster_mode:
+        _serve_cluster(args, model, params, cfg, engine_kw, open_loop,
+                       timed if open_loop else None, reqs)
+        return
     faults = None
     if args.inject_faults is not None:
         faults = FaultSchedule.random(

@@ -7,6 +7,7 @@ from repro.serve.audit import (  # noqa: F401
     AuditError,
     AuditReport,
     audit_allocator,
+    audit_fleet,
     audit_manager,
 )
 from repro.serve.engine import (  # noqa: F401
@@ -27,6 +28,7 @@ from repro.serve.faults import (  # noqa: F401
     FaultSchedule,
     InjectedFault,
     KernelBackendError,
+    fold_worker_seed,
 )
 from repro.serve.kv_cache import (  # noqa: F401
     CACHE_LAYOUTS,
@@ -35,9 +37,16 @@ from repro.serve.kv_cache import (  # noqa: F401
     PagedCacheManager,
     PagedStats,
 )
-from repro.serve.prefix_index import PrefixIndex  # noqa: F401
+from repro.serve.prefix_index import (  # noqa: F401
+    ROOT_PREFIX_KEY,
+    PrefixIndex,
+    chain_prefix_key,
+    page_prefix_keys,
+)
 from repro.serve.sla import (  # noqa: F401
+    fleet_summary,
     format_summary,
+    merge_ledgers,
     percentiles,
     summarize,
 )
@@ -52,6 +61,24 @@ from repro.serve.workload import (  # noqa: F401
     bursty_arrivals,
     describe,
     lognormal_lengths,
+    make_tenant_workload,
     make_workload,
     poisson_arrivals,
+    zipf_weights,
+)
+
+# cluster imports the layers above; keep it last so the package is fully
+# initialized when its modules do `from repro.serve import sla`
+from repro.serve.cluster import (  # noqa: E402,F401
+    ROLES,
+    ROUTER_POLICIES,
+    AsyncClusterFrontend,
+    ClusterController,
+    EngineWorker,
+    HandoffTicket,
+    Router,
+    WorkerDead,
+    WorkerStats,
+    make_cluster,
+    route_handoff,
 )

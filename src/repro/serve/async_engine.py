@@ -118,14 +118,22 @@ class AsyncServeEngine:
 
     def __init__(self, engine: ServeEngine, *, faults=None,
                  clock: str = "wall", round_time_s: float = 1.0,
-                 idle_poll_s: float = 0.002):
+                 idle_poll_s: float = 0.002,
+                 backpressure_watermark: Optional[int] = None):
         if clock not in ("wall", "round"):
             raise ValueError(f"clock must be 'wall' or 'round'; "
                              f"got {clock!r}")
+        if backpressure_watermark is not None and backpressure_watermark < 1:
+            raise ValueError("backpressure_watermark must be >= 1; "
+                             f"got {backpressure_watermark}")
         self.engine = engine
         self.clock = clock
         self.round_time_s = round_time_s
         self.idle_poll_s = idle_poll_s
+        # awaitable backpressure: submit() blocks while the waiting queue
+        # sits at/above this depth, instead of letting the engine shed
+        self.backpressure_watermark = backpressure_watermark
+        self._round_evt = asyncio.Event()
         self._faults = faults
         self._st = None
         self._task: Optional[asyncio.Task] = None
@@ -183,20 +191,46 @@ class AsyncServeEngine:
                      arrival_round: Optional[int] = None) -> TokenStream:
         """Enqueue a request; returns its token stream.  With the round
         clock, ``arrival_round`` (default: now) delays ingestion until
-        that scheduler round."""
+        that scheduler round.
+
+        With ``backpressure_watermark`` set, this call *awaits* while
+        the waiting queue (including not-yet-ingested submissions) is at
+        or above the watermark — the submitter slows down instead of the
+        engine shedding, which is the right trade whenever the caller
+        can hold the request more cheaply than the server can reject it
+        (the cluster front-end holds requests for an idle replica this
+        way).  Without the watermark, submit never yields — co-arriving
+        requests co-admit, which round-clock determinism depends on."""
         self._ensure_started()
+        self._check_live()
+        if self.backpressure_watermark is not None:
+            while self._depth() >= self.backpressure_watermark:
+                self._round_evt.clear()
+                self._wake.set()
+                await self._round_evt.wait()
+                self._check_live()
+        stream = TokenStream(request.uid)
+        self._pending.append((request, stream, arrival_round))
+        self._wake.set()
+        # deliberately no yield past this point: back-to-back submits
+        # land in the same ingestion sweep, so co-arriving requests are
+        # co-admitted (the round clock's determinism depends on it)
+        return stream
+
+    def _check_live(self):
         if self._error is not None:
             raise RuntimeError("serving session already failed") \
                 from self._error
         if self._closing:
             raise RuntimeError("serving session is closing")
-        stream = TokenStream(request.uid)
-        self._pending.append((request, stream, arrival_round))
-        self._wake.set()
-        # deliberately no yield: back-to-back submits land in the same
-        # ingestion sweep, so co-arriving requests are co-admitted (the
-        # round clock's determinism depends on it)
-        return stream
+
+    def _depth(self) -> int:
+        """Waiting-queue depth as backpressure sees it: the engine's
+        shed-eligible queue plus everything submitted but not yet
+        ingested (otherwise a burst of submits would all pass the
+        watermark before the loop ingests any of them)."""
+        return (self.engine._queue_depth(self._st)
+                + len(self._pending) + len(self._scheduled))
 
     def cancel(self, uid: int):
         """Cancel ``uid`` (queued, prefilling, or live) at the next
@@ -249,6 +283,7 @@ class AsyncServeEngine:
                 # scheduler round (admission + decode step)
                 eng._round(st)
                 self._publish(st)
+                self._round_evt.set()   # re-check blocked submitters
                 await asyncio.sleep(0)
             self._results = eng._finalize_session(st)
         except BaseException as exc:  # noqa: BLE001 — reported via close()
@@ -261,6 +296,10 @@ class AsyncServeEngine:
                     stream, _ = self._streams[uid]
                     stream._fail(exc)
                     self._open.discard(uid)
+        finally:
+            # blocked submitters must never outlive the loop: wake them
+            # so they observe _closing/_error and raise
+            self._round_evt.set()
 
     async def _idle_wait(self):
         self._wake.clear()

@@ -210,3 +210,27 @@ def audit_pool(mgr, pool, *, check_values: bool = False) -> AuditReport:
                         errors.append(f"{sname}: negative scale on a "
                                       f"mapped page")
     return AuditReport(ok=not errors, errors=errors)
+
+
+def audit_fleet(managers) -> AuditReport:
+    """One report over every replica of a cluster: each worker's manager
+    gets the full :func:`audit_manager` sweep, errors prefixed with its
+    worker id.  A fleet is audit-clean iff every replica is — cross-
+    replica handoff must leave *both* sides consistent (source released,
+    destination refcounted), and a one-sided leak shows up here tagged
+    with the replica that holds it.  ``managers`` maps worker id ->
+    :class:`~repro.serve.kv_cache.PagedCacheManager` (None entries —
+    dense workers or dead replicas with device state gone — are
+    skipped)."""
+    errors: List[str] = []
+    orphans = mismatches = 0
+    for wid in sorted(managers, key=str):
+        mgr = managers[wid]
+        if mgr is None:
+            continue
+        rep = audit_manager(mgr)
+        errors.extend(f"[worker {wid}] {e}" for e in rep.errors)
+        orphans += rep.orphan_pages
+        mismatches += rep.refcount_mismatches
+    return AuditReport(ok=not errors, errors=errors, orphan_pages=orphans,
+                       refcount_mismatches=mismatches)

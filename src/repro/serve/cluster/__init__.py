@@ -1,0 +1,31 @@
+"""Disaggregated multi-replica serving: workers, router, controller.
+
+One replica = one :class:`EngineWorker` (an engine session behind a
+narrow submit/step/stats/migrate API, with a ``prefill | decode |
+mixed`` role).  The :class:`Router` scores replicas by load and
+content-addressed prefix affinity; the :class:`ClusterController` owns
+placement, the fleet round clock, SwapHandle handoff between prefill
+and decode replicas, and the worker-death retry path.  Outputs are
+bit-identical to a single direct engine for any topology — see
+``controller.py`` for why.
+"""
+
+from repro.serve.cluster.controller import (AsyncClusterFrontend,
+                                            ClusterController, make_cluster)
+from repro.serve.cluster.router import ROUTER_POLICIES, Router, route_handoff
+from repro.serve.cluster.worker import (ROLES, EngineWorker, HandoffTicket,
+                                        WorkerDead, WorkerStats)
+
+__all__ = [
+    "AsyncClusterFrontend",
+    "ClusterController",
+    "EngineWorker",
+    "HandoffTicket",
+    "ROLES",
+    "ROUTER_POLICIES",
+    "Router",
+    "WorkerDead",
+    "WorkerStats",
+    "make_cluster",
+    "route_handoff",
+]

@@ -1,0 +1,165 @@
+"""Replica routing: load scoring plus content-addressed prefix affinity.
+
+The router owns one decision — *which replica gets this request* — and
+makes it from two signals:
+
+  load      queue depth + busy slots (normalized by free pages): the
+            classic least-loaded balancer.
+  affinity  how much of the prompt's page-granular prefix is already
+            resident on a replica, measured without shipping tokens or
+            KV: prompts hash into a chain of content-addressed keys
+            (:func:`~repro.serve.prefix_index.page_prefix_keys`), each
+            replica advertises the key set of its radix index, and the
+            fleet catalog counts the longest leading overlap.  "This
+            tenant's system prompt is hot on replica 2" is one set
+            lookup per page.
+
+Policies:
+
+  round-robin   cycle replicas in id order; ignores both signals.  The
+                baseline every routing benchmark compares against.
+  least-loaded  min (queue + live + prefilling, -free pages).
+  cache-aware   affinity bonus minus load penalty: cached prefix pages
+                count like free capacity (their prefill is skipped and
+                their pages are shared instead of re-allocated), so a
+                warm replica wins until its queue is genuinely longer.
+
+The catalog is fed two ways: *optimistically* at each routing decision
+(the chosen replica will index this prompt's full pages after prefill)
+and *authoritatively* from each worker's advertised ``prefix_keys()``
+snapshot at refresh.  Optimistic entries can go stale under eviction —
+that costs a mis-routed request some prefill, never correctness: routing
+affects which pages are allocated where, and nothing else, because
+outputs are ``(uid, position)``-keyed in the engine.
+
+Deterministic by construction: scores are integers, ties break by
+replica id, and no wall clock is consulted — the cluster parity gates
+replay byte-identically.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterable, List, Optional, Sequence
+
+from repro.serve.engine import Request
+from repro.serve.prefix_index import page_prefix_keys
+
+from repro.serve.cluster.worker import WorkerStats
+
+ROUTER_POLICIES = ("round-robin", "least-loaded", "cache-aware")
+
+
+class Router:
+    """Placement policy over a fixed set of replica ids."""
+
+    def __init__(self, worker_ids: Sequence[Any], *,
+                 policy: str = "cache-aware", page_size: int = 16,
+                 affinity_weight: int = 4, load_weight: int = 1):
+        if policy not in ROUTER_POLICIES:
+            raise ValueError(f"policy must be one of {ROUTER_POLICIES}; "
+                             f"got {policy!r}")
+        if not worker_ids:
+            raise ValueError("router needs at least one worker id")
+        self.policy = policy
+        self.page_size = page_size
+        # affinity_weight: score points per cached prefix *page* vs
+        # load_weight points per queued/busy request.  The default says
+        # "one resident page outweighs up to four queued requests" —
+        # affinity should dominate until the warm replica is genuinely
+        # backed up.
+        self.affinity_weight = affinity_weight
+        self.load_weight = load_weight
+        self.worker_ids = list(worker_ids)
+        self._rr = 0
+        self._catalog: Dict[Any, set] = {w: set() for w in self.worker_ids}
+        self.decisions: Dict[Any, int] = {w: 0 for w in self.worker_ids}
+        self.affinity_hits = 0     # decisions where overlap broke the tie
+
+    # -------------------------------------------------------------- catalog
+    def advertise(self, worker_id, keys: set):
+        """Authoritative refresh: replace a replica's catalog entry with
+        its radix index's actual advertised key set."""
+        self._catalog[worker_id] = set(keys)
+
+    def _note_routed(self, worker_id, keys: List[bytes]):
+        """Optimistic update: the chosen replica will publish this
+        prompt's full-page prefix after prefill."""
+        self._catalog[worker_id].update(keys)
+
+    def overlap(self, worker_id, keys: Sequence[bytes]) -> int:
+        """Leading pages of ``keys`` resident on ``worker_id`` — the
+        radix longest-prefix walk, computed on hashes."""
+        cat = self._catalog[worker_id]
+        n = 0
+        for k in keys:
+            if k not in cat:
+                break
+            n += 1
+        return n
+
+    # ------------------------------------------------------------- routing
+    def route(self, req: Request, stats: Dict[Any, WorkerStats],
+              eligible: Optional[Iterable[Any]] = None) -> Any:
+        """Pick a replica for ``req`` among ``eligible`` (default: every
+        replica with stats).  Pure placement: the caller delivers the
+        request; the router only records the decision."""
+        cands = [w for w in (eligible if eligible is not None else stats)
+                 if w in stats and stats[w].alive]
+        if not cands:
+            raise RuntimeError("no eligible replica is alive")
+        cands.sort(key=self.worker_ids.index)
+        keys = page_prefix_keys(req.prompt, self.page_size)
+        if self.policy == "round-robin":
+            pick = self._round_robin(cands)
+        elif self.policy == "least-loaded":
+            pick = min(cands, key=lambda w: self._load_key(stats[w]))
+        else:
+            pick = self._cache_aware(cands, stats, keys)
+        self.decisions[pick] += 1
+        self._note_routed(pick, keys)
+        return pick
+
+    def _round_robin(self, cands: List[Any]) -> Any:
+        # cycle the full id space so a fixed fleet gets the classic
+        # rotation even when some replicas are briefly ineligible
+        for _ in range(len(self.worker_ids)):
+            pick = self.worker_ids[self._rr % len(self.worker_ids)]
+            self._rr += 1
+            if pick in cands:
+                return pick
+        return cands[0]
+
+    def _load_key(self, s: WorkerStats):
+        return (s.queue_depth + s.live_slots + s.prefilling,
+                -s.free_pages, self.worker_ids.index(s.worker_id))
+
+    def _cache_aware(self, cands: List[Any], stats: Dict[Any, WorkerStats],
+                     keys: List[bytes]) -> Any:
+        def score(w):
+            s = stats[w]
+            ov = self.overlap(w, keys)
+            return (self.affinity_weight * ov
+                    - self.load_weight * (s.queue_depth + s.live_slots
+                                          + s.prefilling))
+
+        best = max(cands, key=lambda w: (score(w), stats[w].free_pages,
+                                         -self.worker_ids.index(w)))
+        if self.overlap(best, keys):
+            self.affinity_hits += 1
+        return best
+
+
+def route_handoff(worker_ids: Sequence[Any],
+                  stats: Dict[Any, WorkerStats]) -> Any:
+    """Placement for a handoff ticket: least-loaded among decode-capable
+    replicas.  Affinity is irrelevant here — the KV travels *with* the
+    ticket — so the only signals are room to admit and queue depth."""
+    cands = [w for w in worker_ids
+             if w in stats and stats[w].alive
+             and stats[w].role in ("decode", "mixed")]
+    if not cands:
+        raise RuntimeError("no decode-capable replica is alive")
+    ids = list(worker_ids)
+    return min(cands, key=lambda w: (
+        stats[w].queue_depth + stats[w].live_slots + stats[w].prefilling,
+        -stats[w].free_pages, ids.index(w)))

@@ -716,6 +716,72 @@ class ServeEngine:
                 return
         st.queue.append(req)
 
+    # ------------------------------------------------- cross-replica handoff
+    # The cluster layer (repro.serve.cluster) moves a mid-flight request
+    # between two sessions — usually on two different engines — with
+    # these two primitives.  Bit-parity with an uninterrupted run falls
+    # out of the same invariants preemption relies on: sampling keys are
+    # (uid, position), a folded prompt re-creates the exact cache, and a
+    # SwapHandle restores page contents placement-free.
+    def _migrate_out(self, st: "_SchedState", uid: int):
+        """Detach a live request from this session for handoff: swap its
+        pages out to a placement-free host handle, release the slot, and
+        remove it from this session's ledger (the destination session
+        re-registers it — a migrated request must not trip this
+        session's terminal-status partition check).
+
+        Returns ``(resume_request, handle, carry)``: the folded resume
+        copy (sharing the accumulating ``generated`` list), the
+        :class:`~repro.serve.kv_cache.SwapHandle`, and the ledger entry
+        whose counters the destination should inherit."""
+        slot = next(s for s, r in st.live.items() if r.uid == uid)
+        req = st.live.pop(slot)
+        handle = st.mgr.swap_out(slot, st.pool, st.slot_pos[slot])
+        resume = dataclasses.replace(
+            req, prompt=list(req.prompt) + req.generated[req.folded:],
+            folded=len(req.generated))
+        carry = st.stats.pop(req.uid)
+        st.arrival.pop(req.uid, None)
+        st.last_emit.pop(req.uid, None)
+        st.spec_hist.pop(req.uid, None)
+        return resume, handle, carry
+
+    def _submit_resume(self, st: "_SchedState", req: Request, *,
+                       handle=None, carry=None, now: float = 0.0):
+        """Accept a mid-flight request handed off from another session:
+        register it (inheriting ``carry``'s lifecycle counters), mark it
+        resumed so admission keeps its ``generated`` prefix, and either
+        stage its :class:`SwapHandle` for a page restore (no prefill) or
+        let the folded prompt re-prefill from scratch (the worker-death
+        retry path, where the pages died with the replica)."""
+        self._register(st, req, now=now)
+        s = st.stats[req.uid]
+        if carry is not None:
+            for k in ("preemptions", "retries", "swap_outs", "swap_ins",
+                      "handoffs", "cached_prefix_tokens"):
+                if k in carry:
+                    s[k] = carry[k]
+        s["handoffs"] = s.get("handoffs", 0) + 1
+        if st.mgr is not None:
+            # _check_fits would double-charge a folded resume (the folded
+            # generated tokens sit in both the prompt and max_new_tokens);
+            # gate on the true remaining footprint instead so a resume
+            # that fit its source replica is not falsely rejected here
+            longest = min(len(req.prompt)
+                          + max(req.max_new_tokens - req.folded, 1)
+                          + self.spec_k - 2, self.max_seq)
+            if blocks_for(longest, self.page_size) > st.mgr.allocator.usable:
+                self._terminal(
+                    st, req, STATUS_FAILED,
+                    reason=f"never-fits: resume needs "
+                           f"{blocks_for(longest, self.page_size)} pages, "
+                           f"pool has {st.mgr.allocator.usable}")
+                return
+        st.resumed.add(id(req))
+        if handle is not None:
+            st.swaps[req.uid] = handle
+        st.queue.append(req)
+
     def _round(self, st: "_SchedState"):
         """One scheduler round: fault clock, lifecycle sweeps, admission
         control, admission, growth, one decode step.  Safe to call with
@@ -731,7 +797,11 @@ class ServeEngine:
                     self._admit_shared(st)
                 else:
                     self._admit(st)
-                if st.live:
+                # a prefill-role cluster worker stops at admission: its
+                # live slots (prompt prefilled, first token sampled) are
+                # migrated out by the worker right after the round, so
+                # growth and decode would be wasted work
+                if st.live and not st.prefill_only:
                     if st.mgr is not None:
                         self._grow_or_preempt(st)
                     if st.live:
@@ -1485,10 +1555,22 @@ class ServeEngine:
         share pages with each other, not just with earlier traffic.  The
         gate charges only the plan's private pages (the shared prefix is
         already resident), which admits strictly more requests from the
-        same pool."""
+        same pool.
+
+        A ``prefill_budget`` charges by *un-cached suffix* tokens — the
+        tokens this admission actually prefills.  A warm prefix admits
+        nearly free while a cold prompt spends the round's budget, so
+        under load, prefix locality shows up directly in admit-to-first-
+        token latency (the signal a cache-aware router banks on).  Swap
+        resumes charge nothing: they restore pages, not prefill them."""
+        used = 0
+        budget = self.prefill_budget
         for slot in range(self.slots):
             if slot in st.live or not st.queue:
                 continue
+            if budget is not None and used >= budget and (
+                    st.live or used):
+                break  # budget spent; progress guaranteed when idle
             req = self._next_candidate(st)
             if req.uid in st.swaps:
                 # swap resumes bypass the prefix planner: their pages are
@@ -1518,6 +1600,7 @@ class ServeEngine:
                 break
             st.gate_block = None
             st.queue.remove(req)
+            used += len(req.prompt) - plan.cached_tokens
             self._bookkeep_admit(st, slot, req,
                                  time.perf_counter() - st.t0)
             # first-admission figure (a preemption resume re-matches its
@@ -1843,6 +1926,7 @@ class _SchedState:
     spec_mask: Any = None      # speculative decoding: per-slot spec flag
     # ---- lifecycle / fault tolerance
     faults: Any = None         # FaultSchedule for this call (or None)
+    prefill_only: bool = False  # cluster prefill role: admit, never decode
     rnd: int = -1              # scheduler round (fault-injection clock)
     step_no: int = 0           # decode steps actually dispatched
     recoveries: int = 0        # step restarts this serve()

@@ -48,6 +48,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import hashlib
 from typing import Iterable, List, Optional, Sequence
 
 import jax
@@ -56,6 +57,19 @@ import numpy as np
 
 FAULT_KINDS = ("oom", "nan", "straggler", "spec_collapse",
                "page_corruption", "kernel", "cancel", "deadline")
+
+
+def fold_worker_seed(seed: int, worker_id) -> int:
+    """Fold a worker id into a fault seed, deterministically and
+    platform-stably (no ``hash()`` — string hashing is randomized per
+    process, and two replicas of a cluster must derive the *same*
+    schedule for the same worker across runs).
+
+    Without this, every replica of a fleet built from one ``--fault-seed``
+    would replay the *same* schedule — synchronized corruption on every
+    replica at the same round, which is chaos aliasing, not chaos."""
+    h = hashlib.blake2b(f"{int(seed)}|{worker_id}".encode(), digest_size=8)
+    return int.from_bytes(h.digest(), "little") % (2 ** 31)
 
 
 class InjectedFault(RuntimeError):
@@ -188,6 +202,31 @@ class FaultSchedule:
             return None
         rng = np.random.default_rng((self.seed, rnd))
         return int(sorted(mapped_pages)[rng.integers(len(mapped_pages))])
+
+    # ------------------------------------------------------ worker scoping
+    def scoped(self, worker_id) -> "FaultSchedule":
+        """The same fault list, re-seeded for one cluster worker: seeded
+        choices (the page-corruption target) stop aliasing across
+        replicas while the hand-written rounds/kinds stay put.  Use
+        :meth:`random_for_worker` when each replica should draw an
+        independent schedule."""
+        return FaultSchedule(self.faults,
+                             seed=fold_worker_seed(self.seed, worker_id))
+
+    @classmethod
+    def random_for_worker(cls, seed: int, worker_id, *,
+                          n_faults: int = 4, max_step: int = 24,
+                          uids: Sequence[int] = (),
+                          kinds: Sequence[str] = FAULT_KINDS,
+                          ) -> "FaultSchedule":
+        """A seeded random schedule independent per worker: one fleet
+        ``seed`` fans out to per-replica schedules via
+        :func:`fold_worker_seed`, so replica 0's OOM burst does not
+        replay simultaneously on every replica — while each worker's own
+        schedule stays exactly reproducible from ``(seed, worker_id)``."""
+        return cls.random(fold_worker_seed(seed, worker_id),
+                          n_faults=n_faults, max_step=max_step,
+                          uids=uids, kinds=kinds)
 
     # ---------------------------------------------------------- generation
     @classmethod

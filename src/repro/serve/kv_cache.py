@@ -656,7 +656,8 @@ class PagedCacheManager:
         blocks = [int(p) for p in self.tables[slot] if p != TRASH_PAGE]
         data = swap_out_pages(pool, np.asarray(blocks, np.int32))
         handle = SwapHandle(n_blocks=len(blocks), n_tokens=n_tokens,
-                            data=data)
+                            data=data, page_size=self.page_size,
+                            kv_dtype=self.kv_dtype)
         self.swap_outs += 1
         self.swapped_out_bytes += handle.nbytes
         self.release(slot)
@@ -666,7 +667,23 @@ class PagedCacheManager:
                       handle: "SwapHandle") -> Optional[List[int]]:
         """Map fresh private pages for a swapped-out slot (the engine then
         scatters ``handle.data`` into them via :func:`swap_in_pages`).
-        All-or-nothing like :meth:`admit`: None when pages lack."""
+        All-or-nothing like :meth:`admit`: None when pages lack.
+
+        The handle may come from a *different* manager (cross-replica KV
+        handoff): the restore is placement-free, so pool size and page
+        numbering are irrelevant, but the page format must match — a
+        stamped handle with a different ``page_size`` or ``kv_dtype``
+        raises instead of scattering incompatible bytes."""
+        if handle.page_size is not None and handle.page_size != self.page_size:
+            raise ValueError(
+                f"swap handle page_size={handle.page_size} cannot restore "
+                f"into a page_size={self.page_size} pool")
+        if ((handle.kv_dtype is not None and handle.kv_dtype != self.kv_dtype)
+                or ("k_scales" in handle.data) != (self.kv_dtype == "int8")):
+            raise ValueError(
+                f"swap handle kv_dtype={handle.kv_dtype!r} cannot restore "
+                f"into a kv_dtype={self.kv_dtype!r} pool (quantized bytes "
+                "do not cast)")
         pages = self._alloc(handle.n_blocks)
         if pages is None:
             return None
@@ -896,10 +913,19 @@ class SwapHandle:
     exactly (values and scale metadata together), which is what makes a
     swap-resume bit-identical to an uninterrupted run.  ``n_tokens`` is
     the valid prefix length at swap time — the requeue-vs-swap cost
-    estimate reads it, the restore does not need it."""
+    estimate reads it, the restore does not need it.
+
+    ``page_size`` / ``kv_dtype`` stamp the producing pool's page format.
+    Placement-freedom makes a handle restorable into a *different*
+    manager (a cross-replica migration is exactly that), but only into a
+    compatible pool: :meth:`PagedCacheManager.admit_swapped` rejects a
+    format mismatch instead of letting ``swap_in_pages`` silently cast
+    quantized bytes into a float pool (or vice versa)."""
     n_blocks: int
     n_tokens: int
     data: Dict[str, np.ndarray]
+    page_size: Optional[int] = None
+    kv_dtype: Optional[str] = None
 
     @property
     def nbytes(self) -> int:

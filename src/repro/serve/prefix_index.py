@@ -50,9 +50,40 @@ repay the pages they pin.
 
 from __future__ import annotations
 
+import hashlib
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 EVICT_POLICIES = ("lru", "lfu", "deepest")
+
+# chain root for content-addressed prefix keys (see page_prefix_keys)
+ROOT_PREFIX_KEY = b""
+
+
+def chain_prefix_key(parent: bytes, page_tokens: Sequence[int]) -> bytes:
+    """Content-addressed key of one page-granular prefix node: a hash
+    chained over (parent key, this page's token ids).  Two prompts share
+    a key exactly when they share that full-page prefix — byte-for-byte,
+    with no dependence on which process, replica, or pool computed it.
+    That is what lets a fleet-wide catalog say "this prefix is resident
+    on replica 2" without shipping tokens or KV."""
+    h = hashlib.blake2b(parent, digest_size=16)
+    h.update(b"|".join(str(int(t)).encode() for t in page_tokens))
+    return h.digest()
+
+
+def page_prefix_keys(tokens: Sequence[int], page_size: int) -> List[bytes]:
+    """The chain of content-addressed keys covering ``tokens``'s full
+    pages, shallowest first: ``keys[j]`` identifies the prefix
+    ``tokens[:(j+1)*page_size]``.  A router scores replica affinity by
+    how many *leading* keys a replica's advertised set contains — the
+    longest-indexed-prefix walk of :meth:`PrefixIndex.match`, computed
+    from hashes alone."""
+    keys, parent = [], ROOT_PREFIX_KEY
+    for j in range(len(tokens) // page_size):
+        parent = chain_prefix_key(
+            parent, tokens[j * page_size:(j + 1) * page_size])
+        keys.append(parent)
+    return keys
 
 
 class _Node:
@@ -113,6 +144,21 @@ class PrefixIndex:
         ps = self.page_size
         for j in range(len(tokens) // ps):
             yield tuple(tokens[j * ps:(j + 1) * ps])
+
+    def prefix_keys(self) -> set:
+        """Content-addressed keys of every indexed node (see
+        :func:`page_prefix_keys`) — what a replica advertises to the
+        fleet catalog.  Hashes only: no token ids and no KV leave the
+        replica."""
+        out = set()
+        stack = [(self._root, ROOT_PREFIX_KEY)]
+        while stack:
+            node, parent = stack.pop()
+            for tok_key, child in node.children.items():
+                ck = chain_prefix_key(parent, tok_key)
+                out.add(ck)
+                stack.append((child, ck))
+        return out
 
     # -------------------------------------------------------------- lookup
     def match(self, tokens: Sequence[int]) -> List[int]:

@@ -77,6 +77,43 @@ def summarize(stats: Dict[Any, Any], *, tbt_s: List[float],
     }
 
 
+def merge_ledgers(ledgers: List[Dict[Any, Any]]) -> Dict[Any, Any]:
+    """Merge per-worker status ledgers into one fleet ledger (int keys
+    only — per-worker string keys like stragglers/timeseries do not
+    aggregate meaningfully).  Uids are fleet-unique; when one appears in
+    several ledgers (a request that failed with its replica and was
+    re-served elsewhere) the *later* ledger wins, so pass ledgers in
+    worker-sweep order with re-routes after their dead source."""
+    merged: Dict[Any, Any] = {}
+    for ledger in ledgers:
+        for uid, entry in ledger.items():
+            if isinstance(uid, int):
+                merged[uid] = entry
+    return merged
+
+
+def fleet_summary(per_worker: Dict[Any, Dict[Any, Any]], *,
+                  tbt_s: List[float], wall_s: float) -> Dict[str, Any]:
+    """Fleet-level SLA: one :func:`summarize` over the merged ledgers of
+    every worker, plus the per-replica census a capacity planner needs
+    (requests and terminal statuses per worker).  ``per_worker`` maps
+    worker id -> that worker's session ledger."""
+    order = sorted(per_worker, key=str)
+    fleet = summarize(merge_ledgers([per_worker[w] for w in order]),
+                      tbt_s=tbt_s, wall_s=wall_s)
+    replicas = {}
+    for wid in order:
+        per = {u: s for u, s in per_worker[wid].items()
+               if isinstance(u, int)}
+        statuses: Dict[str, int] = {}
+        for s in per.values():
+            key = s.get("status") or "in-flight"
+            statuses[key] = statuses.get(key, 0) + 1
+        replicas[str(wid)] = {"requests": len(per), "statuses": statuses}
+    fleet["replicas"] = replicas
+    return fleet
+
+
 def format_summary(sla: Dict[str, Any]) -> str:
     """Human-readable SLA block (launch CLI + benchmark stdout)."""
     def row(name, pct):

@@ -150,6 +150,82 @@ def make_workload(kind: str, n: int, *, vocab: int, seed: int = 0,
     return out
 
 
+def zipf_weights(n: int, s: float) -> np.ndarray:
+    """Normalized Zipf popularity over ``n`` ranks: weight of rank r is
+    1 / (r+1)^s.  s=0 is uniform; s around 1 is the classic web-traffic
+    skew where a couple of tenants dominate."""
+    if n < 1:
+        raise ValueError(f"need n >= 1 ranks; got {n}")
+    w = 1.0 / np.power(np.arange(1, n + 1, dtype=np.float64), max(s, 0.0))
+    return w / w.sum()
+
+
+def make_tenant_workload(kind: str, n: int, *, vocab: int,
+                         n_tenants: int = 4, zipf_s: float = 1.1,
+                         system_len: int = 16, seed: int = 0,
+                         rate: float = 8.0, burst_factor: float = 4.0,
+                         mean_dwell: float = 8.0,
+                         suffix_median: float = 6.0,
+                         suffix_sigma: float = 0.5,
+                         suffix_min: int = 1, suffix_max: int = 24,
+                         out_median: float = 8.0, out_sigma: float = 0.5,
+                         out_min: int = 2, out_max: int = 32,
+                         priority_mix: Optional[Sequence[
+                             Tuple[int, float]]] = None,
+                         uid_base: int = 0,
+                         ) -> Tuple[List[TimedRequest], Dict[int, int]]:
+    """Multi-tenant traffic mixture: every request belongs to a tenant
+    drawn from a seeded Zipf popularity over ``n_tenants``, and opens
+    with that tenant's fixed ``system_len``-token system prompt followed
+    by a private heavy-tailed suffix.
+
+    This is the workload shape a cache-aware router exists for: tenant
+    popularity is skewed (a few system prompts are hot), the shared part
+    of each prompt is page-aligned-ish and long relative to the suffix,
+    and *which replica* a request lands on decides whether its system
+    prompt prefills from the radix cache or from scratch.  Returns
+    ``(timed_requests, tenant_of_uid)`` so benchmarks can slice results
+    per tenant."""
+    if kind not in WORKLOAD_KINDS:
+        raise ValueError(f"kind must be one of {WORKLOAD_KINDS}; "
+                         f"got {kind!r}")
+    if system_len < 1:
+        raise ValueError(f"system_len must be >= 1; got {system_len}")
+    rng = np.random.default_rng(seed)
+    if kind == "closed":
+        arrivals = np.zeros(n)
+    elif kind == "poisson":
+        arrivals = poisson_arrivals(n, rate, rng)
+    else:
+        arrivals = bursty_arrivals(n, rate, rng,
+                                   burst_factor=burst_factor,
+                                   mean_dwell=mean_dwell)
+    system_prompts = [rng.integers(0, vocab, size=system_len).tolist()
+                     for _ in range(n_tenants)]
+    tenants = rng.choice(n_tenants, size=n,
+                         p=zipf_weights(n_tenants, zipf_s))
+    slens = lognormal_lengths(n, rng, median=suffix_median,
+                              sigma=suffix_sigma, lo=suffix_min,
+                              hi=suffix_max)
+    olens = lognormal_lengths(n, rng, median=out_median, sigma=out_sigma,
+                              lo=out_min, hi=out_max)
+    priorities = _pick_priorities(n, rng, priority_mix)
+    out: List[TimedRequest] = []
+    tenant_of: Dict[int, int] = {}
+    for i in range(n):
+        tenant = int(tenants[i])
+        uid = uid_base + i
+        tenant_of[uid] = tenant
+        prompt = (system_prompts[tenant]
+                  + rng.integers(0, vocab, size=int(slens[i])).tolist())
+        out.append(TimedRequest(
+            arrival_s=float(arrivals[i]),
+            request=Request(uid=uid, prompt=prompt,
+                            max_new_tokens=int(olens[i]),
+                            priority=priorities[i])))
+    return out, tenant_of
+
+
 def describe(timed: List[TimedRequest]) -> Dict[str, float]:
     """Quick census of a workload (benchmark JSON / CLI banner)."""
     if not timed:

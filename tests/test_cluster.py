@@ -1,0 +1,483 @@
+"""Disaggregated multi-replica serving: cluster parity, handoff,
+worker-death retry, routing, and the cross-manager SwapHandle contract.
+
+The load-bearing property one layer up from the engine's: per-request
+outputs are bit-identical to a single direct engine regardless of
+replica count, router policy, prefill/decode disaggregation, or a
+replica dying mid-serve.  Placement moves *where* work runs; the
+engine's ``(uid, position)``-keyed sampling guarantees outputs do not
+depend on that, and these tests hold the cluster layer to it.
+
+No pytest-asyncio in the container: async tests drive their coroutine
+with ``asyncio.run`` directly.
+"""
+
+import asyncio
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import reduced_config
+from repro.models.lm import Model
+from repro.serve import (
+    STATUS_FAILED,
+    STATUS_OK,
+    AsyncClusterFrontend,
+    AsyncServeEngine,
+    FaultSchedule,
+    PagedCacheManager,
+    Request,
+    Router,
+    ServeEngine,
+    WorkerDead,
+    audit_fleet,
+    fleet_summary,
+    fold_worker_seed,
+    make_cluster,
+    make_tenant_workload,
+    merge_ledgers,
+    page_prefix_keys,
+    route_handoff,
+    zipf_weights,
+)
+from repro.serve.cluster.worker import WorkerStats
+
+_CACHE = {}
+
+
+def _model(arch="qwen2-1.5b"):
+    if arch not in _CACHE:
+        cfg = reduced_config(arch)
+        model = Model(cfg, compute_dtype=jnp.float32)
+        params = model.init(jax.random.PRNGKey(1))
+        _CACHE[arch] = (cfg, model, params)
+    return _CACHE[arch]
+
+
+_EKW = {"max_seq": 48, "batch_slots": 2, "temperature": 0.0, "seed": 0,
+        "cache_layout": "paged", "page_size": 8}
+
+
+def _engine(**kw):
+    cfg, model, params = _model()
+    return ServeEngine(model, params, **{**_EKW, **kw})
+
+
+def _cluster(**kw):
+    cfg, model, params = _model()
+    return make_cluster(model, params, **{**_EKW, **kw})
+
+
+def _reqs(n, seed=3, plo=3, phi=12, mlo=2, mhi=7, **fields):
+    cfg, _, _ = _model()
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    prompt=rng.integers(
+                        0, cfg.vocab,
+                        size=int(rng.integers(plo, phi))).tolist(),
+                    max_new_tokens=int(rng.integers(mlo, mhi)), **fields)
+            for i in range(n)]
+
+
+def _fresh(reqs):
+    return [dataclasses.replace(r, generated=None) for r in reqs]
+
+
+def _reference(reqs, **kw):
+    return _engine(**kw).serve(_fresh(reqs))
+
+
+# --------------------------------------------------------- cluster parity
+@pytest.mark.parametrize("replicas,policy", [
+    (1, "round-robin"), (2, "cache-aware"), (4, "least-loaded")])
+def test_cluster_parity_with_direct_engine(replicas, policy):
+    """Tentpole gate: {uid: tokens} from a fleet == a single direct
+    engine, for several replica counts and every router policy."""
+    reqs = _reqs(8)
+    ref = _reference(reqs)
+    c = _cluster(replicas=replicas, router_policy=policy)
+    out = c.serve(_fresh(reqs))
+    assert out == ref
+    assert c.audit_report.ok
+    # every request got exactly one terminal status at the fleet level
+    assert {e["status"] for u, e in c.fleet.items()} == {STATUS_OK}
+
+
+def test_disaggregated_handoff_parity():
+    """Prefill replica samples the first token, pages leave as a
+    SwapHandle, a decode replica restores them — outputs unchanged, and
+    every request crossed exactly one handoff."""
+    reqs = _reqs(6)
+    ref = _reference(reqs)
+    c = _cluster(replicas=3, disaggregate=True, router_policy="least-loaded")
+    out = c.serve(_fresh(reqs))
+    assert out == ref
+    assert c.audit_report.ok
+    assert all(e["handoffs"] == 1 for u, e in c.fleet.items()
+               if isinstance(u, int))
+    assert c.last_stats["router"]["handoffs"] == len(reqs)
+    # the handoff actually moved KV (restore path), not a re-prefill
+    ledgers = merge_ledgers([dict(w.ledger) for w in c.workers.values()])
+    assert all(s.get("swap_ins", 0) >= 1 for s in ledgers.values())
+
+
+def test_disaggregated_parity_with_temperature():
+    """Sampling stays (uid, position)-keyed across the handoff: T>0
+    outputs match the direct engine bit-for-bit."""
+    reqs = _reqs(5, seed=11)
+    ref = _reference(reqs, temperature=0.8)
+    c = _cluster(replicas=2, disaggregate=True, temperature=0.8)
+    assert c.serve(_fresh(reqs)) == ref
+
+
+def test_worker_death_drains_through_retry():
+    """Chaos gate: a replica killed mid-serve loses its in-flight
+    requests to the retry path; survivors re-serve them bit-identically
+    and the whole fleet audits clean."""
+    reqs = _reqs(8)
+    ref = _reference(reqs)
+    c = _cluster(replicas=3, router_policy="round-robin")
+    for r in _fresh(reqs):
+        c.submit(r)
+    c.step()
+    c.step()
+    c.fail_worker(1)
+    assert not c.workers[1].alive
+    c.drain()
+    out = c.close()
+    assert out == ref
+    assert c.audit_report.ok            # dead replica's pool included
+    assert c.last_stats["router"]["reroutes"] >= 1
+    rerouted = [u for u, e in c.fleet.items()
+                if isinstance(u, int) and e["reroutes"]]
+    assert rerouted and all(c.fleet[u]["worker"] != 1 for u in rerouted)
+    # the dead replica's own ledger shows the aborted requests FAILED;
+    # the fleet ledger shows them OK via the re-route
+    dead = {u: s["status"] for u, s in c.workers[1].ledger.items()
+            if isinstance(u, int)}
+    assert STATUS_FAILED in dead.values()
+
+
+def test_dead_worker_rejects_messages():
+    c = _cluster(replicas=2)
+    c.workers[0].fail()
+    with pytest.raises(WorkerDead):
+        c.workers[0].submit(_reqs(1)[0])
+    with pytest.raises(WorkerDead):
+        c.workers[0].step()
+
+
+def test_decode_role_rejects_raw_prompts():
+    c = _cluster(replicas=2, disaggregate=True)
+    with pytest.raises(ValueError, match="decode-role"):
+        c.workers[1].submit(_reqs(1)[0])
+
+
+def test_mismatched_replicas_rejected():
+    """A fleet whose replicas would sample differently is a parity bug
+    waiting to happen — caught at construction."""
+    from repro.serve.cluster import ClusterController, EngineWorker
+    cfg, model, params = _model()
+    w0 = EngineWorker(0, _engine())
+    w1 = EngineWorker(1, _engine(temperature=0.5))
+    with pytest.raises(ValueError, match="replicas disagree"):
+        ClusterController([w0, w1], Router([0, 1]))
+
+
+def test_duplicate_uid_rejected():
+    c = _cluster(replicas=2)
+    r = _reqs(1)[0]
+    c.submit(r)
+    with pytest.raises(ValueError, match="duplicate"):
+        c.submit(dataclasses.replace(r, generated=None))
+
+
+# ------------------------------------------- satellite: cross-manager swap
+def _drive_to_live(eng, st, uid):
+    for _ in range(50):
+        eng._round(st)
+        if any(r.uid == uid for r in st.live.values()):
+            return
+    raise AssertionError("request never became live")
+
+
+def test_swap_handle_restores_across_managers():
+    """Satellite: a SwapHandle swapped out of one engine session
+    restores bit-identically into a *different* session whose pool has
+    a different size and whose allocator is in a different state (page
+    ids come out in a different order) — the handle is placement-free."""
+    reqs = _reqs(4, seed=7, plo=10, phi=14, mlo=4, mhi=6)
+    ref = _reference(reqs)
+    src = _engine(num_pages=32)
+    st_a = src._open_session([], None)
+    for r in _fresh(reqs):
+        src._submit_open(st_a, r)
+    _drive_to_live(src, st_a, reqs[0].uid)
+    resume, handle, carry = src._migrate_out(st_a, reqs[0].uid)
+    assert handle.page_size == src.page_size
+    # destination: different pool size, allocator churned so the free
+    # list hands out different page ids than the source used
+    dst = _engine(num_pages=20)
+    st_b = dst._open_session([], None)
+    burn = dst._submit_open  # churn via a short-lived request
+    burn(st_b, Request(uid=900, prompt=list(range(17)), max_new_tokens=2))
+    dst._submit_resume(st_b, resume, handle=handle, carry=carry)
+    while st_b.queue or st_b.live or st_b.prefilling:
+        dst._round(st_b)
+    out = dst._finalize_session(st_b)
+    assert out[reqs[0].uid] == ref[reqs[0].uid]
+    # drain the source side too so both sessions audit clean
+    src._abort(st_a, RuntimeError("test teardown"))
+    assert audit_fleet({"a": st_a.mgr, "b": st_b.mgr}).ok
+
+
+def test_swap_handle_page_size_mismatch_rejected():
+    mgr = PagedCacheManager(num_pages=8, page_size=8, slots=2, max_seq=48)
+    h = dataclasses.replace(
+        _handle_stub(), page_size=16, kv_dtype=None)
+    with pytest.raises(ValueError, match="page_size"):
+        mgr.admit_swapped(0, h)
+
+
+def test_swap_handle_kv_dtype_mismatch_rejected():
+    mgr = PagedCacheManager(num_pages=8, page_size=8, slots=2, max_seq=48,
+                            kv_dtype="int8")
+    h = dataclasses.replace(_handle_stub(), page_size=8, kv_dtype=None)
+    with pytest.raises(ValueError, match="kv_dtype"):
+        mgr.admit_swapped(0, h)
+
+
+def _handle_stub():
+    from repro.serve.kv_cache import SwapHandle
+    return SwapHandle(n_blocks=1, n_tokens=8,
+                      data={"k": np.zeros(1), "v": np.zeros(1)})
+
+
+# ---------------------------------------------------------------- routing
+def _stats(wid, *, q=0, live=0, pf=0, free=16, role="mixed", alive=True):
+    return WorkerStats(worker_id=wid, role=role, alive=alive,
+                       queue_depth=q, live_slots=live, prefilling=pf,
+                       free_pages=free, total_pages=16, rounds=0)
+
+
+def test_round_robin_cycles_and_skips_ineligible():
+    r = Router([0, 1, 2], policy="round-robin")
+    s = {w: _stats(w) for w in (0, 1, 2)}
+    req = _reqs(1)[0]
+    picks = [r.route(req, s) for _ in range(6)]
+    assert picks == [0, 1, 2, 0, 1, 2]
+    picks = [r.route(req, s, eligible=[0, 2]) for _ in range(4)]
+    assert picks == [0, 2, 0, 2]
+
+
+def test_least_loaded_prefers_idle_then_free_pages():
+    r = Router([0, 1, 2], policy="least-loaded")
+    req = _reqs(1)[0]
+    s = {0: _stats(0, q=2), 1: _stats(1, q=0, free=4),
+         2: _stats(2, q=0, free=12)}
+    assert r.route(req, s) == 2
+
+
+def test_cache_aware_affinity_beats_moderate_load():
+    """A replica holding the prompt's prefix wins routing even with a
+    deeper queue — until the load gap exceeds the affinity bonus."""
+    r = Router([0, 1], policy="cache-aware", page_size=8,
+               affinity_weight=4, load_weight=1)
+    req = Request(uid=5, prompt=list(range(16)), max_new_tokens=4)
+    keys = page_prefix_keys(req.prompt, 8)
+    r.advertise(0, set(keys))        # replica 0 has both pages resident
+    s = {0: _stats(0, q=3), 1: _stats(1, q=0)}
+    assert r.route(req, s) == 0      # 4*2 - 3 = 5 > 0
+    assert r.affinity_hits == 1
+    s = {0: _stats(0, q=9), 1: _stats(1, q=0)}
+    assert r.route(req, s) == 1      # 8 - 9 = -1 < 0: load finally wins
+
+
+def test_cache_aware_optimistic_catalog():
+    """The decision itself warms the catalog: a second request with the
+    same prefix follows the first before any advertisement."""
+    r = Router([0, 1], policy="cache-aware", page_size=8)
+    s = {0: _stats(0), 1: _stats(1)}
+    first = Request(uid=1, prompt=list(range(16)), max_new_tokens=4)
+    second = Request(uid=2, prompt=list(range(16)) + [7, 8],
+                     max_new_tokens=4)
+    w = r.route(first, s)
+    assert r.route(second, s) == w
+
+
+def test_route_handoff_excludes_prefill_role():
+    s = {0: _stats(0, role="prefill"), 1: _stats(1, role="decode", q=3),
+         2: _stats(2, role="decode", q=1)}
+    assert route_handoff([0, 1, 2], s) == 2
+    with pytest.raises(RuntimeError, match="decode-capable"):
+        route_handoff([0], {0: _stats(0, role="prefill")})
+
+
+def test_prefix_keys_content_addressed():
+    """Keys are a pure function of token content at page granularity:
+    equal prefixes collide (that is the point), any token change or a
+    page-size change separates them, and only full pages key."""
+    a = page_prefix_keys(list(range(24)), 8)
+    b = page_prefix_keys(list(range(24)) + [99], 8)   # partial page
+    assert len(a) == 3 and a == b[:3] and len(b) == 3
+    c = page_prefix_keys([1] + list(range(1, 24)), 8)
+    assert c[0] != a[0] and c[1] != a[1]              # chain diverges
+    assert page_prefix_keys(list(range(24)), 12) != a[:2]
+    assert page_prefix_keys(list(range(7)), 8) == []
+
+
+# ---------------------------------------------- satellite: fault scoping
+def test_fold_worker_seed_deterministic_and_distinct():
+    assert fold_worker_seed(7, "w0") == fold_worker_seed(7, "w0")
+    seeds = {fold_worker_seed(7, w) for w in range(8)}
+    assert len(seeds) == 8
+    assert fold_worker_seed(8, 0) != fold_worker_seed(7, 0)
+
+
+def test_fault_schedule_worker_scoping():
+    base = FaultSchedule.random(5, n_faults=4, uids=(1, 2, 3))
+    s0 = base.scoped(0)
+    s1 = base.scoped(1)
+    # same fault plan (kinds/steps), independent corruption seeds
+    assert [(f.kind, f.step) for f in s0.faults] == \
+           [(f.kind, f.step) for f in base.faults]
+    assert s0.seed != s1.seed
+    r0 = FaultSchedule.random_for_worker(5, 0, uids=(1, 2))
+    r1 = FaultSchedule.random_for_worker(5, 1, uids=(1, 2))
+    assert [(f.kind, f.step) for f in r0.faults] != \
+           [(f.kind, f.step) for f in r1.faults] or r0.seed != r1.seed
+
+
+def test_cluster_parity_under_per_worker_faults():
+    """Each replica runs its own scoped chaos schedule; outputs still
+    match the fault-free direct engine."""
+    reqs = _reqs(6)
+    ref = _reference(reqs)
+    c = _cluster(replicas=2, faults_seed=13)
+    out = c.serve(_fresh(reqs))
+    ok = {u for u, e in c.fleet.items()
+          if isinstance(u, int) and e["status"] == STATUS_OK}
+    assert ok, "chaos schedule killed every request"
+    assert all(out[u] == ref[u] for u in ok)
+    assert c.audit_report.ok
+
+
+# --------------------------------------------- satellite: tenant workload
+def test_tenant_workload_shares_system_prompts():
+    cfg, _, _ = _model()
+    timed, tenant_of = make_tenant_workload(
+        "poisson", 40, vocab=cfg.vocab, n_tenants=4, system_len=16,
+        seed=5)
+    assert len(timed) == 40 and set(tenant_of) == {t.request.uid
+                                                   for t in timed}
+    by_tenant = {}
+    for t in timed:
+        ten = tenant_of[t.request.uid]
+        head = tuple(t.request.prompt[:16])
+        by_tenant.setdefault(ten, set()).add(head)
+    # one shared 16-token system prefix per tenant, distinct across them
+    assert all(len(heads) == 1 for heads in by_tenant.values())
+    assert len({h.pop() for h in by_tenant.values()}) == len(by_tenant)
+    # deterministic
+    again, _ = make_tenant_workload("poisson", 40, vocab=cfg.vocab,
+                                    n_tenants=4, system_len=16, seed=5)
+    assert [t.request.prompt for t in again] == \
+           [t.request.prompt for t in timed]
+
+
+def test_tenant_workload_zipf_skew():
+    w = zipf_weights(4, 1.1)
+    assert np.isclose(w.sum(), 1.0) and all(w[i] > w[i + 1]
+                                            for i in range(3))
+    cfg, _, _ = _model()
+    _, tenant_of = make_tenant_workload("poisson", 200, vocab=cfg.vocab,
+                                        n_tenants=4, zipf_s=1.1, seed=2)
+    counts = np.bincount(list(tenant_of.values()), minlength=4)
+    assert counts[0] == max(counts)
+
+
+# ----------------------------------------- fleet SLA + audit aggregation
+def test_merge_ledgers_later_wins():
+    a = {1: {"status": "failed"}, 2: {"status": "ok"}, "timeseries": []}
+    b = {1: {"status": "ok"}}
+    merged = merge_ledgers([a, b])
+    assert merged[1]["status"] == "ok" and merged[2]["status"] == "ok"
+    assert "timeseries" not in merged
+
+
+def test_fleet_summary_per_replica_census():
+    a = {1: {"status": "ok", "tokens": 3, "enqueued_s": 0.0,
+             "first_token_s": 0.5}}
+    b = {2: {"status": "shed", "tokens": 0, "enqueued_s": 0.0}}
+    s = fleet_summary({"w0": a, "w1": b}, tbt_s=[0.1], wall_s=2.0)
+    assert s["requests"] == 2 and s["statuses"] == {"ok": 1, "shed": 1}
+    assert s["replicas"]["w0"]["statuses"] == {"ok": 1}
+    assert s["replicas"]["w1"]["statuses"] == {"shed": 1}
+
+
+def test_audit_fleet_prefixes_worker_ids():
+    good = PagedCacheManager(num_pages=8, page_size=8, slots=2, max_seq=48)
+    bad = PagedCacheManager(num_pages=8, page_size=8, slots=2, max_seq=48)
+    assert bad.admit(0, 8) is not None
+    bad.owned[0].clear()             # corrupt: table maps unowned pages
+    rep = audit_fleet({"w3": bad, "w4": good, "w5": None})
+    assert not rep.ok and rep.errors
+    assert all("[worker w3]" in e for e in rep.errors)
+    assert audit_fleet({"w4": good, "w5": None}).ok
+
+
+# -------------------------------------------- satellite: async backpressure
+def test_async_engine_backpressure_bounds_depth():
+    """Satellite: with a watermark, submit() awaits instead of letting
+    the engine shed — every request completes OK and the waiting queue
+    never exceeds the watermark."""
+    reqs = _reqs(10, mlo=2, mhi=4)
+    ref = _reference(reqs)
+
+    async def run(watermark):
+        eng = _engine(max_queue=3, shed_policy="reject-newest")
+        peak = 0
+        async with AsyncServeEngine(
+                eng, backpressure_watermark=watermark) as srv:
+            streams = []
+            for r in _fresh(reqs):
+                streams.append(await srv.submit(r))
+                peak = max(peak, srv._depth())
+            for s in streams:
+                async for _ in s:
+                    pass
+            await srv.close()
+        return ({s.uid: s.tokens for s in streams if s.status == STATUS_OK},
+                {s.uid: s.status for s in streams}, peak)
+
+    out, statuses, peak = asyncio.run(run(2))
+    assert peak <= 2
+    assert set(statuses.values()) == {STATUS_OK}
+    assert out == ref
+    # without backpressure the same burst overruns the shed watermark
+    _, statuses, _ = asyncio.run(run(None))
+    assert "shed" in statuses.values()
+
+
+def test_async_cluster_frontend_streams_match_batch():
+    reqs = _reqs(7)
+    ref = _reference(reqs)
+
+    async def run():
+        c = _cluster(replicas=2, router_policy="cache-aware")
+        async with AsyncClusterFrontend(c, backpressure_watermark=4) as fe:
+            streams = [await fe.submit(r) for r in _fresh(reqs)]
+            outs = {}
+            for s in streams:
+                toks = [t async for t in s]
+                if s.status == STATUS_OK:
+                    outs[s.uid] = toks
+            res = await fe.close()
+        return outs, res, c
+
+    outs, res, c = asyncio.run(run())
+    assert outs == ref and res == ref
+    assert c.audit_report.ok
