@@ -287,6 +287,17 @@ def main():
     ap.add_argument("--audit", action="store_true",
                     help="sweep allocator/index invariants every "
                          "scheduler round (always swept once at the end)")
+    ap.add_argument("--pipeline", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="overlap host scheduling with the in-flight "
+                         "decode step (dispatch/commit round pipeline); "
+                         "--no-pipeline keeps the serial round — outputs "
+                         "are bit-identical either way")
+    ap.add_argument("--preempt-calibrate", action="store_true",
+                    help="microbenchmark the D2H/H2D page-copy bandwidth "
+                         "and decode throughput at engine construction "
+                         "and drive preempt=auto from the measured "
+                         "figures instead of the fixed defaults")
     ap.add_argument("--inject-faults", type=int, default=None,
                     metavar="SEED",
                     help="run a seeded random fault schedule against the "
@@ -345,9 +356,16 @@ def main():
                      shed_priority=args.shed_priority,
                      free_page_watermark=args.free_page_watermark,
                      prefill_budget=args.prefill_budget,
-                     audit=args.audit)
+                     audit=args.audit,
+                     pipeline=args.pipeline,
+                     preempt_calibrate=args.preempt_calibrate)
     engine = (None if cluster_mode
               else ServeEngine(model, params, **engine_kw))
+    if args.preempt_calibrate and engine is not None:
+        cm = engine.cost_model
+        print(f"calibrated cost model: swap {cm.swap_gbps / 1e9:.2f} GB/s, "
+              f"decode {cm.decode_flops_s / 1e9:.1f} GFLOP/s "
+              f"({cm.source})")
 
     rng = np.random.default_rng(args.seed)
     open_loop = args.workload != "closed"

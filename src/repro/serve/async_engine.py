@@ -267,7 +267,8 @@ class AsyncServeEngine:
         try:
             while True:
                 self._ingest(st)
-                work = bool(st.queue or st.live or st.prefilling)
+                work = bool(st.queue or st.live or st.prefilling
+                            or st.pending is not None)
                 arrivals = bool(self._scheduled or self._pending)
                 if not work and not arrivals:
                     if self._closing:
@@ -280,8 +281,16 @@ class AsyncServeEngine:
                     continue
                 # round clock ticks through idle rounds to reach the
                 # next scheduled arrival; otherwise this is one real
-                # scheduler round (admission + decode step)
-                eng._round(st)
+                # scheduler round (admission + decode step).  Pipelined,
+                # the round commits the *previous* step and leaves this
+                # round's dispatch in flight — arrival ingestion and
+                # stream publishing below are exactly the host work the
+                # overlap hides (streams lag one round; content is
+                # bit-identical)
+                if eng.pipeline:
+                    eng.dispatch_round(st)
+                else:
+                    eng._round(st)
                 self._publish(st)
                 self._round_evt.set()   # re-check blocked submitters
                 await asyncio.sleep(0)

@@ -155,15 +155,19 @@ class ClusterController:
                 continue
             for ticket in tickets:
                 self._deliver_handoff(ticket)
-        for wid in self.order:
-            if self.workers[wid].alive:
-                self._collect(wid)
-        self._watch_first_tokens()
+        # catalog refresh sits in the overlap gap: with pipelined
+        # workers every replica's decode step is still in flight here,
+        # so walking the prefix indexes (host-side radix state the
+        # in-flight step never edits) rides under the device work
         if self.catalog_refresh and self.rnd % self.catalog_refresh == 0:
             for wid in self.order:
                 w = self.workers[wid]
                 if w.alive:
                     self.router.advertise(wid, w.prefix_keys())
+        for wid in self.order:
+            if self.workers[wid].alive:
+                self._collect(wid)
+        self._watch_first_tokens()
 
     def _deliver_handoff(self, ticket: HandoffTicket):
         wid = route_handoff(self.order, self._stats())

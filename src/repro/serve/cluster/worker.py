@@ -134,7 +134,15 @@ class EngineWorker:
         self._st.prefill_only = self.role == "prefill"
         self.rounds += 1
         try:
-            self.engine._round(self._st)
+            # pipelined: this round's decode step stays in flight while
+            # the controller sweeps the other replicas and refreshes the
+            # router catalog; it commits at the top of our next step.
+            # (_migrate_out commits first, so prefill handoffs — and any
+            # rebalancing detach — always snapshot settled pages.)
+            if self.engine.pipeline:
+                self.engine.dispatch_round(self._st)
+            else:
+                self.engine._round(self._st)
         except BaseException as exc:
             self.fail(exc)
             raise
@@ -249,7 +257,8 @@ class EngineWorker:
     @property
     def has_work(self) -> bool:
         st = self._st
-        return bool(st.queue or st.live or st.prefilling)
+        return bool(st.queue or st.live or st.prefilling
+                    or st.pending is not None)
 
     def _require_alive(self):
         if not self.alive:

@@ -120,7 +120,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.serve import sla, spec_decode
+from repro.serve import calibrate, sla, spec_decode
 from repro.serve.audit import AuditError, audit_pool
 from repro.serve.faults import InjectedFault, KernelBackendError, poison_pages
 from repro.serve.kv_cache import (
@@ -159,12 +159,11 @@ SHED_POLICIES = ("reject-newest", "reject-largest")
 # comparing the two per-token costs (both linear in resident tokens)
 PREEMPT_POLICIES = ("requeue", "swap", "auto")
 
-# auto-preempt cost model: assumed host-link bandwidth for the swap tier
-# and assumed decode throughput for recompute.  Coarse on purpose — the
-# two costs differ by orders of magnitude for most (model, pool) pairs,
-# so the decision is robust to both constants.
-_SWAP_GBPS = 8e9
-_RECOMPUTE_FLOPS_S = 5e10
+# auto-preempt cost model defaults live in repro.serve.calibrate; these
+# aliases keep the old import path working.  ``preempt_calibrate=True``
+# (or an explicit ``cost_model=``) replaces them with measured figures.
+_SWAP_GBPS = calibrate.DEFAULT_SWAP_GBPS
+_RECOMPUTE_FLOPS_S = calibrate.DEFAULT_DECODE_FLOPS_S
 
 
 def _round_up(x: int, block: int) -> int:
@@ -209,6 +208,27 @@ class Request:
     folded: int = 0
 
 
+@dataclasses.dataclass
+class PendingRound:
+    """A decode step in flight: the jitted dispatch has been issued and
+    its results — device arrays — have not been fetched yet.
+
+    ``arrays`` holds the step's host-relevant outputs ((tok, done, bad),
+    plus the candidate window and commit counts for a speculative step);
+    :meth:`ServeEngine.commit_round` performs the single blocking
+    ``jax.device_get`` on them.  ``live`` snapshots the dispatch-time
+    slot -> request map, so the commit accounts tokens to exactly the
+    requests the step computed them for, even though queue-side
+    scheduling for the next round may run before the commit.  Everything
+    else is watchdog bookkeeping."""
+    arrays: tuple
+    live: Dict[int, Request]
+    spec: bool = False
+    t_start: float = 0.0        # watchdog clock start (at dispatch)
+    dispatch_s: float = 0.0     # host time spent issuing the dispatch
+    live_before: int = 0
+
+
 # families for which right-padded prefill is exact: cache purely positional
 # (mask-protected) AND no cross-token compute beyond causal attention.
 # Recurrent state (ssm/hybrid) advances through padding; MoE expert
@@ -242,7 +262,10 @@ class ServeEngine:
                  straggler_factor: float = 3.0,
                  straggler_window: int = 20,
                  spec_disable_window: int = 8,
-                 spec_cooldown: int = 16):
+                 spec_cooldown: int = 16,
+                 pipeline: bool = True,
+                 cost_model: Optional[calibrate.CostModel] = None,
+                 preempt_calibrate: bool = False):
         if cache_layout not in CACHE_LAYOUTS:
             raise ValueError(f"cache_layout must be one of {CACHE_LAYOUTS}; "
                              f"got {cache_layout!r}")
@@ -304,6 +327,22 @@ class ServeEngine:
         # auto-preempt cost model input: recompute cost per token is
         # ~2 * params FLOPs (one forward pass)
         self._n_params = sum(int(x.size) for x in jax.tree.leaves(params))
+        # overlapped round pipeline: dispatch round N+1's host scheduling
+        # while round N's device step is in flight.  pipeline=False keeps
+        # the serial path (one blocking fetch inside every round) —
+        # outputs are bit-identical either way.
+        self.pipeline = pipeline
+        # preempt='auto' cost model: fixed defaults, or a one-shot
+        # microbenchmark of this process's actual D2H bandwidth and
+        # decode throughput (preempt_calibrate=True); an explicit
+        # cost_model always wins (sweeps inject their own figures)
+        if cost_model is not None:
+            self.cost_model = cost_model
+        elif preempt_calibrate:
+            self.cost_model = calibrate.calibrate(model, params,
+                                                  max_seq=max_seq)
+        else:
+            self.cost_model = calibrate.DEFAULT_COST_MODEL
         self.spec_k = spec_k
         self.verify_backend = verify_backend
         # ---- lifecycle / fault-tolerance policy
@@ -623,8 +662,18 @@ class ServeEngine:
         """
         st = self._open_session(requests, faults)
         try:
-            while st.queue or st.live or st.prefilling:
-                self._round(st)
+            if self.pipeline:
+                # overlapped rounds: each iteration commits the previous
+                # round's in-flight step after the queue-side sweeps, so
+                # host scheduling runs while the device computes.  A live
+                # slot pins the loop until its step commits, so the loop
+                # always exits with nothing pending.
+                while st.queue or st.live or st.prefilling \
+                        or st.pending is not None:
+                    self.dispatch_round(st)
+            else:
+                while st.queue or st.live or st.prefilling:
+                    self._round(st)
         except BaseException as exc:
             # exception safety: whatever escapes, no slot or page stays
             # held and every in-flight request gets a terminal status —
@@ -734,6 +783,9 @@ class ServeEngine:
         copy (sharing the accumulating ``generated`` list), the
         :class:`~repro.serve.kv_cache.SwapHandle`, and the ledger entry
         whose counters the destination should inherit."""
+        # a step in flight may still commit tokens (or free) this slot —
+        # drain it before detaching so the handle snapshots final state
+        self.commit_round(st)
         slot = next(s for s, r in st.live.items() if r.uid == uid)
         req = st.live.pop(slot)
         handle = st.mgr.swap_out(slot, st.pool, st.slot_pos[slot])
@@ -788,6 +840,7 @@ class ServeEngine:
         nothing to do (the round/fault clock still ticks — the async
         driver relies on that to reach scheduled arrivals)."""
         st.rnd += 1
+        st.last_dispatch_s = st.last_commit_s = st.last_overlap_s = 0.0
         self._apply_round_faults(st)
         self._expire_and_cancel(st)
         self._admission_control(st)
@@ -807,11 +860,7 @@ class ServeEngine:
                     if st.live:
                         self._timed_step(st)
             except Exception as exc:
-                if (isinstance(exc, AuditError)
-                        or (isinstance(exc, InjectedFault) and exc.fatal)
-                        or st.recoveries >= self.max_recoveries):
-                    raise
-                self._recover(st, exc)
+                self._recover_or_raise(st, exc)
             if self.audit and st.mgr is not None:
                 st.mgr.audit().raise_if_failed()
                 if st.pool is not None:
@@ -820,7 +869,112 @@ class ServeEngine:
                     audit_pool(st.mgr, st.pool).raise_if_failed()
         self._sample_timeseries(st)
 
+    def dispatch_round(self, st: "_SchedState"):
+        """Overlapped twin of :meth:`_round`: one scheduler round whose
+        decode step is *dispatched* but not committed — the fetch happens
+        at the top of the *next* round, after the host work that cannot
+        depend on it.
+
+        The ordering is chosen so every scheduling decision lands on
+        exactly the inputs the serial round would have given it:
+
+        1. round/fault clock tick;
+        2. the **overlap gap** — host work that commit(N-1) provably
+           cannot influence runs while the device computes: queue-side
+           fault sweeps (cancel/expiry set building), queued-request
+           expire/cancel, and admission control (shed/watermark), none
+           of which read live-slot flags or allocator state that only
+           the commit can change;
+        3. ``commit_round`` — the one blocking fetch, token/terminal
+           accounting, deferred swap-out materialization;
+        4. post-commit host work that *does* read commit products:
+           page-corruption injection (targets the post-release owned
+           set), live/prefilling expire sweeps, admission (needs the
+           freed slots), growth/preemption (needs advanced slot_pos and
+           spec retraction) — then the next dispatch.
+
+        Outputs are bit-identical to the serial path; the only visible
+        difference is that a session runs one extra (otherwise empty)
+        trailing round to commit the last step."""
+        st.rnd += 1
+        st.last_dispatch_s = st.last_commit_s = st.last_overlap_s = 0.0
+        t_gap = time.perf_counter()
+        self._apply_round_faults(st, poison=False)
+        self._expire_and_cancel(st, scope="queued")
+        self._admission_control(st)
+        if st.pending is not None:
+            st.last_overlap_s = time.perf_counter() - t_gap
+        try:
+            self.commit_round(st)
+        except Exception as exc:
+            self._recover_or_raise(st, exc)
+        self._apply_poison_faults(st)
+        self._expire_and_cancel(st, scope="held")
+        if st.queue or st.live or st.prefilling:
+            try:
+                if self.prefix_sharing:
+                    self._admit_shared(st)
+                else:
+                    self._admit(st)
+                if st.live and not st.prefill_only:
+                    if st.mgr is not None:
+                        self._grow_or_preempt(st)
+                    if st.live:
+                        st.pending = self._timed_dispatch(st)
+            except Exception as exc:
+                self._recover_or_raise(st, exc)
+            if self.audit and st.mgr is not None:
+                # audit is a debug mode: force the in-flight step to
+                # commit so the auditor sees a quiescent pool (spec
+                # retraction applied, donated buffers settled) — costs
+                # this round's overlap, keeps per-round coverage
+                try:
+                    self.commit_round(st)
+                except Exception as exc:
+                    self._recover_or_raise(st, exc)
+                st.mgr.audit().raise_if_failed()
+                if st.pool is not None:
+                    audit_pool(st.mgr, st.pool).raise_if_failed()
+        self._sample_timeseries(st)
+
+    def commit_round(self, st: "_SchedState"):
+        """Commit the in-flight step, if any.  The pending round is
+        popped *before* the blocking fetch so an exception discards it
+        atomically — recovery rebuilds the pool from scratch, and a
+        stale pending round must never commit into the rebuilt state.
+        Also materializes any swap-out copies issued since the last
+        commit boundary (their device slices are only now guaranteed
+        cheap to read)."""
+        pending, st.pending = st.pending, None
+        if pending is not None:
+            self._timed_commit(st, pending)
+        self._drain_swaps(st)
+
+    def _drain_swaps(self, st: "_SchedState"):
+        """Materialize asynchronously-issued swap-out snapshots (device
+        slices -> host arrays).  Idempotent; runs at every commit
+        boundary and before anything that hands a handle across
+        sessions."""
+        if st.pending_swaps:
+            for handle in st.pending_swaps:
+                handle.materialize()
+            st.pending_swaps.clear()
+
+    def _recover_or_raise(self, st: "_SchedState", exc: Exception):
+        """Shared recovery gate for both round drivers: audit failures,
+        fatal injected faults, and exhausted recovery budgets escape;
+        everything else takes step-restart recovery."""
+        if (isinstance(exc, AuditError)
+                or (isinstance(exc, InjectedFault) and exc.fatal)
+                or st.recoveries >= self.max_recoveries):
+            raise exc
+        self._recover(st, exc)
+
     def _finalize_session(self, st: "_SchedState") -> Dict[int, List[int]]:
+        # safety barrier: the pipelined drivers exit with nothing pending,
+        # but a direct caller may not — never finalize over an in-flight
+        # step or unmaterialized swap snapshots
+        self.commit_round(st)
         missing = [uid for uid, s in st.stats.items()
                    if s.get("status") not in TERMINAL_STATUSES]
         if missing:  # the statuses partition the request set, always
@@ -839,7 +993,8 @@ class ServeEngine:
         int uid)."""
         st.stats["sla"] = sla.summarize(
             st.stats, tbt_s=st.tbt,
-            wall_s=time.perf_counter() - st.t0)
+            wall_s=time.perf_counter() - st.t0,
+            timeseries=st.timeseries)
         st.stats["timeseries"] = st.timeseries
 
     def _sample_timeseries(self, st: "_SchedState"):
@@ -850,6 +1005,9 @@ class ServeEngine:
         busy = len(st.live) + len(st.prefilling)
         ts["live_slots"].append(busy)
         ts["utilization"].append(busy / max(1, self.slots))
+        ts["dispatch_s"].append(st.last_dispatch_s)
+        ts["commit_s"].append(st.last_commit_s)
+        ts["overlap_s"].append(st.last_overlap_s)
         if st.mgr is not None:
             ts["free_pages"].append(st.mgr.allocator.free)
 
@@ -891,19 +1049,22 @@ class ServeEngine:
         mid-session — in the closed-loop serve() it already ran at
         enqueue and is a no-op), then the soft ``queue_watermark``: depth
         above it sheds only best-effort classes (priority >=
-        ``shed_priority``), newest first, so latency-sensitive traffic
-        keeps its queue position while bulk traffic absorbs the
-        overload."""
+        ``shed_priority``), most-slack then newest first, so
+        latency-sensitive traffic keeps its queue position while bulk
+        traffic absorbs the overload (deadline-less requests — +inf
+        slack — shed before any request racing a deadline)."""
         self._shed_overflow(st)
         if self.queue_watermark is None:
             return
+        now_ms = (time.perf_counter() - st.t0) * 1e3
         while self._queue_depth(st) > self.queue_watermark:
             cands = [r for r in st.queue if id(r) not in st.resumed
                      and r.priority >= self.shed_priority]
             if not cands:
                 break
-            victim = max(cands, key=lambda r: (r.priority,
-                                               st.arrival[r.uid]))
+            victim = max(cands,
+                         key=lambda r: (self._slack_ms(st, r, now_ms),
+                                        r.priority, st.arrival[r.uid]))
             st.queue.remove(victim)
             self._terminal(
                 st, victim, STATUS_SHED,
@@ -965,12 +1126,16 @@ class ServeEngine:
             st.spec_mask = jnp.zeros((self.slots,), jnp.bool_)
 
     # ------------------------------------------------------- fault plumbing
-    def _apply_round_faults(self, st: "_SchedState"):
+    def _apply_round_faults(self, st: "_SchedState", poison: bool = True):
         """Injections that land at round boundaries: cancels, forced
         deadline expiries, and page corruption (NaN-poisoning a live
         physical page — the corruption then surfaces as non-finite logits
         in whichever slot reads it, driving the same quarantine real
-        corruption would)."""
+        corruption would).  The cancel/expiry halves only build uid sets
+        — commit-invariant, safe in the overlap gap; page poison reads
+        the manager's owned set, which a commit changes via release, so
+        the pipelined round defers it (``poison=False``) to
+        :meth:`_apply_poison_faults` after the commit barrier."""
         fs = st.faults
         if fs is None:
             return
@@ -978,6 +1143,15 @@ class ServeEngine:
             self._cancel_uids.add(uid)
         for uid in fs.deadline_expiries_at(st.rnd):
             st.forced_expired.add(uid)
+        if poison:
+            self._apply_poison_faults(st)
+
+    def _apply_poison_faults(self, st: "_SchedState"):
+        """Page-corruption injections for this round (the commit-
+        dependent half of :meth:`_apply_round_faults`)."""
+        fs = st.faults
+        if fs is None:
+            return
         for f in fs.corruptions_at(st.rnd):
             if st.mgr is None or st.pool is None:
                 continue
@@ -1004,23 +1178,31 @@ class ServeEngine:
             return "ttft_deadline"
         return None
 
-    def _expire_and_cancel(self, st: "_SchedState"):
+    def _expire_and_cancel(self, st: "_SchedState", scope: str = "all"):
         """Terminal-ize cancelled and deadline-expired requests, queued
-        and live alike; a live victim's slot frees immediately."""
+        and live alike; a live victim's slot frees immediately.  The
+        pipelined round splits the sweep: ``scope="queued"`` (the
+        waiting queue — commit-invariant, runs in the overlap gap) and
+        ``scope="held"`` (live + mid-prefill slots — a commit can free
+        or fail them, so this half runs after the commit barrier)."""
         if not (self._cancel_uids or st.forced_expired or st.has_deadlines):
             return
         now_ms = (time.perf_counter() - st.t0) * 1e3
-        keep: deque = deque()
-        while st.queue:
-            req = st.queue.popleft()
-            why = self._expired(st, req, now_ms)
-            if req.uid in self._cancel_uids:
-                self._terminal(st, req, STATUS_CANCELLED, reason="cancelled")
-            elif why is not None:
-                self._terminal(st, req, STATUS_TIMEOUT, reason=why)
-            else:
-                keep.append(req)
-        st.queue = keep
+        if scope in ("all", "queued"):
+            keep: deque = deque()
+            while st.queue:
+                req = st.queue.popleft()
+                why = self._expired(st, req, now_ms)
+                if req.uid in self._cancel_uids:
+                    self._terminal(st, req, STATUS_CANCELLED,
+                                   reason="cancelled")
+                elif why is not None:
+                    self._terminal(st, req, STATUS_TIMEOUT, reason=why)
+                else:
+                    keep.append(req)
+            st.queue = keep
+        if scope == "queued":
+            return
         for slot in list(st.live):
             req = st.live[slot]
             why = self._expired(st, req, now_ms)
@@ -1134,6 +1316,10 @@ class ServeEngine:
         everything still in flight FAILED, and leave last_stats /
         last_pool_stats consistent (the allocator must audit clean — the
         regression tests assert it)."""
+        # discard, don't commit: the exception may be a device fault and
+        # the fetch could raise again — the session is over either way
+        st.pending = None
+        st.pending_swaps.clear()
         for slot in list(st.live):
             self._terminal(st, st.live[slot], STATUS_FAILED, slot=slot,
                            reason=f"aborted: {type(exc).__name__}: {exc}")
@@ -1152,11 +1338,17 @@ class ServeEngine:
 
     # --------------------------------------------------------------- steps
     def _timed_step(self, st: "_SchedState"):
-        """One decode step under the watchdog: injected kernel faults and
-        straggler stalls land here, and any step whose wall time blows
-        past ``straggler_factor`` x the recent median is recorded in
-        ``last_stats['stragglers']`` (the trainer's watchdog ported to
-        the serve loop)."""
+        """One decode step under the watchdog, dispatch and commit
+        back-to-back — the serial path.  The pipelined driver calls the
+        same two halves with a round of host work in between."""
+        pending = self._timed_dispatch(st)
+        self._timed_commit(st, pending)
+
+    def _timed_dispatch(self, st: "_SchedState") -> PendingRound:
+        """Issue one decode step: injected kernel faults and straggler
+        stalls land here (keyed to the dispatching round, exactly like
+        the serial path).  Returns the in-flight round; the watchdog
+        clock starts now and stops at commit."""
         fs = st.faults
         sleep = 0.0
         if fs is not None:
@@ -1166,25 +1358,42 @@ class ServeEngine:
                     f"injected kernel-backend failure at round {st.rnd}",
                     fatal=f.fatal)
             sleep = fs.straggler_sleep(st.rnd)
-        live_before = len(st.live)
         t_start = time.perf_counter()
         if sleep:
             time.sleep(sleep)
-        self._step(st)
-        dt = time.perf_counter() - t_start
+        pending = (self._dispatch_spec(st) if self.spec_k > 1
+                   else self._dispatch_step(st))
+        pending.t_start = t_start
+        pending.dispatch_s = time.perf_counter() - t_start
+        pending.live_before = len(pending.live)
+        st.last_dispatch_s = pending.dispatch_s
+        return pending
+
+    def _timed_commit(self, st: "_SchedState", pending: PendingRound):
+        """Fetch + account one in-flight step.  Any step whose
+        dispatch-to-commit wall time blows past ``straggler_factor`` x
+        the recent median is recorded in ``last_stats['stragglers']``
+        (the trainer's watchdog ported to the serve loop)."""
+        t_c = time.perf_counter()
+        self._commit_step(st, pending)
+        t_end = time.perf_counter()
+        st.last_commit_s = t_end - t_c
+        dt = t_end - pending.t_start
         window = st.durations[-self.straggler_window:]
         if len(window) >= 5:
             med = statistics.median(window)
             if dt > self.straggler_factor * med:
                 st.stragglers.append({
                     "step": st.step_no, "duration_s": dt, "median_s": med,
-                    "live_slots": live_before})
+                    "live_slots": pending.live_before})
         st.durations.append(dt)
         st.step_no += 1
 
-    def _step(self, st: "_SchedState"):
-        if self.spec_k > 1:
-            return self._spec_step_run(st)
+    def _dispatch_step(self, st: "_SchedState") -> PendingRound:
+        """Launch one non-speculative decode step; every branch ends
+        with the same device-side ``(tok, done, bad)`` triple and no
+        host transfer — the single fetch site is :meth:`_commit_step`
+        (the non-fused fallback used to fetch the tuple piecewise)."""
         needed = max(st.slot_pos[s] for s in st.live) + 1
         attend = self._attend_len(needed)
         nan_mask = self._nan_mask(st)
@@ -1195,30 +1404,58 @@ class ServeEngine:
              bad) = self._paged_step(
                 self.params, st.pool, st.bt_dev, st.tok, st.pos,
                 st.remaining, st.uids, nan_mask, attend)
-            nxt_h, done_h, bad_h = jax.device_get((st.tok, done, bad))
         elif self.fused:
             (st.cache, st.tok, st.pos, st.remaining, done,
              bad) = self._fused_step(
                 self.params, st.cache, st.tok, st.pos, st.remaining,
                 st.uids, nan_mask, attend)
-            # the one host transfer per token: slot-count ints + bools
-            nxt_h, done_h, bad_h = jax.device_get((st.tok, done, bad))
         else:
             logits, st.cache = self.decode_step(st.cache, st.tok, st.pos)
             logits = jnp.where(nan_mask[:, None],
                                jnp.asarray(jnp.nan, logits.dtype), logits)
-            bad_h = np.asarray(~jnp.all(jnp.isfinite(logits), axis=-1))
+            bad = ~jnp.all(jnp.isfinite(logits), axis=-1)
             nxt = self._sample_at(logits, st.pos + 1, st.uids)
             st.pos = st.pos + 1
             st.remaining = st.remaining - 1
             st.tok = nxt
-            nxt_h = np.asarray(nxt)
-            rem_h = np.asarray(st.remaining)
-            pos_h = np.asarray(st.pos)
-            done_h = (rem_h <= 0) | (pos_h >= self.max_seq - 1)
+            done = (st.remaining <= 0) | (st.pos >= self.max_seq - 1)
+        return PendingRound(arrays=(st.tok, done, bad), live=dict(st.live))
+
+    def _dispatch_spec(self, st: "_SchedState") -> PendingRound:
+        """Speculative twin of :meth:`_dispatch_step`: one dispatch
+        proposes, verifies, and scores a 1..spec_k token window per live
+        slot; the committed-prefix accounting and page retraction happen
+        at commit."""
+        t_w = self.spec_k
+        needed = max(st.slot_pos[s] for s in st.live) + t_w
+        attend = self._attend_len(needed)
+        if st.mgr.dirty:
+            st.bt_dev = st.mgr.device_tables()
+        (st.pool, st.draft_cache, targets, commit, st.tok, st.pos,
+         st.remaining, done, bad) = self._spec_step(
+            self.params, self.draft_params, st.pool, st.draft_cache,
+            st.bt_dev, st.tok, st.pos, st.remaining, st.uids, st.spec_mask,
+            self._nan_mask(st), self._collapse_mask(st), attend)
+        return PendingRound(arrays=(targets, commit, done, bad),
+                            live=dict(st.live), spec=True)
+
+    def _step(self, st: "_SchedState"):
+        """Serial dispatch + commit in one call (kept for direct
+        callers; the round drivers go through the timed halves)."""
+        pending = (self._dispatch_spec(st) if self.spec_k > 1
+                   else self._dispatch_step(st))
+        self._commit_step(st, pending)
+
+    def _commit_step(self, st: "_SchedState", pending: PendingRound):
+        """The one host transfer per step — slot-count ints + flags (a
+        candidate window per slot when speculative) — then per-slot
+        token/terminal accounting over the slots that were live at
+        dispatch."""
+        if pending.spec:
+            return self._commit_spec(st, pending)
+        nxt_h, done_h, bad_h = jax.device_get(pending.arrays)
         now = time.perf_counter() - st.t0
-        for slot in list(st.live):
-            req = st.live[slot]
+        for slot, req in list(pending.live.items()):
             if bool(bad_h[slot]):
                 # NaN quarantine: fail the offending request only — no
                 # token appended, the rest of the batch commits normally
@@ -1231,27 +1468,13 @@ class ServeEngine:
             if bool(done_h[slot]):
                 self._finish(st, slot, now)
 
-    def _spec_step_run(self, st: "_SchedState"):
-        """Speculative twin of the paged branch of :meth:`_step`: one
-        dispatch proposes, verifies, and commits a 1..spec_k token window
-        per live slot.  Host work per step: append the committed prefix,
-        then retract pages holding only rejected rows (table edit)."""
-        t_w = self.spec_k
-        needed = max(st.slot_pos[s] for s in st.live) + t_w
-        attend = self._attend_len(needed)
-        if st.mgr.dirty:
-            st.bt_dev = st.mgr.device_tables()
-        (st.pool, st.draft_cache, targets, commit, st.tok, st.pos,
-         st.remaining, done, bad) = self._spec_step(
-            self.params, self.draft_params, st.pool, st.draft_cache,
-            st.bt_dev, st.tok, st.pos, st.remaining, st.uids, st.spec_mask,
-            self._nan_mask(st), self._collapse_mask(st), attend)
-        # the one host transfer per window: candidates + counts + flags
-        targets_h, commit_h, done_h, bad_h = jax.device_get(
-            (targets, commit, done, bad))
+    def _commit_spec(self, st: "_SchedState", pending: PendingRound):
+        """Commit half of a speculative window: append the committed
+        prefix, then retract pages holding only rejected rows (table
+        edit)."""
+        targets_h, commit_h, done_h, bad_h = jax.device_get(pending.arrays)
         now = time.perf_counter() - st.t0
-        for slot in list(st.live):
-            req = st.live[slot]
+        for slot, req in list(pending.live.items()):
             if bool(bad_h[slot]):
                 self._terminal(st, req, STATUS_FAILED, slot=slot,
                                reason="nan-logits")
@@ -1763,31 +1986,55 @@ class ServeEngine:
                     break
                 self._preempt(st, self._preempt_victim(st))
 
+    def _slack_ms(self, st: "_SchedState", req: Request,
+                  now_ms: float) -> float:
+        """Remaining deadline slack in milliseconds (+inf for a request
+        carrying no deadline): the minimum over its set deadlines,
+        measured from the request's own enqueue time exactly like
+        :meth:`_expired`."""
+        dls = []
+        age_ms = now_ms - st.stats[req.uid]["enqueued_s"] * 1e3
+        if req.deadline_ms is not None:
+            dls.append(req.deadline_ms - age_ms)
+        if (req.ttft_deadline_ms is not None
+                and "first_token_s" not in st.stats[req.uid]):
+            dls.append(req.ttft_deadline_ms - age_ms)
+        return min(dls) if dls else float("inf")
+
     def _preempt_victim(self, st: "_SchedState") -> int:
-        """Newest of the least-important class, live or mid-chunked-
-        prefill alike (an in-flight chunked prompt holds its whole page
-        span — reclaiming it can unblock several decode slots)."""
+        """Most-slack first (deadline-aware: a request with no deadline,
+        or the most time to spare, yields its slot before one about to
+        miss), then the existing rule — newest of the least-important
+        class, live or mid-chunked-prefill alike (an in-flight chunked
+        prompt holds its whole page span — reclaiming it can unblock
+        several decode slots).  Without deadlines in play every slack is
+        +inf and the ordering reduces to the old rule bit-for-bit."""
+        now_ms = (time.perf_counter() - st.t0) * 1e3
+
         def key(slot):
             req = (st.live[slot] if slot in st.live
                    else st.prefilling[slot].req)
-            return (req.priority, st.admit_seq[slot])
+            return (self._slack_ms(st, req, now_ms), req.priority,
+                    st.admit_seq[slot])
         return max([*st.live, *st.prefilling], key=key)
 
     def _swap_wins(self, st: "_SchedState") -> bool:
         """Should this preemption take the swap tier?  Both resume costs
         are linear in the victim's resident tokens, so the policy is a
         static per-configuration comparison: host-transfer seconds per
-        token (pool bytes per token over the assumed link bandwidth)
-        against recompute seconds per token (~2 * params FLOPs over the
-        assumed decode throughput)."""
+        token (pool bytes per token over the link bandwidth) against
+        recompute seconds per token (~2 * params FLOPs over the decode
+        throughput).  The figures come from ``self.cost_model`` —
+        defaults, an explicit model, or a construction-time
+        microbenchmark under ``preempt_calibrate=True``."""
         if self.preempt == "requeue":
             return False
         if self.preempt == "swap":
             return True
         bytes_per_token = sum(leaf.nbytes for leaf in st.pool.values()) / (
             st.pool["k_pages"].shape[1] * self.page_size)
-        return (bytes_per_token / _SWAP_GBPS
-                < 2.0 * self._n_params / _RECOMPUTE_FLOPS_S)
+        return (bytes_per_token / self.cost_model.swap_gbps
+                < 2.0 * self._n_params / self.cost_model.decode_flops_s)
 
     def _preempt(self, st: "_SchedState", slot: int):
         if slot in st.prefilling:
@@ -1799,12 +2046,19 @@ class ServeEngine:
             req = st.live.pop(slot)
             swap = self._swap_wins(st)
         if swap:
-            # swap-tier resume: snapshot the slot's page contents to host
-            # (the device-to-host copy precedes the release inside
-            # swap_out, so a same-round admission cannot overwrite them),
-            # then restore into fresh pages at re-admission — no recompute
-            st.swaps[req.uid] = st.mgr.swap_out(slot, st.pool,
-                                                st.slot_pos[slot])
+            # swap-tier resume: snapshot the slot's page contents (the
+            # pages are sliced out before the release, so a same-round
+            # admission cannot overwrite the snapshot), then restore into
+            # fresh pages at re-admission — no recompute.  Pipelined, the
+            # D2H materialization is deferred to the next commit boundary
+            # (the device slice is issued now; JAX value semantics keep
+            # the data alive) so a swap victim never stalls the next
+            # dispatch; serial keeps the copy synchronous.
+            handle = st.mgr.swap_out(slot, st.pool, st.slot_pos[slot],
+                                     async_copy=self.pipeline)
+            if self.pipeline:
+                st.pending_swaps.append(handle)
+            st.swaps[req.uid] = handle
             s = st.stats[req.uid]
             s["swap_outs"] = s.get("swap_outs", 0) + 1
         else:
@@ -1890,7 +2144,11 @@ class _ChunkState:
 
 def _empty_timeseries() -> Dict[str, list]:
     return {"t_s": [], "round": [], "queue_depth": [], "live_slots": [],
-            "utilization": [], "free_pages": []}
+            "utilization": [], "free_pages": [],
+            # per-round pipeline phases: host time issuing the dispatch,
+            # host time blocked in the commit fetch, and host work done
+            # in the gap while a step was in flight (0.0 when serial)
+            "dispatch_s": [], "commit_s": [], "overlap_s": []}
 
 
 @dataclasses.dataclass
@@ -1946,3 +2204,11 @@ class _SchedState:
     durations: List[float] = dataclasses.field(default_factory=list)
     spec_hist: Dict[int, deque] = dataclasses.field(default_factory=dict)
     spec_disabled: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # ---- overlapped round pipeline
+    pending: Optional["PendingRound"] = None   # step in flight (dispatched,
+    #                                            not yet committed)
+    pending_swaps: List[SwapHandle] = dataclasses.field(
+        default_factory=list)  # async swap-outs awaiting materialization
+    last_dispatch_s: float = 0.0   # this round's phase timings
+    last_commit_s: float = 0.0     # (reset at every round tick)
+    last_overlap_s: float = 0.0

@@ -641,7 +641,7 @@ class PagedCacheManager:
 
     # ----------------------------------------------------- host-swap tier
     def swap_out(self, slot: int, pool: Dict[str, jnp.ndarray],
-                 n_tokens: int) -> "SwapHandle":
+                 n_tokens: int, async_copy: bool = False) -> "SwapHandle":
         """Page a slot out to host buffers: copy every mapped page of the
         slot (values *and* scale metadata) device-to-host, then release
         the slot's references — the pages return to the pool for other
@@ -652,9 +652,19 @@ class PagedCacheManager:
         pages being copied.  Shared pages are snapshotted like private
         ones — a swap-in restores the data into fresh *private* pages, so
         a resumed request never re-enters the sharing graph (correct, at
-        the cost of de-duplication until its prefix is re-published)."""
+        the cost of de-duplication until its prefix is re-published).
+
+        ``async_copy=True`` issues the page *slice* on device and skips
+        the blocking D2H transfer: JAX value semantics pin the sliced
+        bytes even though the pages are released (and rewritten)
+        immediately after, so the handle is already restore-safe — the
+        caller materializes it to host arrays at its next convenient
+        barrier via :meth:`SwapHandle.materialize` (the pipelined
+        engine's commit boundary)."""
         blocks = [int(p) for p in self.tables[slot] if p != TRASH_PAGE]
-        data = swap_out_pages(pool, np.asarray(blocks, np.int32))
+        idx = np.asarray(blocks, np.int32)
+        data = (swap_out_pages_async(pool, idx) if async_copy
+                else swap_out_pages(pool, idx))
         handle = SwapHandle(n_blocks=len(blocks), n_tokens=n_tokens,
                             data=data, page_size=self.page_size,
                             kv_dtype=self.kv_dtype)
@@ -931,6 +941,18 @@ class SwapHandle:
     def nbytes(self) -> int:
         return sum(a.nbytes for a in self.data.values())
 
+    def materialize(self) -> "SwapHandle":
+        """Force an asynchronously-snapshotted handle down to host
+        arrays (the D2H transfer deferred by ``swap_out(...,
+        async_copy=True)``).  Idempotent, mutates in place, returns self
+        — a handle must be materialized before it crosses a process or
+        serialization boundary, and the engine does so at every commit
+        barrier."""
+        for name, leaf in self.data.items():
+            if not isinstance(leaf, np.ndarray):
+                self.data[name] = np.asarray(jax.device_get(leaf))
+        return self
+
 
 def swap_out_pages(pool: Dict[str, jnp.ndarray],
                    page_idx: np.ndarray) -> Dict[str, np.ndarray]:
@@ -943,6 +965,18 @@ def swap_out_pages(pool: Dict[str, jnp.ndarray],
     idx = np.asarray(page_idx, np.int32)
     return {name: np.asarray(jax.device_get(leaf[:, idx]))
             for name, leaf in pool.items()}
+
+
+def swap_out_pages_async(pool: Dict[str, jnp.ndarray],
+                         page_idx: np.ndarray) -> Dict[str, jnp.ndarray]:
+    """Asynchronous twin of :func:`swap_out_pages`: slice the pages out
+    *on device* and return without waiting for any transfer.  The slice
+    is a fresh device value — releasing (and overwriting) the source
+    pages afterwards cannot corrupt it — so the caller may defer the
+    actual D2H copy (:meth:`SwapHandle.materialize`) past the next
+    decode dispatch instead of stalling on it here."""
+    idx = jnp.asarray(page_idx, jnp.int32)
+    return {name: leaf[:, idx] for name, leaf in pool.items()}
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))

@@ -47,7 +47,9 @@ def percentiles(samples: List[float]) -> Dict[str, Optional[float]]:
 
 
 def summarize(stats: Dict[Any, Any], *, tbt_s: List[float],
-              wall_s: float) -> Dict[str, Any]:
+              wall_s: float,
+              timeseries: Optional[Dict[str, list]] = None
+              ) -> Dict[str, Any]:
     """One SLA summary from an engine status ledger.
 
     ``stats``: the engine's per-session ledger — int keys are requests
@@ -55,6 +57,11 @@ def summarize(stats: Dict[Any, Any], *, tbt_s: List[float],
     ``tokens``), string keys (stragglers, timeseries) are ignored.
     ``tbt_s``: raw time-between-token gap samples, seconds.
     ``wall_s``: session wall time, the goodput denominator.
+    ``timeseries``: optional per-round engine timeseries; when it
+    carries the pipeline phase columns (``dispatch_s`` / ``commit_s`` /
+    ``overlap_s``) the summary gains a ``rounds`` block with their
+    means — how much host work ran inside the dispatch, blocked on the
+    commit fetch, and was hidden under an in-flight device step.
     """
     per = {u: s for u, s in stats.items() if isinstance(u, int)}
     ttft = [s["first_token_s"] - s.get("enqueued_s", 0.0)
@@ -66,7 +73,7 @@ def summarize(stats: Dict[Any, Any], *, tbt_s: List[float],
         statuses[key] = statuses.get(key, 0) + 1
         if s.get("status") == "ok":
             ok_tokens += int(s.get("tokens", 0))
-    return {
+    out = {
         "requests": len(per),
         "statuses": statuses,
         "ttft_ms": percentiles([t * 1e3 for t in ttft]),
@@ -75,6 +82,14 @@ def summarize(stats: Dict[Any, Any], *, tbt_s: List[float],
         "goodput_tok_s": ok_tokens / max(wall_s, 1e-9),
         "wall_s": wall_s,
     }
+    if timeseries and timeseries.get("round"):
+        rounds: Dict[str, Any] = {"n": len(timeseries["round"])}
+        for col in ("dispatch_s", "commit_s", "overlap_s"):
+            vals = timeseries.get(col) or []
+            rounds[f"{col}_mean"] = (float(np.mean(vals)) if vals
+                                     else None)
+        out["rounds"] = rounds
+    return out
 
 
 def merge_ledgers(ledgers: List[Dict[Any, Any]]) -> Dict[Any, Any]:
